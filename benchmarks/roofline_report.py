@@ -1,0 +1,64 @@
+"""Render the dry-run results (dryrun_results.jsonl) into the EXPERIMENTS.md
+roofline tables.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--in dryrun_results.jsonl]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def load(path: str):
+    seen, skips = {}, {}
+    for line in open(path):
+        r = json.loads(line)
+        key = (r["arch"], r["shape"], r["mesh"])
+        if "skipped" in r:
+            skips[key] = r
+        elif "error" not in r:
+            seen[key] = r
+    return seen, skips
+
+
+def fmt_e(x: float) -> str:
+    return f"{x:.2e}"
+
+
+def render(seen: dict, skips: dict, mesh: str) -> str:
+    out = []
+    out.append(
+        "| arch | shape | t_compute (s) | t_memory (s) | t_collective (s) | "
+        "bottleneck | MODEL_FLOPS | useful/HLO | roofline frac | HBM GB/dev |"
+    )
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
+    keys = sorted(set(list(seen) + list(skips)))
+    for arch, shape, m in keys:
+        if m != mesh:
+            continue
+        if (arch, shape, m) in skips:
+            r = skips[(arch, shape, m)]
+            out.append(f"| {arch} | {shape} | — | — | — | SKIPPED | — | — | — | — |")
+            continue
+        r = seen[(arch, shape, m)]
+        out.append(
+            f"| {arch} | {shape} | {fmt_e(r['t_compute_s'])} | "
+            f"{fmt_e(r['t_memory_s'])} | {fmt_e(r['t_collective_s'])} | "
+            f"**{r['bottleneck']}** | {fmt_e(r['model_flops'])} | "
+            f"{r['useful_flop_ratio']:.3f} | {r['roofline_fraction']:.3f} | "
+            f"{r['hbm_per_dev_GB']:.2f} |"
+        )
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default="dryrun_results.jsonl")
+    ap.add_argument("--mesh", default="single_pod_16x16")
+    args = ap.parse_args()
+    seen, skips = load(args.inp)
+    print(render(seen, skips, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,275 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+
+* ``table1_*``     — the paper's Table 1 (processing-time comparison of the
+                     proposed K-SWEEP pipeline vs the old/baseline pipeline)
+                     measured as wall-clock per query on the CPU-hosted
+                     engine, plus recall and modeled I/O bytes.
+* ``fig_k_sweep``  — sensitivity of fetched volume to k (paper §IV.C).
+* ``fig_scale``    — throughput vs corpus size (the scalability axis the
+                     paper's abstract claims).
+* ``geo_partition``— hash vs geographic (Morton) document partitioning
+                     (paper §Conclusions future work).
+* ``kernel_*``     — Pallas kernels vs jnp oracles (CPU interpret: check
+                     only; derived column reports modeled VMEM bytes/call).
+
+Usage: ``PYTHONPATH=src python -m benchmarks.run [--quick]``
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, reps=3, **kw):
+    fn(*args, **kw)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps, out
+
+
+def _row(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+# --- access-cost models --------------------------------------------------
+# 2010 disk (the paper's own regime): one seek 8 ms, 100 MB/s sequential.
+SEEK_S, DISK_BW = 8e-3, 100e6
+# TPU v5e HBM (this system's regime): streams at ~90% of 819 GB/s; random
+# small gathers at ~15% effective (transaction granularity waste).
+HBM_BW, EFF_SEQ, EFF_RAND = 819e9, 0.9, 0.15
+
+
+def _cost_models(stats: dict) -> tuple[float, float]:
+    seeks = float(np.asarray(stats["seeks"]).mean())
+    b_seq = float(np.asarray(stats["bytes_seq"]).mean())
+    b_rand = float(np.asarray(stats["bytes_random"]).mean())
+    t_disk = seeks * SEEK_S + (b_seq + b_rand) / DISK_BW
+    t_hbm = b_seq / (HBM_BW * EFF_SEQ) + b_rand / (HBM_BW * EFF_RAND)
+    return t_disk, t_hbm
+
+
+def bench_table1(quick: bool) -> None:
+    """Paper Table 1: old (text-first) vs proposed (k-sweep) processing.
+
+    Three time columns per algorithm:
+      us_per_call        — measured wall clock on the CPU-hosted engine
+      t_disk2010_ms      — the paper's own cost regime (seek + 100MB/s),
+                           applied to the MEASURED per-query operation counts
+      t_hbm_v5e_us       — TPU-HBM regime (stream vs gather efficiency)
+    The paper's 1.91× (0.65 s → 0.34 s) claim is checked in the disk model.
+    """
+    from repro.core import GeoSearchEngine, QueryBudgets
+    from repro.corpus import make_corpus, make_query_trace
+
+    n_docs = 4000 if quick else 20000
+    corpus = make_corpus(n_docs, 1500, seed=0)
+    # full-recall budgets: Table 1 compares I/O models at equal quality;
+    # k_sweeps×sweep_budget covers the store, max_candidates the longest list
+    budgets = QueryBudgets(
+        max_candidates=n_docs, max_tiles=2048, k_sweeps=16,
+        sweep_budget=max(n_docs // 4, 512), top_k=10,
+    )
+    eng = GeoSearchEngine.build(
+        corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
+        pagerank=corpus.pagerank, grid=64, budgets=budgets,
+    )
+    B = 64
+    trace = make_query_trace(corpus, n_queries=B, seed=1)
+    disk, hbm, wall = {}, {}, {}
+    for algo in ["text_first", "geo_first", "k_sweep"]:
+        dt, res = _time(lambda a=algo: eng.query(trace, a))
+        rec = eng.recall_at_k(trace, algo)
+        t_disk, t_hbm = _cost_models(res.stats)
+        disk[algo], hbm[algo], wall[algo] = t_disk, t_hbm, dt / B
+        _row(
+            f"table1_{algo}", dt / B * 1e6,
+            f"recall@10={rec:.3f};t_disk2010_ms={t_disk*1e3:.1f};"
+            f"t_hbm_v5e_us={t_hbm*1e6:.2f};n_docs={n_docs}",
+        )
+    _row(
+        "table1_speedup_ksweep_vs_textfirst", 0.0,
+        f"disk2010={disk['text_first']/disk['k_sweep']:.2f}x;"
+        f"hbm_v5e={hbm['text_first']/hbm['k_sweep']:.2f}x;"
+        f"wall_cpu={wall['text_first']/wall['k_sweep']:.2f}x;"
+        f"paper=1.91x (0.65s->0.34s)",
+    )
+
+
+def bench_k_sensitivity(quick: bool) -> None:
+    from repro.core import GeoSearchEngine, QueryBudgets
+    from repro.corpus import make_corpus, make_query_trace
+
+    n_docs = 4000 if quick else 12000
+    corpus = make_corpus(n_docs, 800, seed=2)
+    for k in [1, 2, 4, 8, 16]:
+        budgets = QueryBudgets(
+            max_candidates=2048, max_tiles=2048, k_sweeps=k,
+            sweep_budget=max(n_docs // 3, 256), top_k=10,
+        )
+        eng = GeoSearchEngine.build(
+            corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
+            pagerank=corpus.pagerank, grid=64, budgets=budgets,
+        )
+        trace = make_query_trace(corpus, n_queries=32, seed=3)
+        dt, res = _time(lambda: eng.query(trace, "k_sweep"))
+        slack = float(np.asarray(res.stats["sweep_slack"]).mean())
+        rec = eng.recall_at_k(trace, "k_sweep")
+        _row(f"fig_k_sweep_k{k}", dt / 32 * 1e6,
+             f"recall={rec:.3f};mean_slack_toeprints={slack:,.0f}")
+
+
+def bench_scale(quick: bool) -> None:
+    from repro.core import GeoSearchEngine, QueryBudgets
+    from repro.corpus import make_corpus, make_query_trace
+
+    sizes = [1000, 4000] if quick else [1000, 4000, 16000, 64000]
+    for n in sizes:
+        corpus = make_corpus(n, 1000, seed=4)
+        budgets = QueryBudgets(
+            max_candidates=2048, max_tiles=256, k_sweeps=8,
+            sweep_budget=max(n // 8, 256), top_k=10,
+        )
+        eng = GeoSearchEngine.build(
+            corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
+            pagerank=corpus.pagerank, grid=64, budgets=budgets,
+        )
+        trace = make_query_trace(corpus, n_queries=32, seed=5)
+        dt, _ = _time(lambda: eng.query(trace, "k_sweep"))
+        _row(f"fig_scale_n{n}", dt / 32 * 1e6, f"docs={n}")
+
+
+def bench_geo_partition(quick: bool) -> None:
+    """Geographic vs hash partitioning: per-shard structure tightness."""
+    from repro.core.distributed import shard_corpus_np
+    from repro.corpus import make_corpus
+
+    n_docs, S = (2048, 4) if quick else (8192, 8)
+    corpus = make_corpus(n_docs, 500, seed=6)
+    rng = np.random.default_rng(0)
+    # city-sized probe queries
+    probes = []
+    for _ in range(100):
+        c = corpus.cities[rng.integers(0, len(corpus.cities))]
+        w = float(c[2])
+        probes.append([c[0] - w, c[1] - w, c[0] + w, c[1] + w])
+    probes = np.array(probes, np.float32)
+    for part in ["hash", "geo"]:
+        sh = shard_corpus_np(
+            corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.pagerank,
+            corpus.n_terms, n_shards=S, partition=part, grid=32,
+        )
+        # per-shard toe-print MBR -> how many shards must a query visit?
+        rects = np.asarray(sh.tp_rects)  # [S, T, 4]
+        amps = np.asarray(sh.tp_amps)
+        fanouts = []
+        mbrs = []
+        for si in range(S):
+            v = amps[si] > 0
+            r = rects[si][v]
+            mbrs.append([r[:, 0].min(), r[:, 1].min(), r[:, 2].max(), r[:, 3].max()])
+        mbrs = np.array(mbrs)
+        for q in probes:
+            inter = (
+                (np.maximum(mbrs[:, 0], q[0]) < np.minimum(mbrs[:, 2], q[2]))
+                & (np.maximum(mbrs[:, 1], q[1]) < np.minimum(mbrs[:, 3], q[3]))
+            )
+            fanouts.append(inter.sum())
+        occ = np.asarray(sh.tile_starts) != np.int32(2**31 - 1)
+        _row(f"geo_partition_{part}", 0.0,
+             f"mean_query_shard_fanout={np.mean(fanouts):.2f}_of_{S};"
+             f"tile_occupancy={occ.any(axis=2).mean():.3f}")
+
+
+def bench_kernels(quick: bool) -> None:
+    from repro.kernels.geo_score.ops import geo_score_toeprints
+    from repro.kernels.geo_score.ref import geo_score_toeprints_ref
+    from repro.kernels.bitmap_filter.ops import bitmap_and_popcount
+    from repro.kernels.bitmap_filter.ref import bitmap_and_popcount_ref
+
+    rng = np.random.default_rng(0)
+    T = 4096 if quick else 65536
+    lo = rng.uniform(0, 0.9, (T, 2)).astype(np.float32)
+    rects = jnp.asarray(np.concatenate([lo, lo + 0.05], axis=1))
+    amps = jnp.asarray(rng.uniform(0, 1, T).astype(np.float32))
+    qr = jnp.asarray(np.array([[0.2, 0.2, 0.6, 0.6], [0.5, 0.5, 0.9, 0.9]], np.float32))
+    qa = jnp.ones((2,))
+    got = geo_score_toeprints(rects, amps, qr, qa)
+    want = geo_score_toeprints_ref(rects, amps, qr, qa)
+    err = float(jnp.abs(got - want).max())
+    dt_ref, _ = _time(jax.jit(geo_score_toeprints_ref), rects, amps, qr, qa)
+    _row("kernel_geo_score", dt_ref * 1e6,
+         f"max_err_vs_ref={err:.2e};T={T};vmem_bytes_per_block={8*128*6*4}")
+
+    # fused sweep fetch+score kernel vs its oracle
+    from repro.kernels.sweep_score.ops import sweep_score
+    from repro.kernels.sweep_score.ref import sweep_score_ref
+
+    ss = jnp.asarray(np.sort(rng.integers(0, T - 2048, 8)).astype(np.int32))
+    ee = jnp.asarray(np.minimum(np.asarray(ss) + 1500, T).astype(np.int32))
+    fs, fv = sweep_score(rects, amps, ss, ee, qr, qa, 2048)
+    ws, wv = sweep_score_ref(rects, amps, ss, ee, qr, qa, 2048)
+    errf = float(jnp.abs(fs - ws).max())
+    dt_ref, _ = _time(jax.jit(lambda *a: sweep_score_ref(*a, 2048)), rects, amps, ss, ee, qr, qa)
+    _row("kernel_sweep_score_fused", dt_ref * 1e6,
+         f"max_err_vs_ref={errf:.2e};k=8;budget=2048;fused_fetch_and_score=1")
+
+    W = 8192 if quick else 262144
+    bm = jnp.asarray(rng.integers(0, 2**32, (4, W), dtype=np.uint32))
+    ga, gc = bitmap_and_popcount(bm)
+    wa, wc = bitmap_and_popcount_ref(bm)
+    ok = bool((ga == wa).all() and (gc == wc).all())
+    dt_ref, _ = _time(jax.jit(bitmap_and_popcount_ref), bm)
+    _row("kernel_bitmap_filter", dt_ref * 1e6,
+         f"exact_match={ok};W={W};vmem_bytes_per_block={8*128*(4+2)*4}")
+
+
+def bench_distributed(quick: bool) -> None:
+    """Single-process multi-device serve (requires >1 device; noted on 1)."""
+    if len(jax.devices()) < 2:
+        _row("distributed_serve", 0.0,
+             "skipped=single_device_container;see tests/test_distributed.py")
+        return
+    from repro.core import QueryBudgets
+    from repro.core.distributed import make_serve_fn, shard_corpus_np
+    from repro.corpus import make_corpus, make_query_trace
+
+    corpus = make_corpus(2048, 500, seed=7)
+    budgets = QueryBudgets(max_candidates=512, max_tiles=64, k_sweeps=4,
+                           sweep_budget=256, top_k=10)
+    n = len(jax.devices())
+    mesh = jax.make_mesh((n, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    sharded = shard_corpus_np(corpus.doc_terms, corpus.doc_rects, corpus.doc_amps,
+                              corpus.pagerank, corpus.n_terms, n, "geo", grid=32)
+    serve = make_serve_fn(mesh, budgets, doc_axes=("data",), grid=32,
+                          n_terms=corpus.n_terms)
+    trace = make_query_trace(corpus, n_queries=32, seed=8)
+    with mesh:
+        dt, _ = _time(lambda: serve(sharded, trace))
+    _row("distributed_serve", dt / 32 * 1e6, f"devices={n}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    bench_table1(args.quick)
+    bench_k_sensitivity(args.quick)
+    bench_scale(args.quick)
+    bench_geo_partition(args.quick)
+    bench_kernels(args.quick)
+    bench_distributed(args.quick)
+
+
+if __name__ == "__main__":
+    main()

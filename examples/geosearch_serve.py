@@ -1,0 +1,81 @@
+"""END-TO-END DRIVER (the paper is a serving paper): build a corpus, then
+serve batched geo-query traffic through all three algorithms, reporting
+QPS, latency, recall and the per-stage I/O counters the paper optimizes —
+including the paper's own Table-1 style comparison under the 2010 disk cost
+model and the TPU-HBM cost model.
+
+    PYTHONPATH=src python examples/geosearch_serve.py [--n-docs 20000]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core import GeoSearchEngine, QueryBudgets
+from repro.corpus import make_corpus, make_query_trace
+
+SEEK_S, DISK_BW = 8e-3, 100e6
+HBM_BW, EFF_SEQ, EFF_RAND = 819e9, 0.9, 0.15
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-docs", type=int, default=20000)
+    ap.add_argument("--n-queries", type=int, default=512)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--use-pallas", action="store_true")
+    args = ap.parse_args()
+
+    print(f"[build] corpus: {args.n_docs} docs …")
+    t0 = time.perf_counter()
+    corpus = make_corpus(args.n_docs, 2000, seed=0)
+    budgets = QueryBudgets(
+        max_candidates=4096, max_tiles=2048, k_sweeps=8,
+        sweep_budget=max(args.n_docs // 3, 512), top_k=10,
+    )
+    eng = GeoSearchEngine.build(
+        corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
+        pagerank=corpus.pagerank, grid=64, budgets=budgets,
+    )
+    print(f"[build] done in {time.perf_counter()-t0:.1f}s "
+          f"({eng.index.spatial.n_toeprints} toe prints, "
+          f"{eng.index.text.n_postings} postings)")
+
+    trace = make_query_trace(corpus, n_queries=args.n_queries, seed=1)
+    kw = {}
+    if args.use_pallas:
+        from repro.kernels.geo_score.ops import geo_score_toeprints
+        kw["tp_scorer"] = geo_score_toeprints
+
+    print(f"\n{'algorithm':12s} {'QPS':>8s} {'ms/q':>7s} {'recall':>7s} "
+          f"{'t_disk2010':>11s} {'t_hbm_v5e':>10s}")
+    for algo in ["text_first", "geo_first", "k_sweep"]:
+        akw = kw if algo == "k_sweep" else {}
+        nb = args.n_queries // args.batch
+        sub0 = jax.tree.map(lambda x: x[: args.batch], trace)
+        eng.query(sub0, algo, **akw)  # warm/compile
+        t0 = time.perf_counter()
+        seeks = b_seq = b_rand = 0.0
+        for i in range(nb):
+            sub = jax.tree.map(
+                lambda x: x[i * args.batch : (i + 1) * args.batch], trace
+            )
+            res = eng.query(sub, algo, **akw)
+            seeks += float(np.asarray(res.stats["seeks"]).sum())
+            b_seq += float(np.asarray(res.stats["bytes_seq"]).sum())
+            b_rand += float(np.asarray(res.stats["bytes_random"]).sum())
+        jax.block_until_ready(res.scores)
+        dt = time.perf_counter() - t0
+        n = nb * args.batch
+        t_disk = (seeks * SEEK_S + (b_seq + b_rand) / DISK_BW) / n
+        t_hbm = (b_seq / (HBM_BW * EFF_SEQ) + b_rand / (HBM_BW * EFF_RAND)) / n
+        rec = eng.recall_at_k(sub0, algo)
+        print(f"{algo:12s} {n/dt:8.1f} {dt/n*1e3:7.3f} {rec:7.3f} "
+              f"{t_disk*1e3:9.1f}ms {t_hbm*1e6:8.2f}us")
+
+    print("\npaper Table 1 reference: old 0.65 s -> proposed 0.34 s (1.91x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Geo-constrained two-tower retrieval — the paper's ranking function with a
+learned text score (DESIGN.md §6): train a small two-tower model with
+in-batch sampled softmax, then score a candidate corpus with
+dot-product + geo_score (Pallas kernel) and compare plain vs
+geo-constrained top-k.
+
+    PYTHONPATH=src python examples/recsys_retrieval.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.recsys import two_tower_batch
+from repro.models.recsys import (
+    TwoTowerConfig, two_tower_loss, two_tower_score_candidates,
+)
+from repro.train.loop import make_train_step
+from repro.train.optimizer import OptimizerConfig, init_opt_state
+
+
+def main():
+    cfg = TwoTowerConfig(
+        name="two-tower-mini", embed_dim=32, tower_dims=(128, 64),
+        n_users=5000, n_items=2000, n_user_fields=2, n_item_fields=2,
+        field_vocab=200, hist_len=8, feat_dim=16,
+    )
+    params = cfg.init(jax.random.key(0))
+    opt = OptimizerConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    step = make_train_step(lambda p, b: two_tower_loss(cfg, p, b), opt)
+    state = init_opt_state(opt, params)
+    print("training two-tower with in-batch sampled softmax …")
+    for s in range(100):
+        batch = two_tower_batch(64, cfg.n_users, cfg.n_items, cfg.n_user_fields,
+                                cfg.n_item_fields, cfg.field_vocab, cfg.hist_len,
+                                seed=0, step=s)
+        params, state, m = step(params, state, batch)
+        if s % 25 == 0:
+            print(f"  step {s:3d} loss {float(m['loss']):.4f}")
+
+    # candidate corpus with geographic footprints
+    rng = np.random.default_rng(1)
+    Nc = 1024
+    cand_ids = jnp.arange(Nc, dtype=jnp.int32) % cfg.n_items
+    cand_fields = jnp.asarray(rng.integers(0, cfg.field_vocab, (Nc, 2)), jnp.int32)
+    lo = rng.uniform(0, 0.9, (Nc, 1, 2)).astype(np.float32)
+    cand_rects = jnp.asarray(np.concatenate([lo, lo + 0.08], axis=2))
+    cand_amps = jnp.ones((Nc, 1))
+
+    user = two_tower_batch(1, cfg.n_users, cfg.n_items, cfg.n_user_fields,
+                           cfg.n_item_fields, cfg.field_vocab, cfg.hist_len,
+                           seed=9, step=0)
+    plain_s, plain_i = two_tower_score_candidates(
+        cfg, params, user, cand_ids, cand_fields, top_k=10
+    )
+    geo = {
+        "cand_rects": cand_rects, "cand_amps": cand_amps,
+        "q_rects": jnp.asarray([[0.3, 0.3, 0.5, 0.5]], dtype=jnp.float32),
+        "q_amps": jnp.ones((1,)), "weight": 5.0,
+    }
+    geo_s, geo_i = two_tower_score_candidates(
+        cfg, params, user, cand_ids, cand_fields, top_k=10, geo=geo
+    )
+    print("\nplain top-10 candidates:   ", list(np.asarray(plain_i)[0]))
+    print("geo-constrained top-10:    ", list(np.asarray(geo_i)[0]))
+    inside = [
+        int(i) for i in np.asarray(geo_i)[0]
+        if float(cand_rects[i, 0, 0]) < 0.5 and float(cand_rects[i, 0, 2]) > 0.3
+        and float(cand_rects[i, 0, 1]) < 0.5 and float(cand_rects[i, 0, 3]) > 0.3
+    ]
+    print(f"geo-constrained results overlapping query area: {len(inside)}/10")
+
+
+if __name__ == "__main__":
+    main()

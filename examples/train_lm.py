@@ -1,0 +1,54 @@
+"""Train a small LM end-to-end with checkpointing + fault injection.
+
+Reduced smollm-family config by default (single CPU container); the same
+code path drives the full configs on a real mesh via launch/train.py.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.lm import LMDataConfig, lm_batch
+from repro.models.transformer import TransformerConfig, loss_fn
+from repro.train.loop import LoopConfig, make_train_step, run
+from repro.train.optimizer import OptimizerConfig, init_opt_state
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--simulate-failure", type=int, default=None)
+    args = ap.parse_args()
+
+    cfg = TransformerConfig(
+        name="smollm-nano", n_layers=4, d_model=128, n_heads=4, n_kv_heads=2,
+        d_ff=384, vocab=2048, attn_chunk=64, tie_embeddings=True,
+        compute_dtype=jnp.float32,
+    )
+    print(f"model: {cfg.n_params()/1e6:.2f}M params")
+    opt = OptimizerConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps)
+    dc = LMDataConfig(vocab=cfg.vocab, seq_len=args.seq_len, global_batch=args.batch)
+    step_fn = make_train_step(lambda p, b: loss_fn(cfg, p, b), opt)
+
+    def init_state():
+        p = cfg.init(jax.random.key(0))
+        return p, init_opt_state(opt, p)
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        loop = LoopConfig(
+            total_steps=args.steps, ckpt_every=50, ckpt_dir=ckpt_dir,
+            log_every=max(args.steps // 20, 1),
+            simulate_failure_at=args.simulate_failure,
+        )
+        _, _, hist = run(loop, step_fn, init_state, lambda s: lm_batch(dc, s))
+    first, last = hist[0][1], hist[-1][1]
+    print(f"\nloss {first:.3f} -> {last:.3f} ({'OK: learning' if last < first else 'WARN'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.configs.base import ArchSpec, ShapeSpec, get_arch, list_archs
+
+__all__ = ["ArchSpec", "ShapeSpec", "get_arch", "list_archs"]

@@ -1,0 +1,12 @@
+"""Import every architecture module so the registry is populated."""
+import repro.configs.granite_moe_1b_a400m  # noqa: F401
+import repro.configs.olmoe_1b_7b  # noqa: F401
+import repro.configs.smollm_135m  # noqa: F401
+import repro.configs.qwen1_5_0_5b  # noqa: F401
+import repro.configs.qwen2_5_14b  # noqa: F401
+import repro.configs.egnn  # noqa: F401
+import repro.configs.two_tower_retrieval  # noqa: F401
+import repro.configs.dcn_v2  # noqa: F401
+import repro.configs.autoint  # noqa: F401
+import repro.configs.bst  # noqa: F401
+import repro.configs.geoweb  # noqa: F401

@@ -1,0 +1,20 @@
+"""The paper's primary contribution: geographic search query processing.
+
+Modules:
+  geometry       rectangles, Morton codes, tile math
+  footprint      amplitude-weighted rect-set footprints + geo scores
+  text_index     CSR inverted index + impacts + block bitmaps
+  spatial_index  Morton toe-print store + tile-interval grid
+  ranking        combined text/geo/pagerank ranking
+  algorithms     TEXT-FIRST / GEO-FIRST / K-SWEEP batched pipelines
+  engine         GeoSearchEngine facade
+  distributed    doc-sharded serving over a device mesh
+"""
+from repro.core.engine import GeoIndex, GeoSearchEngine
+from repro.core.algorithms import QueryBatch, QueryBudgets, TopKResult, ALGORITHMS
+from repro.core.ranking import RankWeights
+
+__all__ = [
+    "GeoIndex", "GeoSearchEngine", "QueryBatch", "QueryBudgets",
+    "TopKResult", "ALGORITHMS", "RankWeights",
+]

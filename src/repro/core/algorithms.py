@@ -1,0 +1,382 @@
+"""The paper's three query-processing algorithms, batched & jit-safe.
+
+All three share the signature::
+
+    (text_index, spatial_index, pagerank, query, budgets, weights)
+        -> TopKResult(ids [B,k], scores [B,k], stats {str: [B] or scalar})
+
+`stats` counts the observable the paper optimizes — bytes moved per pipeline
+stage (disk traffic in 2010 = HBM traffic here) — so benchmarks can report
+both wall time and modeled I/O.
+
+Algorithms (paper §IV):
+
+* TEXT-FIRST  — inverted index first, then fetch footprints by docID.
+* GEO-FIRST   — spatial structure first (tile grid standing in for the
+                memory-resident R*-tree), then filter by text, then fetch.
+* K-SWEEP     — tile intervals → ≤ k coalesced sweeps → bulk contiguous
+                fetch → docID translation → text filter → precise scoring.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import footprint as fp
+from repro.core import ranking, spatial_index as sidx, text_index as tidx
+from repro.core.spatial_index import INVALID
+
+TP_BYTES = 4 * 4 + 4 + 4  # rect + amp + docid per toe print
+POSTING_BYTES = 4 + 4  # docid + impact
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class QueryBudgets:
+    """Static shape budgets (early-termination style approximations)."""
+
+    max_candidates: int = field(default=1024, metadata=dict(static=True))
+    max_tiles: int = field(default=64, metadata=dict(static=True))
+    k_sweeps: int = field(default=4, metadata=dict(static=True))
+    sweep_budget: int = field(default=2048, metadata=dict(static=True))
+    top_k: int = field(default=10, metadata=dict(static=True))
+    # geo-score early termination in K-SWEEP (paper future work; lossy —
+    # keeps only the max_candidates strongest toe prints before text probing)
+    early_termination: bool = field(default=False, metadata=dict(static=True))
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class QueryBatch:
+    """A batch of geo queries (fixed shapes).
+
+    terms:  i32[B, d]   (−1 padded)
+    rects:  f32[B, Qr, 4] query footprint rectangles (empty-rect padded)
+    amps:   f32[B, Qr]
+    """
+
+    terms: jax.Array
+    rects: jax.Array
+    amps: jax.Array
+
+    @property
+    def batch(self) -> int:
+        return self.terms.shape[0]
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class TopKResult:
+    ids: jax.Array  # i32[B, k], −1 padded
+    scores: jax.Array  # f32[B, k]
+    stats: dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _geo_score_docs(spatial, doc_ids, valid, q_rects, q_amps, geo_scorer):
+    """Gather doc-major footprints and score them against the query."""
+    safe = jnp.where(valid, doc_ids, 0)
+    rects = spatial.doc_rects[safe]  # [C, R, 4]
+    amps = jnp.where(valid[:, None], spatial.doc_amps[safe], 0.0)
+    g = geo_scorer(rects, amps, q_rects, q_amps)
+    return jnp.where(valid, g, 0.0)
+
+
+def _default_doc_scorer(rects, amps, q_rects, q_amps):
+    return fp.geo_score(rects, amps, q_rects, q_amps)
+
+
+def _sorted_run_sums(ids: jax.Array, vals: jax.Array, valid: jax.Array):
+    """Per-run totals over a sorted id array (fixed-shape segment sum).
+
+    Returns (unique_ids, run_totals, is_last_of_run & valid) aligned to the
+    input positions; positions that are not the last element of their run are
+    masked out.
+    """
+    big = jnp.int32(2**31 - 1)
+    ids_s = jnp.where(valid, ids, big)
+    order = jnp.argsort(ids_s)
+    ids_s = ids_s[order]
+    vals_s = jnp.where(valid, vals, 0.0)[order]
+    cs = jnp.cumsum(vals_s)
+    n = ids.shape[0]
+    nxt = jnp.concatenate([ids_s[1:], jnp.full((1,), -2, jnp.int32)])
+    last = (ids_s != nxt) & (ids_s != big)
+    start = jnp.searchsorted(ids_s, ids_s, side="left")
+    before = jnp.where(start > 0, cs[jnp.maximum(start - 1, 0)], 0.0)
+    totals = cs - before
+    return ids_s, totals, last
+
+
+# ---------------------------------------------------------------------------
+# TEXT-FIRST (paper §IV.A)
+# ---------------------------------------------------------------------------
+
+def text_first(
+    text: tidx.TextIndex,
+    spatial: sidx.SpatialIndex,
+    pagerank: jax.Array,
+    query: QueryBatch,
+    budgets: QueryBudgets,
+    weights: ranking.RankWeights = ranking.RankWeights(),
+    geo_scorer=_default_doc_scorer,
+) -> TopKResult:
+    R = spatial.doc_rects.shape[1]
+
+    def one(terms, q_rects, q_amps):
+        cand, valid, tscore = tidx.conjunction_candidates(
+            text, terms, budgets.max_candidates
+        )
+        g = _geo_score_docs(spatial, cand, valid, q_rects, q_amps, geo_scorer)
+        qm = fp.query_mass(q_rects, q_amps)
+        score = ranking.combine_scores(
+            weights, tscore, g, pagerank[jnp.where(valid, cand, 0)], qm
+        )
+        score = jnp.where(valid, score, -jnp.inf)
+        ids, vals = ranking.top_k(score, cand, budgets.top_k)
+        n_c = jnp.sum(valid.astype(jnp.int32))
+        n_terms_real = jnp.sum((terms >= 0).astype(jnp.int32))
+        # disk/HBM access model: candidate footprints live in the docID-
+        # sorted file; nearby candidates coalesce into one run, gaps seek
+        # (paper SIV.A "reasonable disk access policy").
+        cand_sorted = jnp.sort(jnp.where(valid, cand, jnp.int32(2**31 - 1)))
+        gap = cand_sorted[1:] - cand_sorted[:-1]
+        new_run = (gap > 64) & (cand_sorted[1:] != jnp.int32(2**31 - 1))
+        fetch_runs = jnp.sum(new_run.astype(jnp.int32)) + (n_c > 0).astype(jnp.int32)
+        stats = {
+            "candidates": n_c,
+            # footprints fetched for every textual candidate (doc-major file)
+            "bytes_spatial": n_c * R * (16 + 4),
+            "bytes_postings": n_c * POSTING_BYTES
+            + jnp.int32(budgets.max_candidates * POSTING_BYTES),
+            "fetch_runs": fetch_runs,
+            "seeks": fetch_runs + n_terms_real,  # + one seek per posting list
+            "n_probes": n_c * jnp.maximum(n_terms_real - 1, 0),
+            "bytes_seq": jnp.int32(budgets.max_candidates * POSTING_BYTES),
+            "bytes_random": n_c * R * (16 + 4)
+            + n_c * jnp.maximum(n_terms_real - 1, 0) * 32,
+        }
+        return ids, vals, stats
+
+    ids, vals, stats = jax.vmap(one)(query.terms, query.rects, query.amps)
+    return TopKResult(ids, vals, stats)
+
+
+# ---------------------------------------------------------------------------
+# GEO-FIRST (paper §IV.B)
+# ---------------------------------------------------------------------------
+
+def geo_first(
+    text: tidx.TextIndex,
+    spatial: sidx.SpatialIndex,
+    pagerank: jax.Array,
+    query: QueryBatch,
+    budgets: QueryBudgets,
+    weights: ranking.RankWeights = ranking.RankWeights(),
+    geo_scorer=_default_doc_scorer,
+) -> TopKResult:
+    R = spatial.doc_rects.shape[1]
+
+    def one(terms, q_rects, q_amps):
+        tp_ids, ok = sidx.tile_candidate_toeprints(
+            spatial, q_rects, budgets.max_tiles, budgets.max_candidates
+        )
+        # translate toe prints → doc ids (random access into the id column of
+        # the toe-print store; the MBR table of the "R*-tree" is memory
+        # resident so we charge only the id translation)
+        docs = jnp.where(ok, spatial.tp_doc_ids[tp_ids], jnp.int32(2**31 - 1))
+        # dedupe docs (multiple toe prints per doc)
+        docs_s, _, last = _sorted_run_sums(docs, jnp.zeros_like(docs, jnp.float32), ok)
+        dvalid = last
+        docs_u = jnp.where(dvalid, docs_s, 0)
+        # text filter via binary probes
+        match, tscore = tidx.text_score_of_docs(text, terms, docs_u)
+        keep = dvalid & match
+        # fetch footprints for survivors only (doc-major file)
+        g = _geo_score_docs(spatial, docs_u, keep, q_rects, q_amps, geo_scorer)
+        qm = fp.query_mass(q_rects, q_amps)
+        score = ranking.combine_scores(
+            weights, tscore, g, pagerank[jnp.where(keep, docs_u, 0)], qm
+        )
+        score = jnp.where(keep, score, -jnp.inf)
+        ids, vals = ranking.top_k(score, docs_u, budgets.top_k)
+        n_cand = jnp.sum(ok.astype(jnp.int32))
+        n_uniq = jnp.sum(dvalid.astype(jnp.int32))
+        n_keep = jnp.sum(keep.astype(jnp.int32))
+        n_terms_real = jnp.sum((terms >= 0).astype(jnp.int32))
+        stats = {
+            "candidates": n_cand,
+            "bytes_spatial": n_cand * 4  # id translation
+            + n_keep * R * (16 + 4),  # survivor footprints
+            "bytes_postings": n_uniq
+            * jnp.int32(jnp.ceil(jnp.log2(jnp.maximum(text.n_postings, 2))))
+            * POSTING_BYTES,
+            # every candidate toe print is fetched INDIVIDUALLY (R*-tree
+            # random access), every surviving footprint likewise
+            "seeks": n_cand + n_keep,
+            "n_probes": n_uniq * n_terms_real,
+            "bytes_seq": jnp.int32(0),
+            "bytes_random": n_cand * 4 + n_keep * R * (16 + 4)
+            + n_uniq * n_terms_real * 32,
+        }
+        return ids, vals, stats
+
+    ids, vals, stats = jax.vmap(one)(query.terms, query.rects, query.amps)
+    return TopKResult(ids, vals, stats)
+
+
+# ---------------------------------------------------------------------------
+# K-SWEEP (paper §IV.C — the main algorithm)
+# ---------------------------------------------------------------------------
+
+def k_sweep(
+    text: tidx.TextIndex,
+    spatial: sidx.SpatialIndex,
+    pagerank: jax.Array,
+    query: QueryBatch,
+    budgets: QueryBudgets,
+    weights: ranking.RankWeights = ranking.RankWeights(),
+    tp_scorer=None,
+    fused: bool = False,  # Pallas fused fetch+score (kernels/sweep_score)
+) -> TopKResult:
+    """K-SWEEP: (1) tile intervals → (2) ≤k sweeps → (3) bulk fetch →
+    (4) docID translation + sort → (5) text filter → (6) geo scores → top-k.
+
+    ``tp_scorer(rects [T,4], amps [T], q_rects [Q,4], q_amps [Q]) -> [T]``
+    computes per-toe-print partial geo scores; defaults to the pure-jnp
+    reference, swappable for the Pallas kernel (kernels/geo_score).
+    """
+    if tp_scorer is None:
+        tp_scorer = _default_tp_scorer
+
+    def one(terms, q_rects, q_amps):
+        # (1) intervals of all intersecting tiles
+        starts, ends = sidx.gather_query_intervals(spatial, q_rects, budgets.max_tiles)
+        # (2) coalesce into ≤ k sweeps, re-chunked to the fetch budget
+        s_starts, s_ends = sidx.coalesce_k_sweeps(starts, ends, budgets.k_sweeps)
+        s_starts, s_ends = sidx.split_sweeps_to_budget(
+            s_starts, s_ends, budgets.k_sweeps, budgets.sweep_budget
+        )
+        if fused:
+            # (3+6a) FUSED: the Pallas kernel streams each sweep through
+            # VMEM and scores it in-register (kernels/sweep_score); only the
+            # i32 doc-id column is fetched separately.
+            from repro.kernels.sweep_score.ops import sweep_score as _fused
+
+            part2d, ok2d = _fused(
+                spatial.tp_rects, spatial.tp_amps, s_starts, s_ends,
+                q_rects, q_amps, budgets.sweep_budget,
+            )
+            part = part2d.reshape(-1)
+            ok = ok2d.reshape(-1)
+            docs = sidx.fetch_sweep_ids(spatial, s_starts, s_ends, budgets.sweep_budget)
+        else:
+            # (3) bulk contiguous fetch (k dynamic-slice streams)
+            rects, amps, docs, ok = sidx.fetch_sweeps(
+                spatial, s_starts, s_ends, budgets.sweep_budget
+            )
+            # (6a) per-toe-print partial geo scores (the FLOP hot spot)
+            part = tp_scorer(rects, jnp.where(ok, amps, 0.0), q_rects, q_amps)
+        # (5a) geo-score early termination (paper SConclusions future work):
+        # keep only the strongest max_candidates toe prints before the
+        # expensive sort + inverted-index probing. Fetched-but-weak toe
+        # prints cost their stream bytes only; probes drop ~k*budget/Cmax x.
+        total = part.shape[0]
+        Cmax = min(budgets.max_candidates, total)
+        if budgets.early_termination and Cmax < total:
+            val, sel = jax.lax.top_k(jnp.where(ok, part, -1.0), Cmax)
+            docs_c = docs[sel]
+            ok_c = ok[sel] & (val > 0)
+            part_c = jnp.where(ok_c, val, 0.0)
+        else:
+            docs_c, ok_c, part_c = docs, ok, part
+        # (4) translate to docIDs, sort, aggregate per doc
+        docs_s, g_tot, last = _sorted_run_sums(docs_c, part_c, ok_c)
+        dvalid = last
+        docs_u = jnp.where(dvalid, docs_s, 0)
+        # (5) filter through the inverted index
+        match, tscore = tidx.text_score_of_docs(text, terms, docs_u)
+        keep = dvalid & match
+        qm = fp.query_mass(q_rects, q_amps)
+        score = ranking.combine_scores(
+            weights, tscore, g_tot, pagerank[jnp.where(keep, docs_u, 0)], qm
+        )
+        score = jnp.where(keep, score, -jnp.inf)
+        ids, vals = ranking.top_k(score, docs_u, budgets.top_k)
+        n_sweeps = jnp.sum((s_starts != INVALID).astype(jnp.int32))
+        fetched = jnp.sum(ok.astype(jnp.int32))
+        n_uniq = jnp.sum(dvalid.astype(jnp.int32))
+        n_terms_real = jnp.sum((terms >= 0).astype(jnp.int32))
+        stats = {
+            "candidates": fetched,
+            "sweeps": n_sweeps,
+            # all bytes move in ≤k contiguous streams — the whole point
+            "bytes_spatial": n_sweeps * budgets.sweep_budget * TP_BYTES,
+            "sweep_slack": n_sweeps * budgets.sweep_budget - fetched,
+            "bytes_postings": n_uniq
+            * jnp.int32(jnp.ceil(jnp.log2(jnp.maximum(text.n_postings, 2))))
+            * POSTING_BYTES,
+            "seeks": n_sweeps + n_terms_real,
+            "n_probes": n_uniq * n_terms_real,
+            "bytes_seq": n_sweeps * budgets.sweep_budget * TP_BYTES,
+            "bytes_random": n_uniq * n_terms_real * 32,
+        }
+        return ids, vals, stats
+
+    ids, vals, stats = jax.vmap(one)(query.terms, query.rects, query.amps)
+    return TopKResult(ids, vals, stats)
+
+
+def _default_tp_scorer(rects, amps, q_rects, q_amps):
+    """Pure-jnp per-toe-print scorer: Σ_q area(tp ∩ q)·amp_tp·amp_q.
+    Casts to f32 so it accepts lossy-compressed (f16) toe-print stores."""
+    from repro.core import geometry
+
+    inter = geometry.rect_intersection_area(
+        rects[:, None, :].astype(jnp.float32), q_rects[None, :, :].astype(jnp.float32)
+    )
+    return jnp.sum(
+        inter * amps[:, None].astype(jnp.float32) * q_amps[None, :].astype(jnp.float32),
+        axis=-1,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Exact oracle (dense scan) — for recall evaluation in tests/benchmarks
+# ---------------------------------------------------------------------------
+
+def oracle(
+    text: tidx.TextIndex,
+    spatial: sidx.SpatialIndex,
+    pagerank: jax.Array,
+    query: QueryBatch,
+    k: int,
+    weights: ranking.RankWeights = ranking.RankWeights(),
+) -> TopKResult:
+    """Exact top-k by scoring *every* document (no budgets).  O(N) per query."""
+    N = spatial.n_docs
+    all_docs = jnp.arange(N, dtype=jnp.int32)
+
+    def one(terms, q_rects, q_amps):
+        match, tscore = tidx.text_score_of_docs(text, terms, all_docs)
+        g = fp.geo_score(spatial.doc_rects, spatial.doc_amps, q_rects, q_amps)
+        qm = fp.query_mass(q_rects, q_amps)
+        score = ranking.combine_scores(weights, tscore, g, pagerank, qm)
+        score = jnp.where(match, score, -jnp.inf)
+        return ranking.top_k(score, all_docs, k)
+
+    ids, vals = jax.vmap(one)(query.terms, query.rects, query.amps)
+    return TopKResult(ids, vals, {})
+
+
+ALGORITHMS = {
+    "text_first": text_first,
+    "geo_first": geo_first,
+    "k_sweep": k_sweep,
+}

@@ -1,0 +1,263 @@
+"""Distributed geo-search serving: doc-sharded index × query-sharded batch.
+
+Topology (DESIGN.md §5): documents are partitioned into ``S`` index shards
+laid out over the mesh's doc axes (``('pod','data')`` in production); the
+query batch is sharded over the ``'model'`` axis (replica/throughput axis).
+One ``shard_map`` serve step:
+
+1. every device runs the full K-SWEEP pipeline against its local index shard
+   for its local query slice;
+2. local top-k per (query, shard);
+3. hierarchical merge: ``all_gather`` along ``'data'`` (intra-pod ICI) +
+   re-top-k, then along ``'pod'`` (inter-pod DCI) + final top-k.
+
+Collective volume per query is O(k · n_doc_shards) — independent of corpus
+size, the property that makes the architecture scale to thousands of chips.
+
+Partitioning policies (paper §Conclusions future work):
+* ``hash`` — docs round-robin over shards (the standard engine layout);
+* ``geo``  — docs sorted by the Morton code of their footprint center, then
+  split into equal contiguous ranges: each shard owns a compact region, its
+  tile grid is denser, sweeps are tighter, and non-overlapping shards
+  short-circuit (geo score 0 everywhere → empty local top-k).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core import algorithms as alg
+from repro.core import ranking
+from repro.core.engine import GeoIndex
+from repro.core.spatial_index import SpatialIndex, build_spatial_index_np
+from repro.core.text_index import TextIndex, build_text_index_np
+from repro.core import geometry
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class ShardedGeoIndex:
+    """Stacked per-shard index arrays; leading dim = doc shard."""
+
+    # text index
+    postings: jax.Array  # i32[S, P]
+    impacts: jax.Array  # f32[S, P]
+    offsets: jax.Array  # i32[S, M+1]
+    # spatial index
+    tp_rects: jax.Array  # f32[S, T, 4]
+    tp_amps: jax.Array  # f32[S, T]
+    tp_doc_ids: jax.Array  # i32[S, T]
+    tile_starts: jax.Array  # i32[S, G*G, m]
+    tile_ends: jax.Array  # i32[S, G*G, m]
+    doc_rects: jax.Array  # f32[S, N, R, 4]
+    doc_amps: jax.Array  # f32[S, N, R]
+    doc_mbr: jax.Array  # f32[S, N, 4]
+    doc_mass: jax.Array  # f32[S, N]
+    pagerank: jax.Array  # f32[S, N]
+    doc_offset: jax.Array  # i32[S]  local→global docID base
+    grid: int = field(metadata=dict(static=True))
+    n_terms: int = field(metadata=dict(static=True))
+
+    @property
+    def n_shards(self) -> int:
+        return self.postings.shape[0]
+
+
+def shard_corpus_np(
+    doc_terms: list[np.ndarray],
+    doc_rects: np.ndarray,
+    doc_amps: np.ndarray,
+    pagerank: np.ndarray,
+    n_terms: int,
+    n_shards: int,
+    partition: str = "hash",
+    grid: int = 64,
+    m_intervals: int = 2,
+) -> ShardedGeoIndex:
+    """Partition a corpus and build one index per shard (host side)."""
+    n_docs = len(doc_terms)
+    if partition == "geo":
+        cx = doc_rects[:, :, [0, 2]].mean(axis=(1, 2))
+        cy = doc_rects[:, :, [1, 3]].mean(axis=(1, 2))
+        fine = 1 << 15
+        code = geometry.morton_encode_np(
+            np.clip((cx * fine), 0, fine - 1).astype(np.uint32),
+            np.clip((cy * fine), 0, fine - 1).astype(np.uint32),
+        )
+        order = np.argsort(code, kind="stable")
+    elif partition == "hash":
+        order = np.argsort(np.arange(n_docs) % n_shards, kind="stable")
+    else:
+        raise ValueError(partition)
+
+    per = (n_docs + n_shards - 1) // n_shards
+    shards = []
+    offsets = []
+    global_ids = []
+    for s in range(n_shards):
+        sel = order[s * per : (s + 1) * per]
+        offsets.append(0)  # global ids carried via explicit map instead
+        global_ids.append(sel)
+        terms = [doc_terms[i] for i in sel]
+        text = build_text_index_np(terms, n_terms)
+        spatial = build_spatial_index_np(
+            doc_rects[sel], doc_amps[sel], grid, m_intervals
+        )
+        shards.append((text, spatial, pagerank[sel], sel))
+
+    # pad to uniform shapes and stack
+    P_max = max(s[0].postings.shape[0] for s in shards)
+    T_max = max(s[1].tp_rects.shape[0] for s in shards)
+    N_max = max(len(s[3]) for s in shards)
+    R = doc_rects.shape[1]
+
+    def padded(a, n, fill):
+        a = np.asarray(a)
+        out = np.full((n,) + a.shape[1:], fill, dtype=a.dtype)
+        out[: a.shape[0]] = a
+        return out
+
+    stacked = {}
+    stacked["postings"] = np.stack(
+        [padded(s[0].postings, P_max, 2**31 - 1) for s in shards]
+    )
+    stacked["impacts"] = np.stack([padded(s[0].impacts, P_max, 0.0) for s in shards])
+    stacked["offsets"] = np.stack([np.asarray(s[0].offsets) for s in shards])
+    stacked["tp_rects"] = np.stack(
+        [
+            padded(s[1].tp_rects, T_max, 0.0) for s in shards
+        ]
+    )
+    # make padded toe prints empty rects
+    for i, s in enumerate(shards):
+        t = s[1].tp_rects.shape[0]
+        stacked["tp_rects"][i, t:] = geometry.EMPTY_RECT
+    stacked["tp_amps"] = np.stack([padded(s[1].tp_amps, T_max, 0.0) for s in shards])
+    stacked["tp_doc_ids"] = np.stack(
+        [padded(s[1].tp_doc_ids, T_max, 0) for s in shards]
+    )
+    stacked["tile_starts"] = np.stack([np.asarray(s[1].tile_starts) for s in shards])
+    stacked["tile_ends"] = np.stack([np.asarray(s[1].tile_ends) for s in shards])
+    stacked["doc_rects"] = np.stack(
+        [padded(s[1].doc_rects, N_max, 0.0) for s in shards]
+    )
+    for i, s in enumerate(shards):
+        n = s[1].doc_rects.shape[0]
+        stacked["doc_rects"][i, n:] = geometry.EMPTY_RECT
+    stacked["doc_amps"] = np.stack([padded(s[1].doc_amps, N_max, 0.0) for s in shards])
+    stacked["doc_mbr"] = np.stack([padded(s[1].doc_mbr, N_max, 0.0) for s in shards])
+    stacked["doc_mass"] = np.stack([padded(s[1].doc_mass, N_max, 0.0) for s in shards])
+    stacked["pagerank"] = np.stack([padded(s[2], N_max, 0.0) for s in shards])
+    # local→global docID translation table
+    gid = np.stack([padded(s[3].astype(np.int32), N_max, -1) for s in shards])
+    stacked["doc_offset"] = gid  # [S, N] full map (name kept for pytree stability)
+
+    return ShardedGeoIndex(
+        postings=jnp.asarray(stacked["postings"]),
+        impacts=jnp.asarray(stacked["impacts"]),
+        offsets=jnp.asarray(stacked["offsets"]),
+        tp_rects=jnp.asarray(stacked["tp_rects"]),
+        tp_amps=jnp.asarray(stacked["tp_amps"]),
+        tp_doc_ids=jnp.asarray(stacked["tp_doc_ids"]),
+        tile_starts=jnp.asarray(stacked["tile_starts"]),
+        tile_ends=jnp.asarray(stacked["tile_ends"]),
+        doc_rects=jnp.asarray(stacked["doc_rects"]),
+        doc_amps=jnp.asarray(stacked["doc_amps"]),
+        doc_mbr=jnp.asarray(stacked["doc_mbr"]),
+        doc_mass=jnp.asarray(stacked["doc_mass"]),
+        pagerank=jnp.asarray(stacked["pagerank"]),
+        doc_offset=jnp.asarray(gid),
+        grid=grid,
+        n_terms=n_terms,
+    )
+
+
+def sharded_index_specs(
+    doc_axes: tuple[str, ...], grid: int, n_terms: int
+) -> ShardedGeoIndex:
+    """PartitionSpecs for every field (leading dim over the doc axes)."""
+    lead = P(doc_axes)
+    return ShardedGeoIndex(
+        postings=lead, impacts=lead, offsets=lead,
+        tp_rects=lead, tp_amps=lead, tp_doc_ids=lead,
+        tile_starts=lead, tile_ends=lead,
+        doc_rects=lead, doc_amps=lead, doc_mbr=lead, doc_mass=lead,
+        pagerank=lead, doc_offset=lead,
+        grid=grid, n_terms=n_terms,
+    )
+
+
+def make_serve_fn(
+    mesh: Mesh,
+    budgets: alg.QueryBudgets,
+    weights: ranking.RankWeights = ranking.RankWeights(),
+    doc_axes: tuple[str, ...] = ("data",),
+    query_axis: str = "model",
+    algorithm: str = "k_sweep",
+    grid: int = 64,
+    n_terms: int = 0,
+):
+    """Build the jit'd distributed serve step for a mesh.
+
+    Returns ``serve(index: ShardedGeoIndex, query: QueryBatch)
+    -> (ids i32[B, k], scores f32[B, k])`` with global docIDs.
+    """
+    fn = alg.ALGORITHMS[algorithm]
+    idx_specs = sharded_index_specs(doc_axes, grid, n_terms)
+    q_spec = alg.QueryBatch(
+        terms=P(query_axis), rects=P(query_axis), amps=P(query_axis)
+    )
+    out_spec = (P(query_axis), P(query_axis))
+
+    def local_index(idx: ShardedGeoIndex) -> tuple[GeoIndex, jax.Array]:
+        text = TextIndex(
+            postings=idx.postings[0], impacts=idx.impacts[0], offsets=idx.offsets[0],
+            bitmaps=jnp.zeros((0, 4), jnp.uint32),
+            bitmap_term_ids=jnp.zeros((0,), jnp.int32),
+            n_docs=idx.doc_rects.shape[1], n_terms=idx.n_terms,
+        )
+        spatial = SpatialIndex(
+            tp_rects=idx.tp_rects[0], tp_amps=idx.tp_amps[0],
+            tp_doc_ids=idx.tp_doc_ids[0],
+            tile_starts=idx.tile_starts[0], tile_ends=idx.tile_ends[0],
+            doc_rects=idx.doc_rects[0], doc_amps=idx.doc_amps[0],
+            doc_mbr=idx.doc_mbr[0], doc_mass=idx.doc_mass[0],
+            grid=idx.grid, n_docs=idx.doc_rects.shape[1],
+        )
+        return GeoIndex(text=text, spatial=spatial, pagerank=idx.pagerank[0]), idx.doc_offset[0]
+
+    def shard_body(idx: ShardedGeoIndex, query: alg.QueryBatch):
+        local, gid_map = local_index(idx)
+        res = fn(local.text, local.spatial, local.pagerank, query, budgets, weights)
+        # local → global docIDs
+        k = res.ids.shape[-1]
+        safe = jnp.clip(res.ids, 0, gid_map.shape[0] - 1)
+        gids = jnp.where(res.ids >= 0, gid_map[safe], -1)
+        scores = jnp.where(res.ids >= 0, res.scores, -jnp.inf)
+        # hierarchical top-k merge over doc axes (innermost first = intra-pod)
+        for ax in reversed(doc_axes):
+            g_ids = jax.lax.all_gather(gids, ax)  # [n_ax, B, k]
+            g_scores = jax.lax.all_gather(scores, ax)
+            n_ax = g_ids.shape[0]
+            g_ids = jnp.moveaxis(g_ids, 0, -2).reshape(*gids.shape[:-1], n_ax * k)
+            g_scores = jnp.moveaxis(g_scores, 0, -2).reshape(
+                *scores.shape[:-1], n_ax * k
+            )
+            scores, sel = jax.lax.top_k(g_scores, k)
+            gids = jnp.take_along_axis(g_ids, sel, axis=-1)
+        return gids, scores
+
+    mapped = shard_map(
+        shard_body,
+        mesh=mesh,
+        in_specs=(idx_specs, q_spec),
+        out_specs=out_spec,
+        check_rep=False,
+    )
+    return jax.jit(mapped)

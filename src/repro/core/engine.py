@@ -1,0 +1,147 @@
+"""GeoSearchEngine: build / hold indexes, execute batched geo queries.
+
+This is the public API of the paper's system.  It owns
+
+* a ``TextIndex`` (CSR inverted index + impacts + optional block bitmaps),
+* a ``SpatialIndex`` (Morton toe-print store + tile-interval grid + doc-major
+  footprint mirror),
+* per-document global scores (PageRank),
+* query ``Budgets`` and ranking weights,
+
+and exposes ``query(batch, algorithm=...)`` — a jit-compiled, batched query
+pipeline — plus ``oracle`` for exact evaluation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import algorithms as alg
+from repro.core import ranking
+from repro.core.spatial_index import SpatialIndex, build_spatial_index_np
+from repro.core.text_index import TextIndex, build_text_index_np
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class GeoIndex:
+    """The full index state — a single pytree, shardable under pjit/shard_map."""
+
+    text: TextIndex
+    spatial: SpatialIndex
+    pagerank: jax.Array  # f32[N]
+
+
+@dataclass
+class GeoSearchEngine:
+    index: GeoIndex
+    budgets: alg.QueryBudgets
+    weights: ranking.RankWeights
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+    @staticmethod
+    def build(
+        doc_terms: list[np.ndarray],
+        doc_rects: np.ndarray,
+        doc_amps: np.ndarray,
+        n_terms: int,
+        pagerank: np.ndarray | None = None,
+        grid: int = 64,
+        m_intervals: int = 2,
+        n_bitmap_terms: int = 0,
+        budgets: alg.QueryBudgets | None = None,
+        weights: ranking.RankWeights | None = None,
+        compress: bool = False,
+    ) -> "GeoSearchEngine":
+        text = build_text_index_np(doc_terms, n_terms, n_bitmap_terms)
+        spatial = build_spatial_index_np(
+            doc_rects, doc_amps, grid, m_intervals, compress=compress
+        )
+        if compress:
+            from repro.core.text_index import quantize_impacts
+
+            text = quantize_impacts(text, jnp.float16)
+        n = len(doc_terms)
+        if pagerank is None:
+            pagerank = np.full((n,), 0.1, dtype=np.float32)
+        budgets = budgets or alg.QueryBudgets()
+        # sweeps cannot exceed the store
+        budgets = replace(
+            budgets, sweep_budget=min(budgets.sweep_budget, spatial.n_toeprints)
+        )
+        return GeoSearchEngine(
+            index=GeoIndex(text=text, spatial=spatial, pagerank=jnp.asarray(pagerank)),
+            budgets=budgets,
+            weights=weights or ranking.RankWeights(),
+        )
+
+    # ------------------------------------------------------------------
+    # query execution
+    # ------------------------------------------------------------------
+    def query(
+        self,
+        batch: alg.QueryBatch,
+        algorithm: str = "k_sweep",
+        **kw,
+    ) -> alg.TopKResult:
+        fn = self._compiled(algorithm, tuple(sorted(kw.items())))
+        return fn(self.index, batch)
+
+    def oracle(self, batch: alg.QueryBatch, k: int | None = None) -> alg.TopKResult:
+        k = k or self.budgets.top_k
+        return jax.jit(
+            lambda idx, b: alg.oracle(
+                idx.text, idx.spatial, idx.pagerank, b, k, self.weights
+            )
+        )(self.index, batch)
+
+    def _compiled(self, algorithm: str, kw_key) -> Callable:
+        cache = self.__dict__.setdefault("_fn_cache", {})
+        key = (algorithm, kw_key)
+        if key not in cache:
+            fn = alg.ALGORITHMS[algorithm]
+            kw = dict(kw_key)
+
+            @jax.jit
+            def run(index: GeoIndex, batch: alg.QueryBatch):
+                return fn(
+                    index.text,
+                    index.spatial,
+                    index.pagerank,
+                    batch,
+                    self.budgets,
+                    self.weights,
+                    **kw,
+                )
+
+            cache[key] = run
+        return cache[key]
+
+    # ------------------------------------------------------------------
+    # evaluation
+    # ------------------------------------------------------------------
+    def recall_at_k(
+        self, batch: alg.QueryBatch, algorithm: str = "k_sweep", k: int | None = None
+    ) -> float:
+        """Recall@k of an algorithm vs the exact oracle."""
+        k = k or self.budgets.top_k
+        got = self.query(batch, algorithm)
+        want = self.oracle(batch, k)
+        got_ids = np.asarray(got.ids)
+        want_ids = np.asarray(want.ids)
+        hits, total = 0, 0
+        for b in range(got_ids.shape[0]):
+            w = set(int(x) for x in want_ids[b] if x >= 0)
+            g = set(int(x) for x in got_ids[b] if x >= 0)
+            total += len(w)
+            hits += len(w & g)
+        if total == 0:
+            return 1.0  # vacuous: no query has any valid result
+        return hits / total

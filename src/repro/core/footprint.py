@@ -1,0 +1,114 @@
+"""Geographic footprints: sets of amplitude-weighted rectangles.
+
+A document footprint is an arbitrary, possibly non-contiguous area with an
+amplitude (certainty) per location (paper §III.A).  Following the paper, all
+algorithms approximate footprints by sets of bounding rectangles ("toe
+prints"); the *precise* geographic score between a query footprint and a
+document footprint is a black-box procedure — here the amplitude-weighted
+intersection inner product:
+
+    g(fD, fq) = sum_{r in fD} sum_{s in fq} area(r ∩ s) * amp(r) * amp(s)
+
+normalized by the query footprint's own mass so scores are comparable across
+queries.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import geometry
+
+
+@dataclass(frozen=True)
+class FootprintBatch:
+    """A batch of footprints as padded rect sets.
+
+    rects: f32[..., R, 4]   (padding rows encoded as empty rects)
+    amps:  f32[..., R]      (padding rows have amp 0)
+    """
+
+    rects: jax.Array
+    amps: jax.Array
+
+    @property
+    def max_rects(self) -> int:
+        return self.rects.shape[-2]
+
+
+def make_footprint_np(
+    rects: np.ndarray, amps: np.ndarray, max_rects: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Pad a single footprint's (n,4)/(n,) arrays to (max_rects, …)."""
+    n = min(len(rects), max_rects)
+    out_r = np.tile(geometry.EMPTY_RECT, (max_rects, 1)).astype(np.float32)
+    out_a = np.zeros((max_rects,), dtype=np.float32)
+    out_r[:n] = rects[:n]
+    out_a[:n] = amps[:n]
+    return out_r, out_a
+
+
+def geo_score(
+    doc_rects: jax.Array,
+    doc_amps: jax.Array,
+    query_rects: jax.Array,
+    query_amps: jax.Array,
+) -> jax.Array:
+    """Amplitude-weighted intersection score.
+
+    doc_rects:   f32[..., R, 4]
+    doc_amps:    f32[..., R]
+    query_rects: f32[Q, 4]
+    query_amps:  f32[Q]
+    returns      f32[...]
+    """
+    inter = geometry.rect_intersection_area(
+        doc_rects[..., :, None, :].astype(jnp.float32),
+        query_rects[None, :, :].astype(jnp.float32),
+    )  # [..., R, Q]
+    w = doc_amps[..., :, None].astype(jnp.float32) * query_amps[None, :].astype(
+        jnp.float32
+    )
+    return jnp.sum(inter * w, axis=(-1, -2))
+
+
+def geo_score_upper_bound(
+    doc_mbr: jax.Array,
+    doc_mass: jax.Array,
+    query_rects: jax.Array,
+    query_amps: jax.Array,
+) -> jax.Array:
+    """Cheap upper bound on ``geo_score`` from the footprint MBR only.
+
+    Used by the lossy-footprint early-termination path (paper future work):
+    score <= min(area(mbr ∩ q), mass_D) * amp_q summed over query rects,
+    where ``doc_mass = Σ_r area(r)·amp(r)`` is precomputed.
+
+    doc_mbr:  f32[..., 4]
+    doc_mass: f32[...]
+    """
+    inter = geometry.rect_intersection_area(
+        doc_mbr[..., None, :], query_rects[None, :, :]
+    )  # [..., Q]
+    bound = jnp.minimum(inter, doc_mass[..., None]) * query_amps[None, :]
+    return jnp.sum(bound, axis=-1)
+
+
+def query_mass(query_rects: jax.Array, query_amps: jax.Array) -> jax.Array:
+    """Σ area·amp of the query footprint (normalizer)."""
+    return jnp.sum(geometry.rect_area(query_rects) * query_amps, axis=-1)
+
+
+def footprint_mbr_np(rects: np.ndarray) -> np.ndarray:
+    """MBR over the non-empty rects of ``rects (R,4)``."""
+    valid = rects[:, 2] > rects[:, 0]
+    if not valid.any():
+        return geometry.EMPTY_RECT.copy()
+    r = rects[valid]
+    return np.array(
+        [r[:, 0].min(), r[:, 1].min(), r[:, 2].max(), r[:, 3].max()],
+        dtype=np.float32,
+    )

@@ -1,0 +1,53 @@
+"""Ranking: F(D, q) = w_g·g(fD, fq) + w_p·pr(D) + w_t·Ftext(D, q).
+
+Text impacts are precomputed into the index (text_index.py), so the
+query-time text score is a gather+sum.  The geographic score is normalized
+by the query footprint mass so that weights are comparable across queries
+(paper: "with appropriate normalization of the three terms").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class RankWeights:
+    w_text: float = field(default=1.0, metadata=dict(static=True))
+    w_geo: float = field(default=1.0, metadata=dict(static=True))
+    w_pr: float = field(default=0.2, metadata=dict(static=True))
+
+
+def combine_scores(
+    weights: RankWeights,
+    text_score: jax.Array,
+    geo_score: jax.Array,
+    pagerank: jax.Array,
+    query_mass: jax.Array,
+    require_geo: bool = True,
+) -> jax.Array:
+    """Combined relevance; −inf for documents with empty footprint overlap.
+
+    The paper's semantics: a result must contain all keywords AND its
+    footprint must intersect the query footprint (geo score > 0).
+    """
+    norm = jnp.maximum(query_mass, 1e-12)
+    score = (
+        weights.w_text * text_score
+        + weights.w_geo * geo_score / norm
+        + weights.w_pr * pagerank
+    )
+    if require_geo:
+        score = jnp.where(geo_score > 0.0, score, -jnp.inf)
+    return score
+
+
+def top_k(scores: jax.Array, doc_ids: jax.Array, k: int):
+    """Top-k by score; ties broken by lower docID (via epsilon on id)."""
+    vals, idx = jax.lax.top_k(scores, k)
+    ids = jnp.take_along_axis(doc_ids, idx, axis=-1)
+    ids = jnp.where(jnp.isfinite(vals), ids, -1)
+    return ids, vals

@@ -1,0 +1,350 @@
+"""Spatial index: Morton-ordered toe-print store + tile→interval grid.
+
+This is the paper's K-SWEEP substrate (§IV.C), adapted to HBM:
+
+* Every footprint rectangle of every document is a *toe print*.  Toe prints
+  are sorted by the Morton (Z-order) code of their center — the
+  space-filling-curve layout that makes spatially-close toe prints adjacent
+  in memory ("on disk").
+* A ``G×G`` tile grid stores, per tile, up to ``m`` toe-print-ID *intervals*
+  covering all toe prints intersecting that tile.  The whole structure is a
+  few MB (paper: "the entire auxiliary structure can be stored in a few MB").
+* A query unions the intervals of the tiles its footprint touches and
+  coalesces them into ≤ ``k`` *sweeps* — contiguous ranges fetched with
+  ``dynamic_slice`` streams instead of random gathers.
+
+Also holds the doc-major footprint mirror (``doc_rects``/``doc_amps``) used
+by the TEXT-FIRST / GEO-FIRST baselines (the "footprints sorted by docID on
+disk" file), and per-doc MBRs for the GEO-FIRST in-memory filter (the
+R*-tree stand-in: a memory-resident MBR table probed via the same tile grid).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import geometry
+from repro.core.footprint import footprint_mbr_np
+
+INVALID = np.int32(2**31 - 1)
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class SpatialIndex:
+    # --- Morton-sorted toe-print store (the k-sweep "disk file") ---
+    tp_rects: jax.Array  # f32[T, 4]
+    tp_amps: jax.Array  # f32[T]
+    tp_doc_ids: jax.Array  # i32[T]
+    # --- tile grid: per tile, m toe-print-ID intervals [start, end) ---
+    tile_starts: jax.Array  # i32[G*G, m]
+    tile_ends: jax.Array  # i32[G*G, m]
+    # --- doc-major mirror (docID-sorted footprint file) ---
+    doc_rects: jax.Array  # f32[N, R, 4]
+    doc_amps: jax.Array  # f32[N, R]
+    doc_mbr: jax.Array  # f32[N, 4]
+    doc_mass: jax.Array  # f32[N]  (Σ area·amp, for score upper bounds)
+    grid: int = field(metadata=dict(static=True))
+    n_docs: int = field(metadata=dict(static=True))
+
+    @property
+    def n_toeprints(self) -> int:
+        return self.tp_rects.shape[0]
+
+    @property
+    def m_intervals(self) -> int:
+        return self.tile_starts.shape[1]
+
+
+def build_spatial_index_np(
+    doc_rects: np.ndarray,  # f32[N, R, 4] (padded with EMPTY_RECT)
+    doc_amps: np.ndarray,  # f32[N, R]
+    grid: int = 64,
+    m_intervals: int = 2,
+    compress: bool = False,  # f16 footprint data (paper: lossy compression)
+) -> SpatialIndex:
+    """Host-side index build (the paper's offline preprocessing)."""
+    N, R, _ = doc_rects.shape
+    valid = doc_rects[:, :, 2] > doc_rects[:, :, 0]
+    doc_idx, rect_idx = np.nonzero(valid)
+    rects = doc_rects[doc_idx, rect_idx]  # [T, 4]
+    amps = doc_amps[doc_idx, rect_idx]
+
+    # Morton order by rect-center cell in a fine 2^15 grid.
+    cx = (rects[:, 0] + rects[:, 2]) * 0.5
+    cy = (rects[:, 1] + rects[:, 3]) * 0.5
+    fine = 1 << 15
+    ix = np.clip((cx * fine).astype(np.int64), 0, fine - 1)
+    iy = np.clip((cy * fine).astype(np.int64), 0, fine - 1)
+    codes = geometry.morton_encode_np(ix.astype(np.uint32), iy.astype(np.uint32))
+    order = np.argsort(codes, kind="stable")
+    rects, amps, doc_idx = rects[order], amps[order], doc_idx[order]
+    T = len(rects)
+
+    # Tile grid: toe-print IDs intersecting each tile, compressed to m intervals.
+    tile_starts = np.full((grid * grid, m_intervals), INVALID, dtype=np.int32)
+    tile_ends = np.full((grid * grid, m_intervals), INVALID, dtype=np.int32)
+
+    # enumerate (tile, toeprint) pairs
+    g = float(grid)
+    eps = 0.5 / grid * 1e-3
+    x0 = np.clip(np.floor(rects[:, 0] * g).astype(np.int64), 0, grid - 1)
+    y0 = np.clip(np.floor(rects[:, 1] * g).astype(np.int64), 0, grid - 1)
+    x1 = np.clip(np.floor((rects[:, 2] - eps) * g).astype(np.int64), 0, grid - 1)
+    y1 = np.clip(np.floor((rects[:, 3] - eps) * g).astype(np.int64), 0, grid - 1)
+    tile_lists: dict[int, list[int]] = {}
+    for t in range(T):
+        for ty in range(y0[t], y1[t] + 1):
+            base = ty * grid
+            for tx in range(x0[t], x1[t] + 1):
+                tile_lists.setdefault(base + tx, []).append(t)
+
+    for tile, ids in tile_lists.items():
+        ivs = _coalesce_to_m(np.asarray(ids, dtype=np.int64), m_intervals)
+        for j, (s, e) in enumerate(ivs):
+            tile_starts[tile, j] = s
+            tile_ends[tile, j] = e
+
+    # doc-major mirrors
+    mbr = np.stack([footprint_mbr_np(doc_rects[i]) for i in range(N)], axis=0)
+    area = np.maximum(doc_rects[:, :, 2] - doc_rects[:, :, 0], 0) * np.maximum(
+        doc_rects[:, :, 3] - doc_rects[:, :, 1], 0
+    )
+    mass = (area * doc_amps).sum(axis=1).astype(np.float32)
+
+    ft = np.float16 if compress else np.float32
+    return SpatialIndex(
+        tp_rects=jnp.asarray(rects.astype(ft)),
+        tp_amps=jnp.asarray(amps.astype(ft)),
+        tp_doc_ids=jnp.asarray(doc_idx.astype(np.int32)),
+        tile_starts=jnp.asarray(tile_starts),
+        tile_ends=jnp.asarray(tile_ends),
+        doc_rects=jnp.asarray(doc_rects.astype(ft)),
+        doc_amps=jnp.asarray(doc_amps.astype(ft)),
+        doc_mbr=jnp.asarray(mbr.astype(ft)),
+        doc_mass=jnp.asarray(mass.astype(ft)),
+        grid=grid,
+        n_docs=N,
+    )
+
+
+def _coalesce_to_m(ids: np.ndarray, m: int) -> list[tuple[int, int]]:
+    """Cover sorted toe-print IDs with ≤ m [start, end) intervals.
+
+    Greedy-optimal: cut at the m−1 largest gaps (minimizes covered slack).
+    """
+    if len(ids) == 0:
+        return []
+    ids = np.unique(ids)
+    if len(ids) == 1:
+        return [(int(ids[0]), int(ids[0]) + 1)]
+    gaps = np.diff(ids)
+    n_cuts = min(m - 1, len(gaps))
+    if n_cuts > 0:
+        cut_pos = np.argsort(-gaps, kind="stable")[:n_cuts]
+        # only cut where the gap is > 1 (else no benefit)
+        cut_pos = cut_pos[gaps[cut_pos] > 1]
+        cut_pos = np.sort(cut_pos)
+    else:
+        cut_pos = np.array([], dtype=np.int64)
+    bounds = np.concatenate([[-1], cut_pos, [len(ids) - 1]])
+    out = []
+    for i in range(len(bounds) - 1):
+        s = int(ids[bounds[i] + 1])
+        e = int(ids[bounds[i + 1]]) + 1
+        out.append((s, e))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Query-time primitives (jit-safe)
+# ---------------------------------------------------------------------------
+
+def gather_query_intervals(
+    index: SpatialIndex,
+    query_rects: jax.Array,  # f32[Qr, 4]
+    max_tiles: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Intervals of every tile touched by the query footprint.
+
+    Returns (starts i32[Qr*max_tiles*m], ends …) with INVALID padding.
+    """
+    Qr = query_rects.shape[0]
+
+    def per_rect(r):
+        tiles, valid = geometry.enumerate_rect_tiles(r, index.grid, max_tiles)
+        s = index.tile_starts[tiles]  # [max_tiles, m]
+        e = index.tile_ends[tiles]
+        s = jnp.where(valid[:, None], s, INVALID)
+        e = jnp.where(valid[:, None], e, INVALID)
+        return s.reshape(-1), e.reshape(-1)
+
+    starts, ends = jax.vmap(per_rect)(query_rects)
+    return starts.reshape(-1), ends.reshape(-1)
+
+
+def coalesce_k_sweeps(
+    starts: jax.Array,  # i32[I] with INVALID padding
+    ends: jax.Array,
+    k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Coalesce intervals into ≤ k sweeps minimizing fetched volume.
+
+    Sort intervals by start; a sweep boundary is placed at the k−1 largest
+    *positive* gaps between consecutive intervals (gap = next.start −
+    running_max_end).  Closed-form, no data-dependent shapes.
+
+    Returns (sweep_starts i32[k], sweep_ends i32[k]); empty sweeps have
+    start == end == INVALID.
+    """
+    I = starts.shape[0]
+    order = jnp.argsort(starts)
+    s = starts[order]
+    e = ends[order]
+    valid = s != INVALID
+    # running max of interval ends (prefix), to handle containment/overlap
+    e_filled = jnp.where(valid, e, jnp.int32(-1))
+    run_end = jax.lax.cummax(e_filled)
+    prev_end = jnp.concatenate([jnp.zeros((1,), jnp.int32), run_end[:-1]])
+    gap = jnp.where(valid, s - prev_end, jnp.int32(-1))
+    gap = gap.at[0].set(jnp.where(valid[0], 0, -1))
+    # first valid interval must always open a sweep; force its gap huge
+    first_valid = jnp.argmax(valid)  # 0 if none valid
+    gap = gap.at[first_valid].set(jnp.where(valid.any(), jnp.int32(2**30), gap[first_valid]))
+    gap = jnp.where(jnp.arange(I) == first_valid, gap, jnp.where(gap > 0, gap, -1))
+
+    # choose k cut positions = k largest positive gaps (first_valid included)
+    top_gap, top_idx = jax.lax.top_k(gap, min(k, I))
+    is_cut = jnp.zeros((I,), dtype=bool).at[top_idx].set(top_gap > 0)
+
+    # sweep id per interval = cumsum of cuts − 1
+    sweep_id = jnp.cumsum(is_cut.astype(jnp.int32)) - 1
+    sweep_id = jnp.where(valid, sweep_id, k)  # invalid → bucket k (dropped)
+
+    big = jnp.int32(2**30)
+    sweep_starts = jnp.full((k + 1,), big, jnp.int32).at[sweep_id].min(
+        jnp.where(valid, s, big)
+    )[:k]
+    sweep_ends = jnp.full((k + 1,), jnp.int32(-1), jnp.int32).at[sweep_id].max(
+        jnp.where(valid, e, jnp.int32(-1))
+    )[:k]
+    empty = sweep_ends < sweep_starts
+    sweep_starts = jnp.where(empty, INVALID, sweep_starts)
+    sweep_ends = jnp.where(empty, INVALID, sweep_ends)
+    return sweep_starts, sweep_ends
+
+
+def split_sweeps_to_budget(
+    sweep_starts: jax.Array,  # i32[k]
+    sweep_ends: jax.Array,
+    k: int,
+    budget: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Re-chunk coalesced runs into ≤ k sweeps of length ≤ budget.
+
+    A run longer than ``budget`` would otherwise be tail-truncated by
+    ``fetch_sweeps``; here each run r is split into ceil(len_r/budget)
+    consecutive chunks and the first k chunks across runs are kept (total
+    fetch stays ≤ k·budget — the fixed I/O budget).
+    """
+    lens = jnp.where(sweep_starts != INVALID, sweep_ends - sweep_starts, 0)
+    chunks = (lens + budget - 1) // budget  # per-run chunk count
+    cum = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(chunks).astype(jnp.int32)])
+    j = jnp.arange(k, dtype=jnp.int32)
+    run = jnp.clip(jnp.searchsorted(cum, j, side="right") - 1, 0, k - 1)
+    within = j - cum[run]
+    valid = j < cum[-1]
+    s = jnp.where(sweep_starts[run] == INVALID, 0, sweep_starts[run]) + within * budget
+    e = jnp.minimum(s + budget, sweep_ends[run])
+    s = jnp.where(valid, s, INVALID)
+    e = jnp.where(valid, e, INVALID)
+    return s, e
+
+
+def fetch_sweeps(
+    index: SpatialIndex,
+    sweep_starts: jax.Array,  # i32[k]
+    sweep_ends: jax.Array,
+    sweep_budget: int,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fetch toe prints of ≤ k sweeps as contiguous dynamic slices.
+
+    Each sweep fetches exactly ``sweep_budget`` consecutive toe prints
+    starting at its start (entries past the sweep end are masked).  This is
+    the HBM analogue of the paper's "k highly efficient [disk] scans".
+
+    Returns (rects f32[k*B,4], amps f32[k*B], doc_ids i32[k*B], valid bool[k*B]).
+    """
+    k = sweep_starts.shape[0]
+    T = index.n_toeprints
+
+    def fetch_one(s, e):
+        start = jnp.clip(jnp.where(s == INVALID, 0, s), 0, max(T - sweep_budget, 0))
+        r = jax.lax.dynamic_slice(index.tp_rects, (start, 0), (sweep_budget, 4))
+        a = jax.lax.dynamic_slice(index.tp_amps, (start,), (sweep_budget,))
+        d = jax.lax.dynamic_slice(index.tp_doc_ids, (start,), (sweep_budget,))
+        pos = start + jnp.arange(sweep_budget, dtype=jnp.int32)
+        ok = (s != INVALID) & (pos >= s) & (pos < e)
+        return r, a, d, ok
+
+    rects, amps, docs, ok = jax.vmap(fetch_one)(sweep_starts, sweep_ends)
+    return (
+        rects.reshape(k * sweep_budget, 4),
+        amps.reshape(-1),
+        docs.reshape(-1),
+        ok.reshape(-1),
+    )
+
+
+def fetch_sweep_ids(
+    index: SpatialIndex,
+    sweep_starts: jax.Array,  # i32[k]
+    sweep_ends: jax.Array,
+    sweep_budget: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Doc-id-only sweep fetch (pairs with the fused sweep_score kernel,
+    which produces the scores without materializing the geometry)."""
+    k = sweep_starts.shape[0]
+    T = index.n_toeprints
+
+    def fetch_one(s, e):
+        start = jnp.clip(jnp.where(s == INVALID, 0, s), 0, max(T - sweep_budget, 0))
+        d = jax.lax.dynamic_slice(index.tp_doc_ids, (start,), (sweep_budget,))
+        pos = start + jnp.arange(sweep_budget, dtype=jnp.int32)
+        # re-window to [s, s+budget) convention used by the fused kernel
+        shift = jnp.where(s == INVALID, 0, s) - start
+        idx = jnp.clip(shift + jnp.arange(sweep_budget, dtype=jnp.int32), 0, sweep_budget - 1)
+        return d[idx]
+
+    docs = jax.vmap(fetch_one)(sweep_starts, sweep_ends)
+    return docs.reshape(k * sweep_budget)
+
+
+def tile_candidate_toeprints(
+    index: SpatialIndex,
+    query_rects: jax.Array,  # f32[Qr, 4]
+    max_tiles: int,
+    max_candidates: int,
+    max_runs: int = 64,
+) -> tuple[jax.Array, jax.Array]:
+    """GEO-FIRST candidate generation: individual toe-print IDs from tiles.
+
+    Merges the query's tile intervals into ≤ ``max_runs`` disjoint runs, then
+    enumerates individual toe-print IDs (cumsum expansion) up to the
+    ``max_candidates`` budget.  Models the R*-tree candidate lookup — each
+    candidate toe print is then fetched *individually* (random access).
+
+    Returns (tp_ids i32[max_candidates], valid bool[max_candidates]).
+    """
+    starts, ends = gather_query_intervals(index, query_rects, max_tiles)
+    s, e = coalesce_k_sweeps(starts, ends, max_runs)  # disjoint runs
+    lens = jnp.where(s != INVALID, e - s, 0)
+    offs = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(lens).astype(jnp.int32)])
+    j = jnp.arange(max_candidates, dtype=jnp.int32)
+    run = jnp.clip(jnp.searchsorted(offs, j, side="right") - 1, 0, max_runs - 1)
+    ok = j < offs[-1]
+    ids = jnp.where(s[run] == INVALID, 0, s[run]) + (j - offs[run])
+    return jnp.where(ok, ids, 0), ok

@@ -1,0 +1,262 @@
+"""Inverted text index: CSR posting arrays + impact scores + block bitmaps.
+
+Layout (paper §II.B, adapted to HBM-resident fixed-shape arrays):
+
+* ``postings i32[P]``  — docIDs, ascending within each term's slice.
+* ``impacts  f32[P]``  — precomputed per-posting *impact* score: the term's
+  full contribution to the lnc.ltc cosine of eq. (3),
+  ``ln(1 + n/f_t) * (1 + ln f_{D,t}) / sqrt(|D|)``, so query-time text
+  scoring is a pure gather+sum (quantizable to f16/int8; see ``quantize``).
+* ``offsets  i32[M+1]`` — CSR slices: term w owns postings[offsets[w]:offsets[w+1]].
+* block bitmaps: for the ``n_bitmap_terms`` most frequent terms, a packed
+  u32 bitmap over ceil(N/128)*4 words marking which 128-doc *blocks*'
+  documents contain the term — the TPU-idiomatic conjunction prefilter
+  (AND + popcount; see kernels/bitmap_filter).
+
+Membership probing at query time is a vectorized binary search
+(``searchsorted``) into the term slice — the TPU analogue of DAAT list
+merging.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BLOCK = 128  # docs per bitmap block
+WORDS_PER_BLOCK = BLOCK // 32
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class TextIndex:
+    """HBM-resident inverted index (a pytree of arrays)."""
+
+    postings: jax.Array  # i32[P] docIDs
+    impacts: jax.Array  # f32[P] precomputed impact scores
+    offsets: jax.Array  # i32[M+1]
+    bitmaps: jax.Array  # u32[n_bitmap_terms, n_words]  (may be [0, n_words])
+    bitmap_term_ids: jax.Array  # i32[n_bitmap_terms] term id per bitmap row
+    n_docs: int = field(metadata=dict(static=True))
+    n_terms: int = field(metadata=dict(static=True))
+
+    @property
+    def n_postings(self) -> int:
+        return self.postings.shape[0]
+
+
+def build_text_index_np(
+    doc_terms: list[np.ndarray],
+    n_terms: int,
+    n_bitmap_terms: int = 0,
+) -> TextIndex:
+    """Build from per-doc term-id arrays (with repetitions = frequencies).
+
+    Pure-numpy index construction (host side, analogous to the paper's
+    offline index build).
+    """
+    n_docs = len(doc_terms)
+    # term frequencies per doc, collection document frequencies
+    doc_ids_per_term: list[list[int]] = [[] for _ in range(n_terms)]
+    freq_per_term: list[list[int]] = [[] for _ in range(n_terms)]
+    doc_len = np.zeros((n_docs,), dtype=np.float64)
+    for d, terms in enumerate(doc_terms):
+        doc_len[d] = max(len(terms), 1)
+        uniq, counts = np.unique(terms, return_counts=True)
+        for w, c in zip(uniq, counts):
+            doc_ids_per_term[int(w)].append(d)
+            freq_per_term[int(w)].append(int(c))
+
+    df = np.array([len(x) for x in doc_ids_per_term], dtype=np.float64)
+    idf = np.log(1.0 + n_docs / np.maximum(df, 1.0))
+
+    offsets = np.zeros((n_terms + 1,), dtype=np.int32)
+    offsets[1:] = np.cumsum([len(x) for x in doc_ids_per_term])
+    P = int(offsets[-1])
+    postings = np.zeros((P,), dtype=np.int32)
+    impacts = np.zeros((P,), dtype=np.float32)
+    for w in range(n_terms):
+        lo, hi = offsets[w], offsets[w + 1]
+        if hi == lo:
+            continue
+        ids = np.asarray(doc_ids_per_term[w], dtype=np.int32)
+        fr = np.asarray(freq_per_term[w], dtype=np.float64)
+        order = np.argsort(ids)
+        postings[lo:hi] = ids[order]
+        imp = idf[w] * (1.0 + np.log(fr[order])) / np.sqrt(doc_len[ids[order]])
+        impacts[lo:hi] = imp.astype(np.float32)
+
+    # block bitmaps for the most frequent terms
+    n_blocks = (n_docs + BLOCK - 1) // BLOCK
+    n_words = n_blocks * WORDS_PER_BLOCK
+    if n_bitmap_terms > 0:
+        top_terms = np.argsort(-df)[:n_bitmap_terms].astype(np.int32)
+        bitmaps = np.zeros((n_bitmap_terms, n_words), dtype=np.uint32)
+        for row, w in enumerate(top_terms):
+            lo, hi = offsets[w], offsets[w + 1]
+            ids = postings[lo:hi]
+            words = ids // 32
+            bits = (ids % 32).astype(np.uint32)
+            np.bitwise_or.at(bitmaps[row], words, np.uint32(1) << bits)
+    else:
+        top_terms = np.zeros((0,), dtype=np.int32)
+        bitmaps = np.zeros((0, n_words), dtype=np.uint32)
+
+    return TextIndex(
+        postings=jnp.asarray(postings),
+        impacts=jnp.asarray(impacts),
+        offsets=jnp.asarray(offsets),
+        bitmaps=jnp.asarray(bitmaps),
+        bitmap_term_ids=jnp.asarray(top_terms),
+        n_docs=n_docs,
+        n_terms=n_terms,
+    )
+
+
+def quantize_impacts(index: TextIndex, dtype=jnp.float16) -> TextIndex:
+    """Lossy-compress impact scores (paper: compressed index formats)."""
+    return TextIndex(
+        postings=index.postings,
+        impacts=index.impacts.astype(dtype),
+        offsets=index.offsets,
+        bitmaps=index.bitmaps,
+        bitmap_term_ids=index.bitmap_term_ids,
+        n_docs=index.n_docs,
+        n_terms=index.n_terms,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Query-time primitives (jit-safe)
+# ---------------------------------------------------------------------------
+
+def term_slice(index: TextIndex, term: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(start, length) of a term's posting slice."""
+    lo = index.offsets[term]
+    hi = index.offsets[term + 1]
+    return lo, hi - lo
+
+
+def probe_term(
+    index: TextIndex, term: jax.Array, doc_ids: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Membership + impact of ``doc_ids`` in one term's posting list.
+
+    Vectorized binary search over the whole posting array restricted to the
+    term slice.  Returns (member bool[...], impact f32[...]).
+    """
+    lo, n = term_slice(index, term)
+    # searchsorted over the full array with translated bounds: postings within
+    # a slice are sorted, and slices are disjoint, so search the slice via
+    # index arithmetic on a gathered window — instead do searchsorted on the
+    # full array bounded to [lo, lo+n) by clamping.
+    pos = _searchsorted_slice(index.postings, lo, n, doc_ids)
+    found_id = index.postings[jnp.clip(pos, 0, index.n_postings - 1)]
+    member = (pos < lo + n) & (found_id == doc_ids) & (n > 0)
+    impact = jnp.where(member, index.impacts[jnp.clip(pos, 0, index.n_postings - 1)].astype(jnp.float32), 0.0)
+    return member, impact
+
+
+def _searchsorted_slice(arr: jax.Array, lo: jax.Array, n: jax.Array, keys: jax.Array) -> jax.Array:
+    """Branchless binary search of ``keys`` in ``arr[lo:lo+n)`` (left).
+
+    Works for traced (dynamic) lo/n: a fixed ``ceil(log2(P))+1``-step bisection.
+    Returns absolute positions in [lo, lo+n].
+    """
+    P = arr.shape[0]
+    steps = max(int(np.ceil(np.log2(max(P, 2)))) + 1, 1)
+    lo_ = jnp.broadcast_to(lo, keys.shape).astype(jnp.int32)
+    hi_ = jnp.broadcast_to(lo + n, keys.shape).astype(jnp.int32)
+
+    def body(_, lh):
+        l, h = lh
+        active = l < h
+        mid = (l + h) // 2
+        v = arr[jnp.clip(mid, 0, P - 1)]
+        go_right = v < keys
+        l = jnp.where(active & go_right, mid + 1, l)
+        h = jnp.where(active & ~go_right, mid, h)
+        return l, h
+
+    l, _ = jax.lax.fori_loop(0, steps, body, (lo_, hi_))
+    return l
+
+
+def conjunction_candidates(
+    index: TextIndex,
+    terms: jax.Array,  # i32[d] (padded with -1)
+    max_candidates: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """TEXT-FIRST driver: intersect posting lists of ``terms``.
+
+    Uses the *first valid* term's posting list as the driver (capped at
+    ``max_candidates`` postings, an early-termination budget) and probes the
+    remaining terms by binary search.  Returns
+
+      cand_ids  i32[max_candidates]   (docIDs, ascending among valid)
+      valid     bool[max_candidates]
+      text_score f32[max_candidates]  (sum of impacts over query terms)
+    """
+    d = terms.shape[0]
+    # Classic optimization: drive the intersection with the *shortest* list.
+    safe_terms = jnp.maximum(terms, 0)
+    lens = index.offsets[safe_terms + 1] - index.offsets[safe_terms]
+    lens = jnp.where(terms >= 0, lens, jnp.int32(2**31 - 1))
+    driver = jnp.argmin(lens).astype(jnp.int32)
+    t0 = safe_terms[driver]
+    any_real = terms[0] >= 0  # terms are packed left; term 0 real iff query nonempty
+
+    lo, n = term_slice(index, t0)
+    n = jnp.minimum(n, max_candidates)
+    idx = jnp.arange(max_candidates, dtype=jnp.int32)
+    pos = lo + idx
+    valid = (idx < n) & any_real
+    cand = index.postings[jnp.clip(pos, 0, index.n_postings - 1)]
+    cand = jnp.where(valid, cand, jnp.int32(2**31 - 1))
+    score = jnp.where(
+        valid, index.impacts[jnp.clip(pos, 0, index.n_postings - 1)].astype(jnp.float32), 0.0
+    )
+
+    def probe_one(i, carry):
+        valid, score = carry
+        t = terms[i]
+        is_real = (t >= 0) & (i != driver)
+        member, imp = probe_term(index, jnp.maximum(t, 0), cand)
+        valid = valid & (member | ~is_real)
+        score = score + jnp.where(is_real, imp, 0.0)
+        return valid, score
+
+    valid, score = jax.lax.fori_loop(0, d, probe_one, (valid, score))
+    cand = jnp.where(valid, cand, jnp.int32(2**31 - 1))
+    score = jnp.where(valid, score, 0.0)
+    return cand, valid, score
+
+
+def text_score_of_docs(
+    index: TextIndex,
+    terms: jax.Array,  # i32[d] padded with -1
+    doc_ids: jax.Array,  # i32[C]
+) -> tuple[jax.Array, jax.Array]:
+    """AND-semantics text score for arbitrary candidate docs.
+
+    Returns (match bool[C], score f32[C]); ``match`` requires every valid
+    query term to occur in the doc.
+    """
+    d = terms.shape[0]
+
+    def probe_one(i, carry):
+        match, score = carry
+        t = terms[i]
+        is_real = t >= 0
+        member, imp = probe_term(index, jnp.maximum(t, 0), doc_ids)
+        match = match & (member | ~is_real)
+        score = score + jnp.where(is_real, imp, 0.0)
+        return match, score
+
+    match0 = jnp.ones(doc_ids.shape, dtype=bool)
+    score0 = jnp.zeros(doc_ids.shape, dtype=jnp.float32)
+    match, score = jax.lax.fori_loop(0, d, probe_one, (match0, score0))
+    return match, score

@@ -1,0 +1,3 @@
+from repro.corpus.synth import SynthCorpus, make_corpus, make_query_trace
+
+__all__ = ["SynthCorpus", "make_corpus", "make_query_trace"]

@@ -1,0 +1,139 @@
+"""Synthetic geo web corpus + query traces.
+
+Models the workload of the paper's evaluation (a national-domain crawl with
+extracted footprints, plus a realistic geographic query trace):
+
+* **Places**: ``n_cities`` city centers in the unit square with power-law
+  populations; each city has a radius ~ sqrt(population).
+* **Documents**: term ids drawn from a Zipf distribution over ``n_terms``;
+  each document is "about" 1–3 places — its footprint is 1..R rectangles
+  around those places (complete-address-style small rects with high
+  amplitude, town-name-style larger rects with low amplitude — paper fig. 1
+  split footprints).  A fraction of documents is non-geographic (empty
+  footprint never happens here: the paper's engine only indexes docs with
+  footprints; non-geo docs get a country-wide low-amplitude rect).
+* **Queries**: ``d`` terms from the same Zipf head + a footprint around a
+  random city with town/city/region extent.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.algorithms import QueryBatch
+import jax.numpy as jnp
+
+
+@dataclass
+class SynthCorpus:
+    doc_terms: list[np.ndarray]
+    doc_rects: np.ndarray  # [N, R, 4]
+    doc_amps: np.ndarray  # [N, R]
+    pagerank: np.ndarray  # [N]
+    n_terms: int
+    cities: np.ndarray  # [C, 3]: x, y, radius
+
+
+def make_corpus(
+    n_docs: int = 2000,
+    n_terms: int = 500,
+    n_cities: int = 32,
+    max_rects: int = 4,
+    doc_len: int = 32,
+    zipf_a: float = 1.3,
+    seed: int = 0,
+) -> SynthCorpus:
+    rng = np.random.default_rng(seed)
+    # cities: power-law sizes
+    cx = rng.uniform(0.05, 0.95, n_cities)
+    cy = rng.uniform(0.05, 0.95, n_cities)
+    pop = rng.zipf(1.5, n_cities).astype(np.float64)
+    pop = pop / pop.max()
+    radius = 0.01 + 0.06 * np.sqrt(pop)
+    cities = np.stack([cx, cy, radius], axis=1).astype(np.float32)
+    city_p = pop / pop.sum()
+
+    # documents
+    doc_terms = []
+    rects = np.zeros((n_docs, max_rects, 4), dtype=np.float32)
+    rects[:, :, 0] = 1.0  # empty-rect padding (x1 < x0)
+    rects[:, :, 1] = 1.0
+    amps = np.zeros((n_docs, max_rects), dtype=np.float32)
+    for i in range(n_docs):
+        terms = np.minimum(rng.zipf(zipf_a, doc_len) - 1, n_terms - 1)
+        doc_terms.append(terms.astype(np.int32))
+        n_places = rng.integers(1, max_rects + 1)
+        chosen = rng.choice(n_cities, size=n_places, p=city_p, replace=True)
+        for j, c in enumerate(chosen):
+            x, y, r = cities[c]
+            # address-style small rect (high amp) or town-style larger (low amp)
+            if rng.random() < 0.5:
+                w = r * rng.uniform(0.05, 0.2)
+                amp = rng.uniform(0.7, 1.0)
+            else:
+                w = r * rng.uniform(0.5, 1.5)
+                amp = rng.uniform(0.2, 0.6)
+            px = np.clip(x + rng.normal(0, r / 2), 0.001, 0.999)
+            py = np.clip(y + rng.normal(0, r / 2), 0.001, 0.999)
+            x0, x1 = np.clip(px - w, 0, 1), np.clip(px + w, 0, 1)
+            y0, y1 = np.clip(py - w, 0, 1), np.clip(py + w, 0, 1)
+            if x1 <= x0 or y1 <= y0:
+                continue
+            rects[i, j] = (x0, y0, x1, y1)
+            amps[i, j] = amp
+
+    pagerank = rng.pareto(2.0, n_docs).astype(np.float32)
+    pagerank = pagerank / max(pagerank.max(), 1e-9)
+    return SynthCorpus(doc_terms, rects, amps, pagerank, n_terms, cities)
+
+
+def make_query_trace(
+    corpus: SynthCorpus,
+    n_queries: int = 64,
+    d_terms: int = 4,
+    q_rects: int = 2,
+    zipf_a: float = 1.3,
+    seed: int = 1,
+    from_docs: bool = True,
+) -> QueryBatch:
+    """Query trace: terms + footprints around cities.
+
+    ``from_docs=True`` samples query terms from a random document (queries
+    correlate with content, every conjunction has ≥ 1 match — realistic
+    trace); otherwise draws independent Zipf terms.  Extents mix town
+    (~0.3·r), city (~1·r) and region (~3·r) scales, matching the paper's
+    town/city/region query classes.
+    """
+    rng = np.random.default_rng(seed)
+    n_cities = len(corpus.cities)
+    terms = np.full((n_queries, d_terms), -1, dtype=np.int32)
+    rects = np.zeros((n_queries, q_rects, 4), dtype=np.float32)
+    rects[:, :, 0] = 1.0
+    rects[:, :, 1] = 1.0
+    amps = np.zeros((n_queries, q_rects), dtype=np.float32)
+    scales = np.array([0.3, 1.0, 3.0])
+    for i in range(n_queries):
+        nt = rng.integers(1, d_terms + 1)
+        if from_docs:
+            doc = corpus.doc_terms[rng.integers(0, len(corpus.doc_terms))]
+            t = np.unique(rng.choice(doc, size=min(nt, len(doc)), replace=False))
+        else:
+            t = np.unique(np.minimum(rng.zipf(zipf_a, nt) - 1, corpus.n_terms - 1))
+        terms[i, : len(t)] = t
+        c = rng.integers(0, n_cities)
+        x, y, r = corpus.cities[c]
+        nr = rng.integers(1, q_rects + 1)
+        for j in range(nr):
+            w = r * scales[rng.integers(0, 3)] * rng.uniform(0.5, 1.0)
+            px = np.clip(x + rng.normal(0, r / 4), 0.001, 0.999)
+            py = np.clip(y + rng.normal(0, r / 4), 0.001, 0.999)
+            x0, x1 = np.clip(px - w, 0, 1), np.clip(px + w, 0, 1)
+            y0, y1 = np.clip(py - w, 0, 1), np.clip(py + w, 0, 1)
+            if x1 <= x0 or y1 <= y0:
+                continue
+            rects[i, j] = (x0, y0, x1, y1)
+            amps[i, j] = 1.0
+    return QueryBatch(
+        terms=jnp.asarray(terms), rects=jnp.asarray(rects), amps=jnp.asarray(amps)
+    )

@@ -1,0 +1,116 @@
+"""Synthetic recsys batches (Criteo/Avazu/Alibaba-style), deterministic in
+(seed, step) like the LM pipeline."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _key(seed: int, step: int) -> jax.Array:
+    return jax.random.fold_in(jax.random.key(seed), step)
+
+
+def ctr_batch(
+    batch: int,
+    n_dense: int,
+    vocab_sizes: tuple[int, ...],
+    seed: int = 0,
+    step: int = 0,
+) -> dict:
+    key = _key(seed, step)
+    kd, ks, kl = jax.random.split(key, 3)
+    vs = jnp.asarray(vocab_sizes, jnp.int32)
+    # zipf-ish skew: square a uniform to concentrate mass at low ids
+    u = jax.random.uniform(ks, (batch, len(vocab_sizes)))
+    sparse = (u * u * vs[None, :]).astype(jnp.int32)
+    out = {
+        "sparse": sparse,
+        "label": (jax.random.uniform(kl, (batch,)) < 0.25).astype(jnp.float32),
+    }
+    if n_dense > 0:
+        out["dense"] = jax.random.normal(kd, (batch, n_dense), jnp.float32)
+    return out
+
+
+def ctr_input_specs(batch: int, n_dense: int, n_sparse: int) -> dict:
+    out = {
+        "sparse": jax.ShapeDtypeStruct((batch, n_sparse), jnp.int32),
+        "label": jax.ShapeDtypeStruct((batch,), jnp.float32),
+    }
+    if n_dense > 0:
+        out["dense"] = jax.ShapeDtypeStruct((batch, n_dense), jnp.float32)
+    return out
+
+
+def bst_batch(
+    batch: int, n_items: int, seq_len: int, n_other: int, field_vocab: int,
+    seed: int = 0, step: int = 0,
+) -> dict:
+    key = _key(seed, step)
+    kh, kt, ko, kl = jax.random.split(key, 4)
+    return {
+        "history": jax.random.randint(kh, (batch, seq_len), 0, n_items, jnp.int32),
+        "target": jax.random.randint(kt, (batch,), 0, n_items, jnp.int32),
+        "other": jax.random.randint(ko, (batch, n_other), 0, field_vocab, jnp.int32),
+        "label": (jax.random.uniform(kl, (batch,)) < 0.25).astype(jnp.float32),
+    }
+
+
+def bst_input_specs(batch: int, seq_len: int, n_other: int) -> dict:
+    return {
+        "history": jax.ShapeDtypeStruct((batch, seq_len), jnp.int32),
+        "target": jax.ShapeDtypeStruct((batch,), jnp.int32),
+        "other": jax.ShapeDtypeStruct((batch, n_other), jnp.int32),
+        "label": jax.ShapeDtypeStruct((batch,), jnp.float32),
+    }
+
+
+def two_tower_batch(
+    batch: int, n_users: int, n_items: int, n_user_fields: int, n_item_fields: int,
+    field_vocab: int, hist_len: int, seed: int = 0, step: int = 0,
+) -> dict:
+    key = _key(seed, step)
+    ku, kf, kh, kt, ki, kq = jax.random.split(key, 6)
+    return {
+        "user_id": jax.random.randint(ku, (batch,), 0, n_users, jnp.int32),
+        "user_fields": jax.random.randint(kf, (batch, n_user_fields), 0, field_vocab, jnp.int32),
+        "history": jax.random.randint(kh, (batch, hist_len), -1, n_items, jnp.int32),
+        "target": jax.random.randint(kt, (batch,), 0, n_items, jnp.int32),
+        "item_fields": jax.random.randint(ki, (batch, n_item_fields), 0, field_vocab, jnp.int32),
+        "logq": jnp.log(jax.random.uniform(kq, (batch,), minval=1e-6, maxval=1e-3)),
+    }
+
+
+def two_tower_input_specs(batch, n_user_fields, n_item_fields, hist_len) -> dict:
+    return {
+        "user_id": jax.ShapeDtypeStruct((batch,), jnp.int32),
+        "user_fields": jax.ShapeDtypeStruct((batch, n_user_fields), jnp.int32),
+        "history": jax.ShapeDtypeStruct((batch, hist_len), jnp.int32),
+        "target": jax.ShapeDtypeStruct((batch,), jnp.int32),
+        "item_fields": jax.ShapeDtypeStruct((batch, n_item_fields), jnp.int32),
+        "logq": jax.ShapeDtypeStruct((batch,), jnp.float32),
+    }
+
+
+# classic Criteo-Kaggle per-field vocabulary sizes (26 categorical fields)
+CRITEO_VOCABS = (
+    1460, 583, 10_131_227, 2_202_608, 305, 24, 12_517, 633, 3, 93_145, 5_683,
+    8_351_593, 3_194, 27, 14_992, 5_461_306, 10, 5_652, 2_173, 4, 7_046_547,
+    18, 15, 286_181, 105, 142_572,
+)
+
+
+def avazu_like_vocabs(n_fields: int = 39, seed: int = 3) -> tuple[int, ...]:
+    """Mixed small/large vocabularies for AutoInt's 39 fields."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n_fields):
+        r = rng.random()
+        if r < 0.5:
+            out.append(int(rng.integers(4, 1000)))
+        elif r < 0.85:
+            out.append(int(rng.integers(1000, 100_000)))
+        else:
+            out.append(int(rng.integers(100_000, 3_000_000)))
+    return tuple(out)

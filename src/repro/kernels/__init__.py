@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the paper's query-processing hot spots.
+
+geo_score      -- per-toe-print rectangle-intersection scoring (precise geo scores)
+bitmap_filter  -- block-bitmap conjunction: u32 AND + SWAR popcount
+sweep_score    -- FUSED k-sweep fetch + scoring: scalar-prefetch-driven
+                  BlockSpecs stream each sweep through VMEM and score
+                  in-register (the K-SWEEP hot path as one kernel)
+
+Each package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrappers),
+ref.py (pure-jnp oracle).
+"""

@@ -1,0 +1,1 @@
+from repro.kernels.bitmap_filter.ops import *  # noqa: F401,F403

@@ -1,0 +1,44 @@
+"""jit'd public wrappers for the bitmap_filter Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bitmap_filter.kernel import (
+    BLOCK_ROWS,
+    LANES,
+    bitmap_and_popcount_planar,
+)
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitmap_and_popcount(
+    bitmaps: jax.Array,  # u32[d, W]
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """AND the d term bitmaps and popcount survivors. Returns (u32[W], i32[W])."""
+    if interpret is None:
+        interpret = _default_interpret()
+    d, W = bitmaps.shape
+    tile = BLOCK_ROWS * LANES
+    Wp = (W + tile - 1) // tile * tile
+    bm = jnp.pad(bitmaps, ((0, 0), (0, Wp - W)))
+    bm = bm.reshape(d, Wp // LANES, LANES)
+    anded, counts = bitmap_and_popcount_planar(bm, interpret=interpret)
+    return anded.reshape(Wp)[:W], counts.reshape(Wp)[:W]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def conjunction_block_prefilter(
+    term_bitmaps: jax.Array,  # u32[d, W] (gathered rows for the query terms)
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Survivor-document count of the conjunction (scalar i64)."""
+    _, counts = bitmap_and_popcount(term_bitmaps, interpret=interpret)
+    return counts.sum()

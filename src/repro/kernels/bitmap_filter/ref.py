@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the bitmap_filter kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bitmap_and_popcount_ref(bitmaps: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """bitmaps u32[d, W] → (anded u32[W], counts i32[W])."""
+    anded = bitmaps[0]
+    for i in range(1, bitmaps.shape[0]):
+        anded = anded & bitmaps[i]
+    counts = jax.lax.population_count(anded).astype(jnp.int32)
+    return anded, counts

@@ -1,0 +1,1 @@
+from repro.kernels.geo_score.ops import *  # noqa: F401,F403

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the geo_score kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def geo_score_toeprints_ref(
+    rects: jax.Array,  # f32[T, 4]
+    amps: jax.Array,  # f32[T]
+    q_rects: jax.Array,  # f32[Q, 4]
+    q_amps: jax.Array,  # f32[Q]
+) -> jax.Array:
+    """out[t] = amp[t] * Σ_j area(rect[t] ∩ qrect[j]) * qamp[j]  (f32[T])."""
+    ix0 = jnp.maximum(rects[:, None, 0], q_rects[None, :, 0])
+    iy0 = jnp.maximum(rects[:, None, 1], q_rects[None, :, 1])
+    ix1 = jnp.minimum(rects[:, None, 2], q_rects[None, :, 2])
+    iy1 = jnp.minimum(rects[:, None, 3], q_rects[None, :, 3])
+    area = jnp.maximum(ix1 - ix0, 0.0) * jnp.maximum(iy1 - iy0, 0.0)
+    return amps * jnp.sum(area * q_amps[None, :], axis=1)

@@ -1,0 +1,1 @@
+from repro.kernels.sweep_score.ops import sweep_score  # noqa: F401

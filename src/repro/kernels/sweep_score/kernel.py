@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: fused k-sweep fetch + geo scoring.
+
+The K-SWEEP hot path does two HBM passes in the reference implementation:
+(1) ``dynamic_slice`` the toe-print store for each sweep, (2) score the
+fetched toe prints against the query footprint.  This kernel FUSES them:
+the grid walks ``(sweep, block-within-sweep)`` and the input BlockSpec
+index_map is driven by the **scalar-prefetched sweep starts** — each grid
+step DMAs the next VMEM tile of the Morton-ordered store directly from the
+sweep's dynamic offset and scores it in-register.  The fetched toe prints
+never round-trip through HBM.
+
+Layout mirrors kernels/geo_score: planar coordinate arrays with the lane
+dimension along toe prints ([rows, 128] f32 tiles), query rects unrolled
+from VMEM scalars.  Sweep starts are block-aligned by ops.py (rounded down
+to the 1024-element tile); masking against the true [start, end) range
+happens in ops.py where absolute positions are known.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+BLOCK_ROWS = 8
+TILE = BLOCK_ROWS * LANES  # toe prints per grid step
+Q_MAX = 8
+
+
+def _kernel(starts_ref, qr_ref, qa_ref, x0_ref, y0_ref, x1_ref, y1_ref, amp_ref, out_ref):
+    # starts_ref is scalar-prefetch (used only by the index maps)
+    x0 = x0_ref[...]
+    y0 = y0_ref[...]
+    x1 = x1_ref[...]
+    y1 = y1_ref[...]
+    acc = jnp.zeros_like(x0)
+    for j in range(Q_MAX):  # static unroll over query rects
+        qx0 = qr_ref[j, 0]
+        qy0 = qr_ref[j, 1]
+        qx1 = qr_ref[j, 2]
+        qy1 = qr_ref[j, 3]
+        w = jnp.maximum(jnp.minimum(x1, qx1) - jnp.maximum(x0, qx0), 0.0)
+        h = jnp.maximum(jnp.minimum(y1, qy1) - jnp.maximum(y0, qy0), 0.0)
+        acc = acc + (w * h) * qa_ref[j]
+    out_ref[...] = acc * amp_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("n_sweeps", "budget", "interpret"))
+def sweep_score_planar(
+    block_starts: jax.Array,  # i32[k] sweep starts in BLOCK units (rows/BLOCK_ROWS)
+    q_rects: jax.Array,  # f32[Q_MAX, 4]
+    q_amps: jax.Array,  # f32[Q_MAX]
+    x0: jax.Array,  # f32[rows, 128] — the ENTIRE toe-print store, planar
+    y0: jax.Array,
+    x1: jax.Array,
+    y1: jax.Array,
+    amp: jax.Array,
+    n_sweeps: int,
+    budget: int,  # toe prints fetched per sweep; multiple of TILE
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns per-sweep scores f32[k, budget // LANES, 128].
+
+    grid = (k, budget/TILE); block (i, j) reads store rows
+    ``block_starts[i] + j*BLOCK_ROWS`` — a streaming DMA from the sweep
+    offset, fused with scoring.
+    """
+    assert budget % TILE == 0
+    rows = x0.shape[0]
+    n_blocks = budget // TILE
+
+    def in_map(i, j, starts):
+        # starts[i] is in BLOCK units (TILE-aligned rows / BLOCK_ROWS)
+        return (starts[i] + j, 0)
+
+    plane = pl.BlockSpec((BLOCK_ROWS, LANES), in_map)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_sweeps, n_blocks),
+        in_specs=[
+            pl.BlockSpec((Q_MAX, 4), lambda i, j, s: (0, 0)),
+            pl.BlockSpec((Q_MAX,), lambda i, j, s: (0,)),
+            plane, plane, plane, plane, plane,
+        ],
+        out_specs=pl.BlockSpec(
+            (1, BLOCK_ROWS, LANES), lambda i, j, s: (i, j, 0)
+        ),
+    )
+    out = pl.pallas_call(
+        lambda s_ref, qr, qa, a, b, c, d, e, o: _kernel(
+            s_ref, qr, qa, a, b, c, d, e, o.at[0]
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(
+            (n_sweeps, budget // LANES, LANES), jnp.float32
+        ),
+        interpret=interpret,
+    )(block_starts, q_rects, q_amps, x0, y0, x1, y1, amp)
+    return out

@@ -1,0 +1,82 @@
+"""jit'd wrapper for the fused sweep_score kernel.
+
+Handles: planarization of the toe-print store, block alignment of sweep
+starts (the kernel DMAs TILE-aligned blocks; we align the window down and
+enlarge the in-kernel budget by one tile so the true [start, end) range is
+always covered), and masking back to exact sweep bounds.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sweep_score.kernel import (
+    BLOCK_ROWS, LANES, Q_MAX, TILE, sweep_score_planar,
+)
+
+INVALID = jnp.int32(2**31 - 1)
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("budget", "interpret"))
+def sweep_score(
+    tp_rects: jax.Array,  # [T, 4] toe-print store (any float dtype)
+    tp_amps: jax.Array,  # [T]
+    sweep_starts: jax.Array,  # i32[k] element offsets (INVALID padded)
+    sweep_ends: jax.Array,  # i32[k]
+    q_rects: jax.Array,  # [Q, 4], Q <= Q_MAX
+    q_amps: jax.Array,  # [Q]
+    budget: int,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused fetch+score: (scores f32[k, budget], valid bool[k, budget])."""
+    if interpret is None:
+        interpret = _default_interpret()
+    T = tp_rects.shape[0]
+    k = sweep_starts.shape[0]
+    Q = q_rects.shape[0]
+    assert Q <= Q_MAX
+
+    qr = jnp.zeros((Q_MAX, 4), jnp.float32).at[:Q].set(q_rects.astype(jnp.float32))
+    qa = jnp.zeros((Q_MAX,), jnp.float32).at[:Q].set(q_amps.astype(jnp.float32))
+
+    # planarize the store, padded to a tile multiple
+    pad_budget = (budget + TILE - 1) // TILE * TILE + TILE  # +1 tile: alignment slop
+    Tp = (T + TILE - 1) // TILE * TILE + pad_budget  # tail room for last sweep
+
+    def plane(v, fill):
+        v = jnp.pad(v.astype(jnp.float32), (0, Tp - T), constant_values=fill)
+        return v.reshape(Tp // LANES, LANES)
+
+    x0 = plane(tp_rects[:, 0], 1.0)  # empty-rect padding
+    y0 = plane(tp_rects[:, 1], 1.0)
+    x1 = plane(tp_rects[:, 2], 0.0)
+    y1 = plane(tp_rects[:, 3], 0.0)
+    am = plane(tp_amps, 0.0)
+
+    safe = jnp.where(sweep_starts == INVALID, 0, sweep_starts)
+    aligned = (safe // TILE) * TILE  # align down to tile
+    block_starts = (aligned // TILE).astype(jnp.int32)  # BLOCK units
+
+    out = sweep_score_planar(
+        block_starts, qr, qa, x0, y0, x1, y1, am,
+        n_sweeps=k, budget=pad_budget, interpret=interpret,
+    )  # [k, pad_budget/LANES, LANES]
+    flat = out.reshape(k, pad_budget)
+    # re-window to exactly [start, start+budget) and mask to [start, end)
+    offs = safe - aligned  # [k] in [0, TILE)
+    idx = offs[:, None] + jnp.arange(budget, dtype=jnp.int32)[None, :]
+    scores = jnp.take_along_axis(flat, idx, axis=1)
+    pos = safe[:, None] + jnp.arange(budget, dtype=jnp.int32)[None, :]
+    valid = (
+        (sweep_starts[:, None] != INVALID)
+        & (pos >= sweep_starts[:, None])
+        & (pos < sweep_ends[:, None])
+        & (pos < T)
+    )
+    return jnp.where(valid, scores, 0.0), valid

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the fused sweep_score kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sweep_score_ref(
+    tp_rects: jax.Array,  # f32[T, 4] (Morton-ordered store)
+    tp_amps: jax.Array,  # f32[T]
+    sweep_starts: jax.Array,  # i32[k] element offsets (may be unaligned)
+    sweep_ends: jax.Array,  # i32[k]
+    q_rects: jax.Array,  # f32[Q, 4]
+    q_amps: jax.Array,  # f32[Q]
+    budget: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Fetch-then-score reference: returns (scores f32[k, budget],
+    valid bool[k, budget]) for each sweep's [start, start+budget) window,
+    masked to [start, end)."""
+    T = tp_rects.shape[0]
+
+    def one(s, e):
+        start = jnp.where(s == jnp.int32(2**31 - 1), 0, s)
+        pos = start + jnp.arange(budget, dtype=jnp.int32)
+        safe = jnp.clip(pos, 0, T - 1)
+        r = tp_rects[safe].astype(jnp.float32)
+        a = tp_amps[safe].astype(jnp.float32)
+        ok = (s != jnp.int32(2**31 - 1)) & (pos >= s) & (pos < e) & (pos < T)
+        ix0 = jnp.maximum(r[:, None, 0], q_rects[None, :, 0])
+        iy0 = jnp.maximum(r[:, None, 1], q_rects[None, :, 1])
+        ix1 = jnp.minimum(r[:, None, 2], q_rects[None, :, 2])
+        iy1 = jnp.minimum(r[:, None, 3], q_rects[None, :, 3])
+        area = jnp.maximum(ix1 - ix0, 0.0) * jnp.maximum(iy1 - iy0, 0.0)
+        sc = a * jnp.sum(area * q_amps[None, :], axis=1)
+        return jnp.where(ok, sc, 0.0), ok
+
+    return jax.vmap(one)(sweep_starts, sweep_ends)

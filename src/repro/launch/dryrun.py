@@ -1,0 +1,193 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the production
+meshes, prove memory fit, extract roofline terms.
+
+MUST be run as a module: ``PYTHONPATH=src python -m repro.launch.dryrun``
+(the XLA_FLAGS line above precedes every jax import — jax locks the device
+count at first init).
+
+Methodology (DESIGN.md §7): per cell we compile
+  A. the production program (scan-over-layers)    → memory_analysis / fit
+  B. a 1-layer unrolled measurement variant        → cost & collective bytes
+  C. a 2-layer unrolled measurement variant        → per-layer slope
+and extrapolate  cost = B + (L−1)·(C−B).  XLA's HloCostAnalysis counts a
+while-loop body ONCE (not × trip count), so the scanned program A
+undercounts FLOPs for deep models; the B/C pair measures the exact
+per-layer increment from compiled HLO instead.  Measurement variants set
+``attn_chunk = seq_len`` so the flash-attention inner scan also has exactly
+one (fully counted) iteration.  Non-scanned families (recsys, geoweb) and
+the fully-unrolled EGNN use a single program.
+
+Outputs one JSON record per cell to ``--out`` (incremental, crash-safe).
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import get_arch, list_archs  # noqa: E402
+from repro.launch import roofline as rf  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import build_cell  # noqa: E402
+from repro.sharding.specs import use_sharding  # noqa: E402
+
+
+def _compile(spec, shape, mesh, lm_overrides=None):
+    with use_sharding(mesh):
+        cell = build_cell(spec, shape, mesh, lm_overrides=lm_overrides)
+        with mesh:
+            if hasattr(cell.fn, "lower"):  # already-jit fn (geoweb shard_map)
+                lowered = cell.fn.lower(*cell.args)
+            else:
+                lowered = jax.jit(cell.fn, donate_argnums=cell.donate).lower(*cell.args)
+            return cell, lowered.compile()
+
+
+def _cost(compiled):
+    ca = compiled.cost_analysis() or {}
+    coll = rf.collective_bytes(compiled.as_text())
+    return (
+        float(ca.get("flops", 0.0)),
+        float(ca.get("bytes accessed", 0.0)),
+        coll,
+    )
+
+
+def run_cell(spec, shape, mesh, mesh_name: str):
+    t0 = time.time()
+    # --- program A: production program — memory fit proof ---
+    cell, compiled_A = _compile(spec, shape, mesh)
+    mem = compiled_A.memory_analysis()
+    t_a = time.time() - t0
+
+    # --- cost measurement ---
+    if spec.family == "lm":
+        L = spec.config.n_layers
+        seq = shape.params["seq_len"]
+        over = dict(scan_unroll=True, attn_chunk=seq)
+        _, c1 = _compile(spec, shape, mesh, lm_overrides={**over, "n_layers": 1})
+        f1, b1, coll1 = _cost(c1)
+        del c1
+        _, c2 = _compile(spec, shape, mesh, lm_overrides={**over, "n_layers": 2})
+        f2, b2, coll2 = _cost(c2)
+        del c2
+        flops = f1 + (L - 1) * (f2 - f1)
+        bytes_ = b1 + (L - 1) * (b2 - b1)
+        coll = {
+            k: coll1.get(k, 0) + (L - 1) * (coll2.get(k, 0) - coll1.get(k, 0))
+            for k in set(coll1) | set(coll2)
+        }
+        method = "L-extrapolated(1,2 unrolled)"
+    else:
+        flops, bytes_, coll = _cost(compiled_A)
+        method = "direct"
+    t_all = time.time() - t0
+
+    r = rf.Roofline(
+        arch=spec.name, shape=shape.name, mesh=mesh_name, n_devices=mesh.size,
+        flops_per_dev=flops, bytes_per_dev=bytes_,
+        coll_bytes_per_dev=float(sum(coll.values())), coll_breakdown=coll,
+        model_flops=cell.model_flops,
+        mem_per_dev_bytes=float(
+            mem.temp_size_in_bytes + mem.argument_size_in_bytes
+            + mem.output_size_in_bytes - mem.alias_size_in_bytes
+        ),
+        note=cell.note,
+    )
+    row = r.row()
+    row["method"] = method
+    row["t_compile_s"] = round(t_all, 1)
+    row["memory_analysis"] = {
+        "argument_size_in_bytes": mem.argument_size_in_bytes,
+        "output_size_in_bytes": mem.output_size_in_bytes,
+        "temp_size_in_bytes": mem.temp_size_in_bytes,
+        "alias_size_in_bytes": mem.alias_size_in_bytes,
+    }
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="single arch (default: all)")
+    ap.add_argument("--shape", default=None, help="single shape (default: all)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="dryrun_results.jsonl")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_pod_16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_pod_2x16x16", make_production_mesh(multi_pod=True)))
+
+    done = set()
+    if args.skip_existing and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if "error" not in r:
+                        done.add((r["arch"], r["shape"], r["mesh"]))
+                except Exception:
+                    pass
+
+    archs = [args.arch] if args.arch else list_archs()
+    n_ok = n_skip = n_fail = 0
+    with open(args.out, "a") as out:
+        for name in archs:
+            spec = get_arch(name)
+            for shape in spec.shapes:
+                if args.shape and shape.name != args.shape:
+                    continue
+                for mesh_name, mesh in meshes:
+                    key = (spec.name, shape.name, mesh_name)
+                    if key in done:
+                        continue
+                    if shape.skip:
+                        print(f"SKIP  {spec.name} × {shape.name} × {mesh_name}: {shape.skip}",
+                              flush=True)
+                        out.write(json.dumps({
+                            "arch": spec.name, "shape": shape.name,
+                            "mesh": mesh_name, "skipped": shape.skip,
+                        }) + "\n")
+                        out.flush()
+                        n_skip += 1
+                        continue
+                    try:
+                        row = run_cell(spec, shape, mesh, mesh_name)
+                        out.write(json.dumps(row) + "\n")
+                        out.flush()
+                        n_ok += 1
+                        print(
+                            f"OK    {spec.name} × {shape.name} × {mesh_name}: "
+                            f"hbm={row['hbm_per_dev_GB']:.2f}GB "
+                            f"t_comp={row['t_compute_s']:.2e}s "
+                            f"t_mem={row['t_memory_s']:.2e}s "
+                            f"t_coll={row['t_collective_s']:.2e}s "
+                            f"dom={row['bottleneck']} "
+                            f"frac={row['roofline_fraction']:.3f} "
+                            f"(compile {row['t_compile_s']}s)",
+                            flush=True,
+                        )
+                    except Exception as e:
+                        n_fail += 1
+                        print(f"FAIL  {spec.name} × {shape.name} × {mesh_name}: {e}",
+                              flush=True)
+                        traceback.print_exc()
+                        out.write(json.dumps({
+                            "arch": spec.name, "shape": shape.name,
+                            "mesh": mesh_name, "error": str(e)[:500],
+                        }) + "\n")
+                        out.flush()
+    print(f"\ndry-run complete: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

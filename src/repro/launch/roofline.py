@@ -1,0 +1,172 @@
+"""Roofline analysis from a compiled dry-run artifact.
+
+Three terms per (arch × shape × mesh), all in seconds (v5e constants):
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = collective_bytes_per_device / link_bw
+
+``cost_analysis()`` on an SPMD-partitioned module reports *per-device*
+FLOPs/bytes (verified empirically in tests).  Collective bytes are parsed
+from the compiled HLO text: the sum of output-shape bytes of every
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute
+op.  ``MODEL_FLOPS / (HLO_FLOPs × n_devices)`` measures how much compiled
+compute is useful (remat & padding waste show up here).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+LINK_BW = 50e9  # bytes/s per ICI link (conservative single-link figure)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# matches e.g. "f32[128,512]{1,0}" or "bf16[4096]" or "(f32[8], s32[8])"
+_SHAPE_RE = re.compile(r"(pred|[sufc]\d+|bf16)\[([\d,]*)\]")
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:%\S+\s*=\s*)?"  # optional "%name = "
+    r"(\(?[a-z0-9\[\],{}/ ()]*\)?)\s*"  # output shape(s)
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+    re.IGNORECASE,
+)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims.strip():
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-collective-type payload bytes (per device) from HLO text.
+
+    all-gather / all-reduce: output size ≈ payload.  reduce-scatter outputs
+    the already-scattered (small) shard — scale by the replica-group size to
+    recover the per-device input payload.
+    """
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.match(line)
+        if not m:
+            continue
+        shapes, kind = m.group(1), m.group(2).lower()
+        # avoid double counting async pairs: skip "-done" ops
+        if "-done(" in line:
+            continue
+        b = _shape_bytes(shapes)
+        if kind == "reduce-scatter":
+            g = _GROUPS_RE.search(line)
+            if g:
+                b *= int(g.group(2))
+            elif "replica_groups={{" in line:
+                first = line.split("replica_groups={{", 1)[1].split("}", 1)[0]
+                b *= first.count(",") + 1
+        out[kind] = out.get(kind, 0) + b
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    flops_per_dev: float
+    bytes_per_dev: float
+    coll_bytes_per_dev: float
+    coll_breakdown: dict[str, int]
+    model_flops: float  # analytic useful flops, GLOBAL
+    mem_per_dev_bytes: float  # from memory_analysis (peak/temp+args)
+    note: str = ""
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_dev / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_dev / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_dev / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flop_ratio(self) -> float:
+        total = self.flops_per_dev * self.n_devices
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-FLOPs MFU bound implied by the dominant term:
+        (model_flops / n_dev / peak) / max(term)."""
+        t_useful = self.model_flops / self.n_devices / PEAK_FLOPS
+        t_dom = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_useful / t_dom if t_dom > 0 else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "devices": self.n_devices,
+            "flops/dev": self.flops_per_dev,
+            "bytes/dev": self.bytes_per_dev,
+            "coll_bytes/dev": self.coll_bytes_per_dev,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_flop_ratio": self.useful_flop_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "hbm_per_dev_GB": self.mem_per_dev_bytes / 1e9,
+            "collectives": self.coll_breakdown,
+            "note": self.note,
+        }
+
+
+def analyze(compiled, *, arch: str, shape: str, mesh_name: str, n_devices: int,
+            model_flops: float, note: str = "") -> Roofline:
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    mem = (
+        ma.temp_size_in_bytes + ma.argument_size_in_bytes + ma.output_size_in_bytes
+        - ma.alias_size_in_bytes
+    )
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, n_devices=n_devices,
+        flops_per_dev=float(ca.get("flops", 0.0)),
+        bytes_per_dev=float(ca.get("bytes accessed", 0.0)),
+        coll_bytes_per_dev=float(sum(coll.values())),
+        coll_breakdown=coll,
+        model_flops=model_flops,
+        mem_per_dev_bytes=float(mem),
+        note=note,
+    )

@@ -1,0 +1,107 @@
+"""Training launcher: ``PYTHONPATH=src python -m repro.launch.train --arch <id>``.
+
+Runs real training steps on the host's devices (reduced config by default —
+this container is a single CPU; pass ``--full`` on a real cluster), with
+checkpointing, fault injection, and deterministic data.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_arch
+from repro.data.graph import full_graph_batch, make_powerlaw_graph
+from repro.data.lm import LMDataConfig, lm_batch
+from repro.data.recsys import bst_batch, ctr_batch, two_tower_batch
+from repro.launch.mesh import make_host_mesh
+from repro.models import egnn as egnn_lib
+from repro.models import recsys as rec_lib
+from repro.models import transformer as tf_lib
+from repro.sharding.specs import use_sharding
+from repro.train.loop import LoopConfig, make_train_step, run
+from repro.train.optimizer import OptimizerConfig, init_opt_state
+
+
+def loss_and_batch_fns(spec, cfg, batch_size: int, seq_len: int, seed: int):
+    if spec.family == "lm":
+        dc = LMDataConfig(vocab=cfg.vocab, seq_len=seq_len, global_batch=batch_size, seed=seed)
+        return (
+            lambda p, b: tf_lib.loss_fn(cfg, p, b),
+            lambda step: lm_batch(dc, step),
+        )
+    if spec.family == "gnn":
+        g = make_powerlaw_graph(512, 2048, cfg.d_feat, n_classes=max(cfg.n_classes, 1), seed=seed)
+        batch = full_graph_batch(g, edge_multiple=8)
+        return (lambda p, b: egnn_lib.loss_fn(cfg, p, b), lambda step: batch)
+    if spec.family == "recsys":
+        name = type(cfg).__name__
+        if name == "DCNv2Config":
+            return (
+                lambda p, b: rec_lib.dcn_v2_loss(cfg, p, b),
+                lambda step: ctr_batch(batch_size, cfg.n_dense, cfg.vocab_sizes, seed, step),
+            )
+        if name == "AutoIntConfig":
+            return (
+                lambda p, b: rec_lib.autoint_loss(cfg, p, b),
+                lambda step: ctr_batch(batch_size, 0, cfg.vocab_sizes, seed, step),
+            )
+        if name == "BSTConfig":
+            return (
+                lambda p, b: rec_lib.bst_loss(cfg, p, b),
+                lambda step: bst_batch(batch_size, cfg.n_items, cfg.seq_len,
+                                       cfg.n_other_fields, cfg.field_vocab, seed, step),
+            )
+        if name == "TwoTowerConfig":
+            return (
+                lambda p, b: rec_lib.two_tower_loss(cfg, p, b),
+                lambda step: two_tower_batch(batch_size, cfg.n_users, cfg.n_items,
+                                             cfg.n_user_fields, cfg.n_item_fields,
+                                             cfg.field_vocab, cfg.hist_len, seed, step),
+            )
+    raise ValueError(spec.family)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--full", action="store_true", help="use the full published config")
+    ap.add_argument("--simulate-failure", type=int, default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    spec = get_arch(args.arch)
+    if spec.family == "geoweb":
+        raise SystemExit("geoweb is a serving system: use repro.launch.serve")
+    cfg = spec.config if args.full else spec.smoke_config
+
+    mesh = make_host_mesh() if len(jax.devices()) > 1 else None
+    opt = OptimizerConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5 + 1),
+                          total_steps=args.steps)
+    loss_fn, batch_fn = loss_and_batch_fns(spec, cfg, args.batch_size, args.seq_len, args.seed)
+
+    with use_sharding(mesh):
+        step_fn = make_train_step(loss_fn, opt, microbatches=args.microbatches)
+
+        def init_state():
+            params = cfg.init(jax.random.key(args.seed))
+            return params, init_opt_state(opt, params)
+
+        loop = LoopConfig(
+            total_steps=args.steps, ckpt_every=args.ckpt_every,
+            ckpt_dir=args.ckpt_dir, log_every=max(args.steps // 20, 1),
+            simulate_failure_at=args.simulate_failure,
+        )
+        run(loop, step_fn, init_state, batch_fn)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,200 @@
+"""Shared transformer layers: RMSNorm, RoPE, GQA flash attention, SwiGLU.
+
+All functions are mesh-agnostic; sharding is expressed through logical-axis
+constraints (sharding/specs.shard) that resolve against whatever mesh is in
+context (or no-op on a single device).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.specs import get_context, shard
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding. x [..., S, H, Dh], positions [..., S] (int32)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # [..., S, half]
+    cos = jnp.cos(ang)[..., :, None, :]  # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def flash_attention(
+    q: jax.Array,  # [B, Sq, H, Dh]
+    k: jax.Array,  # [B, Skv, KVH, Dh]
+    v: jax.Array,  # [B, Skv, KVH, Dh]
+    *,
+    causal: bool = True,
+    q_offset: jax.Array | int = 0,
+    kv_valid_len: jax.Array | None = None,  # [B] or scalar; mask k_pos >= len
+    window: int | None = None,  # sliding-window attention (beyond-paper)
+    chunk: int = 512,
+) -> jax.Array:
+    """Chunked-KV attention with running softmax (flash-style, pure JAX).
+
+    Never materializes the [Sq, Skv] score matrix; memory is
+    O(Sq * chunk) per head. GQA via head grouping. Scores accumulate in f32.
+    """
+    B, Sq, H, Dh = q.shape
+    _, Skv, KVH, _ = k.shape
+    assert H % KVH == 0, (H, KVH)
+    G = H // KVH
+    scale = Dh**-0.5
+    qg = q.reshape(B, Sq, KVH, G, Dh)
+    chunk = min(chunk, Skv)
+    assert Skv % chunk == 0, (Skv, chunk)
+    n_chunks = Skv // chunk
+    q_pos = jnp.asarray(q_offset) + jnp.arange(Sq, dtype=jnp.int32)  # [Sq]
+
+    kc = k.reshape(B, n_chunks, chunk, KVH, Dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, KVH, Dh).transpose(1, 0, 2, 3, 4)
+    idxs = jnp.arange(n_chunks, dtype=jnp.int32)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        ci, kb, vb = xs  # kb/vb: [B, chunk, KVH, Dh]
+        k_pos = ci * chunk + jnp.arange(chunk, dtype=jnp.int32)  # [chunk]
+        s = jnp.einsum(
+            "bqhgd,bkhd->bqhgk", qg, kb, preferred_element_type=jnp.float32
+        ) * scale  # [B, Sq, KVH, G, chunk]
+        mask = jnp.ones((Sq, chunk), dtype=bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+        if kv_valid_len is not None:
+            vl = jnp.broadcast_to(jnp.asarray(kv_valid_len), (B,))
+            ok = (k_pos[None, :] < vl[:, None])[:, None, None, None, :]  # [B,1,1,1,chunk]
+            s = jnp.where(ok, s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # guard fully-masked rows
+        m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(jnp.isneginf(s), 0.0, p)
+        corr = jnp.exp(jnp.where(jnp.isneginf(m), m_safe * 0 - jnp.inf, m - m_safe))
+        corr = jnp.where(jnp.isneginf(m), 0.0, corr)
+        l = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bqhgk,bkhd->bqhgd", p.astype(vb.dtype), vb)
+        acc = acc * corr[..., None] + pv.astype(jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Sq, KVH, G), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KVH, G), jnp.float32)
+    acc0 = jnp.zeros((B, Sq, KVH, G, Dh), jnp.float32)
+    # checkpoint the chunk step: without it the scan's VJP stacks the per-
+    # chunk score/prob residuals — i.e. the full [Sq, Skv] attention matrix
+    # — and the flash formulation loses its memory advantage in backward.
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(step), (m0, l0, acc0), (idxs, kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Sq, H, Dh).astype(q.dtype)
+
+
+def attention_block(
+    x: jax.Array,  # [B, S, D]
+    p: dict,
+    cfg,
+    positions: jax.Array,
+    *,
+    k_cache: jax.Array | None = None,
+    v_cache: jax.Array | None = None,
+    cache_pos: jax.Array | int | None = None,
+    kv_valid_len: jax.Array | None = None,
+):
+    """GQA attention with optional KV cache (decode).
+
+    Returns (out [B, S, D], (k, v) new cache entries or full k/v).
+    """
+    B, S, D = x.shape
+    H, KVH, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    # Projections carry flattened (H·Dh) output dims so tensor parallelism
+    # never depends on head-count divisibility (DESIGN.md §5).
+    q = jnp.einsum("bsd,dz->bsz", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dz->bsz", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dz->bsz", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    # Attention-internal sharding is ADAPTIVE (EXPERIMENTS.md §Perf):
+    # * heads divide the model axis → head-parallel attention (Megatron-SP
+    #   boundary: seq-sharded outside, head-sharded inside). On olmoe this
+    #   removed the 2.7 GB/layer f32 full-seq gathers inside flash.
+    # * heads do NOT divide (qwen2.5: 40 q-heads, 8 kv-heads on model=16) →
+    #   sequence-parallel attention (heads replicated, q seq-sharded);
+    #   forcing head sharding there made XLA reshard mid-attention
+    #   (~1.2 TB/device all-reduce — refuted).
+    ctx = get_context()
+    model_sz = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape)).get("model", 1) if ctx.mesh else 1
+    head_parallel = (H % model_sz == 0) and (KVH % model_sz == 0)
+    if head_parallel:
+        q = shard(q, "batch", None, "qkv_out").reshape(B, S, H, Dh)
+        k = shard(k, "batch", None, "kv_out").reshape(B, S, KVH, Dh)
+        v = shard(v, "batch", None, "kv_out").reshape(B, S, KVH, Dh)
+    else:
+        q = shard(q, "batch", "seq", None).reshape(B, S, H, Dh)
+        k = shard(k, "batch", "seq", None).reshape(B, S, KVH, Dh)
+        v = shard(v, "batch", "seq", None).reshape(B, S, KVH, Dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    if k_cache is not None:
+        # decode: insert new kv at cache_pos, attend over the cache
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k.astype(k_cache.dtype), cache_pos, axis=1
+        )
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v.astype(v_cache.dtype), cache_pos, axis=1
+        )
+        out = flash_attention(
+            q,
+            k_cache.astype(q.dtype),
+            v_cache.astype(q.dtype),
+            causal=False,
+            kv_valid_len=(
+                kv_valid_len if kv_valid_len is not None else cache_pos + S
+            ),
+            window=cfg.attn_window,
+            chunk=cfg.attn_chunk,
+        )
+        new_kv = (k_cache, v_cache)
+    else:
+        out = flash_attention(
+            q, k, v, causal=True, window=cfg.attn_window, chunk=cfg.attn_chunk
+        )
+        new_kv = (k, v)
+    out = jnp.einsum("bsz,zd->bsd", out.reshape(B, S, H * Dh), p["wo"].astype(x.dtype))
+    return shard(out, "batch", "seq", "embed"), new_kv
+
+
+def swiglu(x: jax.Array, p: dict) -> jax.Array:
+    gate = jnp.einsum("bsd,df->bsf", x, p["wi_gate"].astype(x.dtype))
+    up = jnp.einsum("bsd,df->bsf", x, p["wi_up"].astype(x.dtype))
+    h = jax.nn.silu(gate) * up
+    # NOTE: keep the hidden activations seq-sharded ("seq" wins the model
+    # axis). The Megatron-style alternative — h sharded on ffn with full
+    # seq — was tried and REFUTED on qwen2.5-14b: XLA resharded gradients
+    # with ~1.4 TB/device of all-reduce (EXPERIMENTS.md §Perf).
+    h = shard(h, "batch", "seq", "ffn")
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(x.dtype))

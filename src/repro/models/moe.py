@@ -1,0 +1,134 @@
+"""Mixture-of-Experts FFN with top-k routing and GROUPED sort-based dispatch.
+
+Expert-parallel design (DESIGN.md §5): the expert dimension is sharded over
+the ``model`` mesh axis; dispatch groups are the batch dimension, which is
+sharded over ``data`` — so all routing bookkeeping (sort, position-in-expert,
+gather, combine scatter) stays LOCAL to a data shard, and the only
+cross-device movement is the expert all-to-all on the [B, E, C, D] dispatch
+tensor at the expert-parallel boundary.
+
+(History: a first implementation dispatched over the GLOBAL flattened token
+axis; its gather/scatter crossed data shards and XLA materialized ~300 GB of
+all-reduce per device per step on olmoe train_4k.  The grouped form below
+removed >90% of that — see EXPERIMENTS.md §Perf, olmoe iteration 1.)
+
+Per group g (one sequence):
+1. router logits → top-k experts per token, normalized weights;
+2. flatten (token, k) assignments, sort by expert id (S·K local sort);
+3. position-in-expert via sorted-run arithmetic; drop beyond capacity
+   C = ceil(factor · S · K / E);
+4. [E, C] slot→token maps, gather tokens → [E, C, D], batched expert FFN,
+   scatter-add back weighted by router probs.
+
+Aux load-balance loss (Switch-style) is computed globally.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.specs import shard
+
+
+def _dispatch_group(xs, top_e, top_p, E: int, C: int):
+    """Per-group dispatch. xs [S, D]; top_e/top_p [S, K] → xe [E, C, D] + maps."""
+    S, K = top_e.shape
+    flat_e = top_e.reshape(S * K)
+    flat_t = jnp.repeat(jnp.arange(S, dtype=jnp.int32), K)
+    flat_w = top_p.reshape(S * K).astype(jnp.float32)
+    order = jnp.argsort(flat_e)
+    e_s, t_s, w_s = flat_e[order], flat_t[order], flat_w[order]
+    first = jnp.searchsorted(e_s, e_s, side="left")
+    pos = jnp.arange(S * K, dtype=jnp.int32) - first.astype(jnp.int32)
+    keep = pos < C
+    slot = jnp.where(keep, e_s * C + pos, E * C)  # overflow bucket
+    slot_token = jnp.full((E * C + 1,), 0, jnp.int32).at[slot].set(t_s)
+    slot_used = jnp.zeros((E * C + 1,), bool).at[slot].set(keep)
+    slot_w = jnp.zeros((E * C + 1,), jnp.float32).at[slot].set(
+        jnp.where(keep, w_s, 0.0)
+    )
+    slot_token = slot_token[: E * C]
+    slot_used = slot_used[: E * C]
+    slot_w = slot_w[: E * C]
+    xe = jnp.where(slot_used[:, None], xs[slot_token], 0).reshape(E, C, -1)
+    return xe, slot_token, slot_used, slot_w
+
+
+def _combine_group(ye, slot_token, slot_used, slot_w, S: int):
+    """Per-group combine: ye [E, C, D] → out [S, D]."""
+    EC, D = ye.shape[0] * ye.shape[1], ye.shape[2]
+    yflat = ye.reshape(EC, D) * slot_w[:, None].astype(ye.dtype)
+    return jnp.zeros((S, D), ye.dtype).at[slot_token].add(
+        jnp.where(slot_used[:, None], yflat, 0)
+    )
+
+
+def moe_ffn(x: jax.Array, p: dict, cfg) -> tuple[jax.Array, jax.Array]:
+    """x [B, S, D] → (out [B, S, D], aux_loss scalar)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+
+    # single explicit SP all-gather (bf16) reused by router AND dispatch —
+    # without it XLA re-gathers x separately (and in f32) for each consumer
+    x = shard(x, "batch", None, "embed")
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(x.dtype)).astype(
+        jnp.float32
+    )
+    probs = shard(jax.nn.softmax(logits, axis=-1), "batch", None, None)
+    top_p, top_e = jax.lax.top_k(probs, K)  # [B, S, K]
+    if cfg.norm_topk_probs:
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balance aux loss (Switch): E · Σ_e f_e · p_e  (global) ----
+    me = probs.mean(axis=(0, 1))
+    ce = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (B * S * K)
+    aux = E * jnp.sum(me * ce)
+
+    # ---- grouped dispatch (group = sequence, local to its data shard) ----
+    # (A finer grouping — chunks aligned with the sequence-parallel shard,
+    # intending an expert all-to-all — was tried and REFUTED: XLA reshards
+    # the 5-D dispatch tensor with all-gathers, tripling collective bytes.
+    # See EXPERIMENTS.md §Perf olmoe iteration 2.)
+    C = max(int(cfg.capacity_factor * S * K / E + 0.5), 1)
+    xe, slot_token, slot_used, slot_w = jax.vmap(
+        lambda xs, te, tp: _dispatch_group(xs, te, tp, E, C)
+    )(x, top_e, top_p)  # xe [B, E, C, D]
+    # expert-parallel boundary: B stays on data, E shards over model
+    xe = shard(xe, "batch", "experts", None, "embed")
+
+    gate = jnp.einsum("becd,edf->becf", xe, p["wi_gate"].astype(x.dtype))
+    up = jnp.einsum("becd,edf->becf", xe, p["wi_up"].astype(x.dtype))
+    h = jax.nn.silu(gate) * up
+    h = shard(h, "batch", "experts", None, "expert_ffn")
+    ye = jnp.einsum("becf,efd->becd", h, p["wo"].astype(x.dtype))
+    ye = shard(ye, "batch", "experts", None, "embed")
+
+    out = jax.vmap(lambda y, st, su, sw: _combine_group(y, st, su, sw, S))(
+        ye, slot_token, slot_used, slot_w
+    )
+    out = shard(out, "batch", "seq", "embed")
+    return out, aux
+
+
+def moe_ffn_ref(x: jax.Array, p: dict, cfg) -> jax.Array:
+    """Dense reference (computes every expert for every token) — oracle for
+    tests; must match moe_ffn when capacity_factor is large enough that no
+    token is dropped."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    xt = x.reshape(B * S, D)
+    logits = jnp.einsum("td,de->te", xt, p["router"].astype(x.dtype)).astype(
+        jnp.float32
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)
+    if cfg.norm_topk_probs:
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    gate = jnp.einsum("td,edf->tef", xt, p["wi_gate"].astype(x.dtype))
+    up = jnp.einsum("td,edf->tef", xt, p["wi_up"].astype(x.dtype))
+    h = jax.nn.silu(gate) * up
+    ye = jnp.einsum("tef,efd->ted", h, p["wo"].astype(x.dtype))  # [T, E, D]
+    onehot = jax.nn.one_hot(top_e, E, dtype=jnp.float32) * top_p[..., None]
+    weights = onehot.sum(axis=1)  # [T, E]
+    out = jnp.einsum("ted,te->td", ye.astype(jnp.float32), weights)
+    return out.reshape(B, S, D).astype(x.dtype)

@@ -1,0 +1,83 @@
+"""Parameter definition utility: one source of truth for shape, dtype,
+logical sharding axes, and initializer of every parameter.
+
+Models declare a nested dict of ``ParamDef``; from it we derive
+  * ``init_params``  — real arrays (smoke tests / real training),
+  * ``param_shapes`` — ShapeDtypeStructs, optionally with NamedShardings
+                       attached (dry-run lowering without allocation),
+  * ``param_specs``  — PartitionSpec pytree for jit in_shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.specs import logical_spec, named_sharding
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    logical: tuple[str | None, ...]
+    dtype: Any = jnp.float32
+    init: str = "normal"  # normal | zeros | ones | embed
+    scale: float | None = None  # override fan-in scale
+
+    def initializer(self, key: jax.Array) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        if self.init == "embed":
+            return (
+                jax.random.normal(key, self.shape, jnp.float32) * (self.scale or 0.02)
+            ).astype(self.dtype)
+        # fan-in scaled normal
+        fan_in = self.shape[-2] if len(self.shape) >= 2 else max(self.shape[-1], 1)
+        scale = self.scale if self.scale is not None else 1.0 / np.sqrt(fan_in)
+        return (jax.random.normal(key, self.shape, jnp.float32) * scale).astype(
+            self.dtype
+        )
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(defs: dict, key: jax.Array) -> dict:
+    leaves, treedef = jax.tree_util.tree_flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree_util.tree_unflatten(
+        treedef, [d.initializer(k) for d, k in zip(leaves, keys)]
+    )
+
+
+def param_shapes(defs: dict, mesh=None, rules=None) -> dict:
+    """ShapeDtypeStruct tree; attaches NamedShardings when mesh is given."""
+
+    def one(d: ParamDef):
+        if mesh is None:
+            return jax.ShapeDtypeStruct(d.shape, d.dtype)
+        return jax.ShapeDtypeStruct(
+            d.shape, d.dtype,
+            sharding=named_sharding(mesh, d.logical, rules, shape=d.shape),
+        )
+
+    return jax.tree_util.tree_map(one, defs, is_leaf=_is_def)
+
+
+def param_specs(defs: dict, mesh, rules=None) -> dict:
+    return jax.tree_util.tree_map(
+        lambda d: logical_spec(d.logical, mesh.axis_names, rules, d.shape, mesh),
+        defs,
+        is_leaf=_is_def,
+    )
+
+
+def param_count(defs: dict) -> int:
+    leaves = jax.tree_util.tree_leaves(defs, is_leaf=_is_def)
+    return int(sum(np.prod(d.shape) for d in leaves))

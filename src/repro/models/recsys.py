@@ -1,0 +1,454 @@
+"""RecSys architectures: two-tower retrieval, DCN-v2, AutoInt, BST.
+
+JAX has no native ``nn.EmbeddingBag`` — the lookup substrate here IS part of
+the system (taxonomy §B.6): ``jnp.take`` + masked reduction for fixed-hot
+fields, ``jnp.take`` + ``jax.ops.segment_sum`` for ragged bags.  Embedding
+tables are row-sharded over the ``model`` mesh axis ("rows" logical axis);
+under SPMD a sharded-table gather lowers to the standard
+partial-gather + all-reduce pattern.
+
+All four models share a batch dict convention:
+    dense    f32[B, n_dense]            (dcn only)
+    sparse   i32[B, n_fields]           single-hot categorical ids
+    history  i32[B, hist_len]           (bst, two-tower user history)
+    target   i32[B]                     target item (bst)
+    label    f32[B]                     CTR label / implicit positive
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field as dfield
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamDef, init_params, param_count
+from repro.sharding.specs import shard
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag substrate
+# ---------------------------------------------------------------------------
+
+def _pad_vocab(v: int) -> int:
+    """Row counts padded to a multiple of 256 so tables shard evenly over
+    the model axis (ids never reference padding rows)."""
+    return (v + 255) // 256 * 256
+
+
+def embedding_lookup(table: jax.Array, ids: jax.Array) -> jax.Array:
+    """Single-hot lookup: table [V, D], ids i32[...] → [..., D]."""
+    return jnp.take(table, ids, axis=0)
+
+
+def embedding_bag(
+    table: jax.Array,
+    ids: jax.Array,  # i32[..., H] multi-hot, −1 padded
+    mode: str = "sum",
+) -> jax.Array:
+    """Fixed-width EmbeddingBag: masked take + reduce over the hot dim."""
+    mask = (ids >= 0).astype(table.dtype)[..., None]
+    emb = jnp.take(table, jnp.maximum(ids, 0), axis=0) * mask
+    if mode == "sum":
+        return emb.sum(axis=-2)
+    if mode == "mean":
+        return emb.sum(axis=-2) / jnp.maximum(mask.sum(axis=-2), 1.0)
+    if mode == "max":
+        neg = jnp.where(mask > 0, emb, -jnp.inf)
+        return jnp.where(jnp.isfinite(neg.max(axis=-2)), neg.max(axis=-2), 0.0)
+    raise ValueError(mode)
+
+
+def embedding_bag_ragged(
+    table: jax.Array,
+    flat_ids: jax.Array,  # i32[T] concatenated bags
+    segment_ids: jax.Array,  # i32[T] bag index per id
+    num_bags: int,
+    weights: jax.Array | None = None,
+    mode: str = "sum",
+) -> jax.Array:
+    """CSR-style ragged EmbeddingBag: take + segment_sum (torch parity)."""
+    emb = jnp.take(table, jnp.maximum(flat_ids, 0), axis=0)
+    valid = (flat_ids >= 0).astype(table.dtype)
+    w = valid if weights is None else weights * valid
+    emb = emb * w[:, None]
+    tot = jax.ops.segment_sum(emb, segment_ids, num_segments=num_bags)
+    if mode == "sum":
+        return tot
+    cnt = jax.ops.segment_sum(w, segment_ids, num_segments=num_bags)
+    return tot / jnp.maximum(cnt, 1.0)[:, None]
+
+
+def _mlp_defs(name: str, dims: list[int], pd) -> dict:
+    out = {}
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        out[f"{name}_w{i}"] = ParamDef((a, b), (None, "ffn") if i == 0 else (None, None), pd)
+        out[f"{name}_b{i}"] = ParamDef((b,), (None,), pd, "zeros")
+    return out
+
+
+def _mlp_apply(p: dict, name: str, x: jax.Array, n: int, act=jax.nn.relu, last_act=True):
+    for i in range(n):
+        x = x @ p[f"{name}_w{i}"].astype(x.dtype) + p[f"{name}_b{i}"].astype(x.dtype)
+        if i < n - 1 or last_act:
+            x = act(x)
+    return x
+
+
+def _bce(logit: jax.Array, label: jax.Array):
+    loss = jnp.mean(
+        jnp.maximum(logit, 0) - logit * label + jnp.log1p(jnp.exp(-jnp.abs(logit)))
+    )
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# Two-tower retrieval (Yi et al., RecSys'19)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TwoTowerConfig:
+    name: str = "two_tower"
+    embed_dim: int = 256
+    tower_dims: tuple[int, ...] = (1024, 512, 256)
+    n_users: int = 1_000_000
+    n_items: int = 1_000_000
+    n_user_fields: int = 4  # user categorical context fields
+    n_item_fields: int = 3
+    field_vocab: int = 100_000
+    hist_len: int = 20
+    feat_dim: int = 64  # per-feature embedding dim
+    temperature: float = 0.05
+    compute_dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+
+    def param_defs(self) -> dict:
+        pd = self.param_dtype
+        D = self.feat_dim
+        user_in = D * (1 + self.n_user_fields + 1)  # id + fields + history pool
+        item_in = D * (1 + self.n_item_fields)
+        defs = {
+            "user_id": ParamDef((_pad_vocab(self.n_users), D), ("rows", None), pd, "embed"),
+            "item_id": ParamDef((_pad_vocab(self.n_items), D), ("rows", None), pd, "embed"),
+            "user_fields": ParamDef(
+                (self.n_user_fields, _pad_vocab(self.field_vocab), D), (None, "rows", None), pd, "embed"
+            ),
+            "item_fields": ParamDef(
+                (self.n_item_fields, _pad_vocab(self.field_vocab), D), (None, "rows", None), pd, "embed"
+            ),
+        }
+        udims = [user_in, *self.tower_dims, self.embed_dim]
+        idims = [item_in, *self.tower_dims, self.embed_dim]
+        defs.update(_mlp_defs("user", udims, pd))
+        defs.update(_mlp_defs("item", idims, pd))
+        return defs
+
+    @property
+    def n_tower_layers(self) -> int:
+        return len(self.tower_dims) + 1
+
+    def init(self, key):
+        return init_params(self.param_defs(), key)
+
+    def n_params(self) -> int:
+        return param_count(self.param_defs())
+
+
+def two_tower_user(cfg: TwoTowerConfig, p: dict, batch: dict) -> jax.Array:
+    uid = embedding_lookup(p["user_id"], batch["user_id"])  # [B, D]
+    uf = jax.vmap(
+        lambda t, ids: embedding_lookup(t, ids), in_axes=(0, 1), out_axes=1
+    )(p["user_fields"], batch["user_fields"])  # [B, F, D]
+    hist = embedding_bag(p["item_id"], batch["history"], mode="mean")  # [B, D]
+    x = jnp.concatenate([uid, uf.reshape(uid.shape[0], -1), hist], axis=-1)
+    x = shard(x, "batch", None)
+    u = _mlp_apply(p, "user", x, cfg.n_tower_layers, last_act=False)
+    return u / jnp.maximum(jnp.linalg.norm(u, axis=-1, keepdims=True), 1e-6)
+
+
+def two_tower_item(cfg: TwoTowerConfig, p: dict, item_id, item_fields) -> jax.Array:
+    iid = embedding_lookup(p["item_id"], item_id)
+    itf = jax.vmap(
+        lambda t, ids: embedding_lookup(t, ids), in_axes=(0, 1), out_axes=1
+    )(p["item_fields"], item_fields)
+    x = jnp.concatenate([iid, itf.reshape(iid.shape[0], -1)], axis=-1)
+    x = shard(x, "candidates", None)
+    v = _mlp_apply(p, "item", x, cfg.n_tower_layers, last_act=False)
+    return v / jnp.maximum(jnp.linalg.norm(v, axis=-1, keepdims=True), 1e-6)
+
+
+def two_tower_loss(cfg: TwoTowerConfig, params: dict, batch: dict):
+    """In-batch sampled softmax with logQ correction (batch["logq"] [B])."""
+    u = two_tower_user(cfg, params, batch)  # [B, E]
+    v = two_tower_item(cfg, params, batch["target"], batch["item_fields"])  # [B, E]
+    logits = (u @ v.T) / cfg.temperature  # [B, B]
+    logits = logits - batch["logq"][None, :]  # logQ correction
+    labels = jnp.arange(u.shape[0])
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    nll = jnp.mean(lse - jnp.take_along_axis(logits, labels[:, None], 1)[:, 0])
+    return nll, {"nll": nll}
+
+
+def two_tower_score_candidates(
+    cfg: TwoTowerConfig,
+    params: dict,
+    batch: dict,  # one/few users
+    cand_ids: jax.Array,  # i32[Nc]
+    cand_fields: jax.Array,  # i32[Nc, n_item_fields]
+    top_k: int = 100,
+    geo: dict | None = None,  # optional geo-constrained retrieval (paper tie-in)
+):
+    """Score candidates for retrieval; optionally blend a geographic score
+    computed with the paper's geo_score kernel (DESIGN.md §6, two-tower row).
+
+    geo = {cand_rects [Nc,R,4], cand_amps [Nc,R], q_rects [Q,4], q_amps [Q],
+           weight float}
+    """
+    u = two_tower_user(cfg, params, batch)  # [B, E]
+    v = two_tower_item(cfg, params, cand_ids, cand_fields)  # [Nc, E]
+    scores = u @ v.T  # [B, Nc]
+    if geo is not None:
+        from repro.kernels.geo_score.ops import geo_score_docs
+
+        g = geo_score_docs(
+            geo["cand_rects"], geo["cand_amps"], geo["q_rects"], geo["q_amps"]
+        )  # [Nc]
+        scores = scores + geo["weight"] * g[None, :]
+        scores = jnp.where(g[None, :] > 0, scores, -jnp.inf)
+    return jax.lax.top_k(scores, top_k)
+
+
+# ---------------------------------------------------------------------------
+# DCN-v2 (arXiv:2008.13535)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DCNv2Config:
+    name: str = "dcn_v2"
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 16
+    n_cross_layers: int = 3
+    mlp_dims: tuple[int, ...] = (1024, 1024, 512)
+    vocab_sizes: tuple[int, ...] = ()  # len == n_sparse
+    compute_dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+
+    @property
+    def d_input(self) -> int:
+        return self.n_dense + self.n_sparse * self.embed_dim
+
+    def param_defs(self) -> dict:
+        pd = self.param_dtype
+        vs = self.vocab_sizes or tuple([100_000] * self.n_sparse)
+        defs = {
+            f"table_{i}": ParamDef((_pad_vocab(v), self.embed_dim), ("rows", None), pd, "embed")
+            for i, v in enumerate(vs)
+        }
+        d = self.d_input
+        for l in range(self.n_cross_layers):
+            defs[f"cross_w{l}"] = ParamDef((d, d), (None, None), pd)
+            defs[f"cross_b{l}"] = ParamDef((d,), (None,), pd, "zeros")
+        defs.update(_mlp_defs("deep", [d, *self.mlp_dims], pd))
+        defs["logit_w"] = ParamDef((d + self.mlp_dims[-1], 1), (None, None), pd)
+        defs["logit_b"] = ParamDef((1,), (None,), pd, "zeros")
+        return defs
+
+    def init(self, key):
+        return init_params(self.param_defs(), key)
+
+    def n_params(self) -> int:
+        return param_count(self.param_defs())
+
+
+def dcn_v2_forward(cfg: DCNv2Config, p: dict, batch: dict) -> jax.Array:
+    B = batch["sparse"].shape[0]
+    embs = [
+        embedding_lookup(p[f"table_{i}"], batch["sparse"][:, i])
+        for i in range(cfg.n_sparse)
+    ]
+    x0 = jnp.concatenate([batch["dense"].astype(cfg.compute_dtype), *embs], axis=-1)
+    x0 = shard(x0, "batch", None)
+    # cross network: x_{l+1} = x0 ⊙ (W x_l + b) + x_l
+    x = x0
+    for l in range(cfg.n_cross_layers):
+        x = x0 * (x @ p[f"cross_w{l}"].astype(x.dtype) + p[f"cross_b{l}"].astype(x.dtype)) + x
+    deep = _mlp_apply(p, "deep", x0, len(cfg.mlp_dims))
+    out = jnp.concatenate([x, deep], axis=-1)
+    logit = out @ p["logit_w"].astype(x.dtype) + p["logit_b"].astype(x.dtype)
+    return logit[:, 0]
+
+
+def dcn_v2_loss(cfg: DCNv2Config, params: dict, batch: dict):
+    logit = dcn_v2_forward(cfg, params, batch)
+    loss = _bce(logit, batch["label"])
+    return loss, {"bce": loss}
+
+
+# ---------------------------------------------------------------------------
+# AutoInt (arXiv:1810.11921)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class AutoIntConfig:
+    name: str = "autoint"
+    n_sparse: int = 39
+    embed_dim: int = 16
+    n_attn_layers: int = 3
+    n_heads: int = 2
+    d_attn: int = 32
+    vocab_sizes: tuple[int, ...] = ()
+    compute_dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+
+    def param_defs(self) -> dict:
+        pd = self.param_dtype
+        vs = self.vocab_sizes or tuple([100_000] * self.n_sparse)
+        defs = {
+            f"table_{i}": ParamDef((_pad_vocab(v), self.embed_dim), ("rows", None), pd, "embed")
+            for i, v in enumerate(vs)
+        }
+        d_in = self.embed_dim
+        for l in range(self.n_attn_layers):
+            defs[f"attn{l}_wq"] = ParamDef((d_in, self.n_heads, self.d_attn), (None, "heads", None), pd)
+            defs[f"attn{l}_wk"] = ParamDef((d_in, self.n_heads, self.d_attn), (None, "heads", None), pd)
+            defs[f"attn{l}_wv"] = ParamDef((d_in, self.n_heads, self.d_attn), (None, "heads", None), pd)
+            defs[f"attn{l}_wres"] = ParamDef((d_in, self.n_heads * self.d_attn), (None, None), pd)
+            d_in = self.n_heads * self.d_attn
+        defs["logit_w"] = ParamDef((self.n_sparse * d_in, 1), (None, None), pd)
+        defs["logit_b"] = ParamDef((1,), (None,), pd, "zeros")
+        return defs
+
+    def init(self, key):
+        return init_params(self.param_defs(), key)
+
+    def n_params(self) -> int:
+        return param_count(self.param_defs())
+
+
+def autoint_forward(cfg: AutoIntConfig, p: dict, batch: dict) -> jax.Array:
+    B = batch["sparse"].shape[0]
+    embs = jnp.stack(
+        [
+            embedding_lookup(p[f"table_{i}"], batch["sparse"][:, i])
+            for i in range(cfg.n_sparse)
+        ],
+        axis=1,
+    )  # [B, F, D]
+    x = shard(embs.astype(cfg.compute_dtype), "batch", None, None)
+    for l in range(cfg.n_attn_layers):
+        q = jnp.einsum("bfd,dha->bfha", x, p[f"attn{l}_wq"].astype(x.dtype))
+        k = jnp.einsum("bfd,dha->bfha", x, p[f"attn{l}_wk"].astype(x.dtype))
+        v = jnp.einsum("bfd,dha->bfha", x, p[f"attn{l}_wv"].astype(x.dtype))
+        s = jnp.einsum("bfha,bgha->bhfg", q, k) / jnp.sqrt(jnp.float32(cfg.d_attn)).astype(x.dtype)
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhfg,bgha->bfha", a, v)
+        o = o.reshape(B, cfg.n_sparse, cfg.n_heads * cfg.d_attn)
+        x = jax.nn.relu(o + jnp.einsum("bfd,de->bfe", x, p[f"attn{l}_wres"].astype(x.dtype)))
+    flat = x.reshape(B, -1)
+    logit = flat @ p["logit_w"].astype(x.dtype) + p["logit_b"].astype(x.dtype)
+    return logit[:, 0]
+
+
+def autoint_loss(cfg: AutoIntConfig, params: dict, batch: dict):
+    logit = autoint_forward(cfg, params, batch)
+    loss = _bce(logit, batch["label"])
+    return loss, {"bce": loss}
+
+
+# ---------------------------------------------------------------------------
+# BST — Behavior Sequence Transformer (arXiv:1905.06874)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class BSTConfig:
+    name: str = "bst"
+    embed_dim: int = 32
+    seq_len: int = 20
+    n_blocks: int = 1
+    n_heads: int = 8
+    mlp_dims: tuple[int, ...] = (1024, 512, 256)
+    n_items: int = 1_000_000
+    n_other_fields: int = 4
+    field_vocab: int = 100_000
+    compute_dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+
+    @property
+    def d_head(self) -> int:
+        return self.embed_dim // self.n_heads
+
+    def param_defs(self) -> dict:
+        pd = self.param_dtype
+        D = self.embed_dim
+        defs = {
+            "item_emb": ParamDef((_pad_vocab(self.n_items), D), ("rows", None), pd, "embed"),
+            "pos_emb": ParamDef((self.seq_len + 1, D), (None, None), pd, "embed"),
+            "other_fields": ParamDef(
+                (self.n_other_fields, _pad_vocab(self.field_vocab), D), (None, "rows", None), pd, "embed"
+            ),
+        }
+        for b in range(self.n_blocks):
+            defs[f"blk{b}_wq"] = ParamDef((D, self.n_heads, self.d_head), (None, "heads", None), pd)
+            defs[f"blk{b}_wk"] = ParamDef((D, self.n_heads, self.d_head), (None, "heads", None), pd)
+            defs[f"blk{b}_wv"] = ParamDef((D, self.n_heads, self.d_head), (None, "heads", None), pd)
+            defs[f"blk{b}_wo"] = ParamDef((self.n_heads * self.d_head, D), (None, None), pd)
+            defs[f"blk{b}_ln1"] = ParamDef((D,), (None,), pd, "ones")
+            defs[f"blk{b}_ln2"] = ParamDef((D,), (None,), pd, "ones")
+            defs[f"blk{b}_ff1"] = ParamDef((D, 4 * D), (None, None), pd)
+            defs[f"blk{b}_ff1b"] = ParamDef((4 * D,), (None,), pd, "zeros")
+            defs[f"blk{b}_ff2"] = ParamDef((4 * D, D), (None, None), pd)
+            defs[f"blk{b}_ff2b"] = ParamDef((D,), (None,), pd, "zeros")
+        d_in = (self.seq_len + 1) * D + self.n_other_fields * D
+        defs.update(_mlp_defs("mlp", [d_in, *self.mlp_dims], pd))
+        defs["logit_w"] = ParamDef((self.mlp_dims[-1], 1), (None, None), pd)
+        defs["logit_b"] = ParamDef((1,), (None,), pd, "zeros")
+        return defs
+
+    def init(self, key):
+        return init_params(self.param_defs(), key)
+
+    def n_params(self) -> int:
+        return param_count(self.param_defs())
+
+
+def bst_forward(cfg: BSTConfig, p: dict, batch: dict) -> jax.Array:
+    B = batch["target"].shape[0]
+    D = cfg.embed_dim
+    seq = jnp.concatenate(
+        [batch["history"], batch["target"][:, None]], axis=1
+    )  # [B, S+1] target appended (BST)
+    x = embedding_lookup(p["item_emb"], jnp.maximum(seq, 0))
+    x = x * (seq >= 0).astype(x.dtype)[..., None]
+    x = x + p["pos_emb"].astype(x.dtype)[None, :, :]
+    x = shard(x, "batch", None, None)
+    from repro.models.layers import rms_norm
+
+    for b in range(cfg.n_blocks):
+        y = rms_norm(x, p[f"blk{b}_ln1"])
+        q = jnp.einsum("bsd,dha->bsha", y, p[f"blk{b}_wq"].astype(x.dtype))
+        k = jnp.einsum("bsd,dha->bsha", y, p[f"blk{b}_wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,dha->bsha", y, p[f"blk{b}_wv"].astype(x.dtype))
+        s = jnp.einsum("bsha,btha->bhst", q, k) / jnp.sqrt(
+            jnp.float32(cfg.d_head)
+        ).astype(x.dtype)
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhst,btha->bsha", a, v).reshape(B, cfg.seq_len + 1, -1)
+        x = x + jnp.einsum("bse,ed->bsd", o, p[f"blk{b}_wo"].astype(x.dtype))
+        y = rms_norm(x, p[f"blk{b}_ln2"])
+        h = jax.nn.relu(y @ p[f"blk{b}_ff1"].astype(x.dtype) + p[f"blk{b}_ff1b"].astype(x.dtype))
+        x = x + h @ p[f"blk{b}_ff2"].astype(x.dtype) + p[f"blk{b}_ff2b"].astype(x.dtype)
+
+    other = jax.vmap(
+        lambda t, ids: embedding_lookup(t, ids), in_axes=(0, 1), out_axes=1
+    )(p["other_fields"], batch["other"])  # [B, F, D]
+    flat = jnp.concatenate([x.reshape(B, -1), other.reshape(B, -1)], axis=-1)
+    h = _mlp_apply(p, "mlp", flat, len(cfg.mlp_dims), act=jax.nn.leaky_relu)
+    logit = h @ p["logit_w"].astype(x.dtype) + p["logit_b"].astype(x.dtype)
+    return logit[:, 0]
+
+
+def bst_loss(cfg: BSTConfig, params: dict, batch: dict):
+    logit = bst_forward(cfg, params, batch)
+    loss = _bce(logit, batch["label"])
+    return loss, {"bce": loss}

@@ -1,0 +1,301 @@
+"""Decoder-only LM: dense or MoE FFN, GQA, RoPE, scan-over-layers.
+
+Covers the five assigned LM architectures (granite-moe, olmoe, smollm,
+qwen1.5-0.5b, qwen2.5-14b).  Layer parameters are stacked on a leading
+``layers`` dim and the body is a ``lax.scan`` — HLO size and compile time
+are independent of depth (essential for 48-layer × 512-device dry runs).
+Remat (``jax.checkpoint``) wraps the scanned body; policy configurable.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models.params import ParamDef, init_params, param_count, param_shapes
+from repro.sharding.specs import shard
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    name: str = "lm"
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 256
+    vocab: int = 1024
+    # MoE (n_experts == 0 → dense)
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    norm_topk_probs: bool = True
+    aux_loss_weight: float = 0.01
+    # attention
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    attn_window: int | None = None  # sliding-window (beyond-paper long_500k)
+    attn_chunk: int = 512
+    tie_embeddings: bool = False
+    # scan_unroll=True unrolls the layer loop: needed by the dry-run because
+    # HLO cost analysis counts a while-loop body once (not × trip count)
+    scan_unroll: bool = False
+    # numerics
+    compute_dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    z_loss: float = 1e-4
+    remat: str = "full"  # none | full | dots
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to a multiple of 256 (Megatron-style) so the vocab
+        dim shards evenly; padded logit columns are masked in _unembed."""
+        return (self.vocab + 255) // 256 * 256
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def param_defs(self) -> dict:
+        D, H, KVH, Dh, F, V, E = (
+            self.d_model,
+            self.n_heads,
+            self.n_kv_heads,
+            self.d_head,
+            self.d_ff,
+            self.vocab,
+            self.n_experts,
+        )
+        Lyr = self.n_layers
+        pd = self.param_dtype
+        layer: dict = {
+            "ln1": ParamDef((Lyr, D), ("layers", "embed"), pd, "ones"),
+            "ln2": ParamDef((Lyr, D), ("layers", "embed"), pd, "ones"),
+            "attn": {
+                "wq": ParamDef((Lyr, D, H * Dh), ("layers", "embed", "qkv_out"), pd),
+                "wk": ParamDef((Lyr, D, KVH * Dh), ("layers", "embed", "kv_out"), pd),
+                "wv": ParamDef((Lyr, D, KVH * Dh), ("layers", "embed", "kv_out"), pd),
+                "wo": ParamDef((Lyr, H * Dh, D), ("layers", "qkv_out", "embed"), pd),
+            },
+        }
+        if self.qkv_bias:
+            layer["attn"]["bq"] = ParamDef((Lyr, H * Dh), ("layers", "qkv_out"), pd, "zeros")
+            layer["attn"]["bk"] = ParamDef((Lyr, KVH * Dh), ("layers", "kv_out"), pd, "zeros")
+            layer["attn"]["bv"] = ParamDef((Lyr, KVH * Dh), ("layers", "kv_out"), pd, "zeros")
+        if self.qk_norm:
+            layer["attn"]["q_norm"] = ParamDef((Lyr, Dh), ("layers", None), pd, "ones")
+            layer["attn"]["k_norm"] = ParamDef((Lyr, Dh), ("layers", None), pd, "ones")
+        if self.is_moe:
+            layer["moe"] = {
+                "router": ParamDef((Lyr, D, E), ("layers", "embed", "experts"), pd),
+                "wi_gate": ParamDef((Lyr, E, D, F), ("layers", "experts", "embed", "expert_ffn"), pd),
+                "wi_up": ParamDef((Lyr, E, D, F), ("layers", "experts", "embed", "expert_ffn"), pd),
+                "wo": ParamDef((Lyr, E, F, D), ("layers", "experts", "expert_ffn", "embed"), pd),
+            }
+        else:
+            layer["mlp"] = {
+                "wi_gate": ParamDef((Lyr, D, F), ("layers", "embed", "ffn"), pd),
+                "wi_up": ParamDef((Lyr, D, F), ("layers", "embed", "ffn"), pd),
+                "wo": ParamDef((Lyr, F, D), ("layers", "ffn", "embed"), pd),
+            }
+        Vp = self.padded_vocab
+        out = {
+            "embed": ParamDef((Vp, D), ("vocab", "embed"), pd, "embed"),
+            "ln_f": ParamDef((D,), ("embed",), pd, "ones"),
+            "layers": layer,
+        }
+        if not self.tie_embeddings:
+            out["unembed"] = ParamDef((D, Vp), ("embed", "vocab"), pd)
+        return out
+
+    def init(self, key: jax.Array) -> dict:
+        return init_params(self.param_defs(), key)
+
+    def n_params(self) -> int:
+        return param_count(self.param_defs())
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: only top_k experts count)."""
+        total = self.n_params()
+        if not self.is_moe:
+            return total
+        expert_p = 3 * self.d_model * self.d_ff * self.n_layers * self.n_experts
+        return int(total - expert_p * (1 - self.top_k / self.n_experts))
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _unembed(cfg: TransformerConfig, params: dict, x: jax.Array) -> jax.Array:
+    w = (
+        params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    ).astype(cfg.compute_dtype)
+    logits = jnp.einsum("bsd,dv->bsv", x, w, preferred_element_type=jnp.float32)
+    if cfg.padded_vocab != cfg.vocab:  # mask padding columns
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        logits = jnp.where(col < cfg.vocab, logits, -1e9)
+    return logits
+
+
+def _layer_body(cfg: TransformerConfig, x, lp, positions):
+    h, _ = L.attention_block(L.rms_norm(x, lp["ln1"]), lp["attn"], cfg, positions)
+    x = x + h
+    y = L.rms_norm(x, lp["ln2"])
+    if cfg.is_moe:
+        f, aux = moe_lib.moe_ffn(y, lp["moe"], cfg)
+    else:
+        f, aux = L.swiglu(y, lp["mlp"]), jnp.float32(0.0)
+    return x + f, aux
+
+
+def forward(cfg: TransformerConfig, params: dict, tokens: jax.Array):
+    """tokens i32[B, S] → (logits f32[B, S, V], aux_loss)."""
+    B, S = tokens.shape
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    x = shard(x, "batch", "seq", "embed")
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+
+    def body(x, lp):
+        out, aux = _layer_body(cfg, x, lp, positions)
+        return out, aux
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    elif cfg.remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    x, auxs = jax.lax.scan(body, x, params["layers"], unroll=cfg.scan_unroll)
+    x = L.rms_norm(x, params["ln_f"])
+    # Loss region: release the seq shard (the model axis belongs to vocab
+    # here — otherwise logits materialize with the FULL vocab per device).
+    x = shard(x, "batch", None, "embed")
+    logits = shard(_unembed(cfg, params, x), "batch", None, "vocab")
+    return logits, auxs.sum()
+
+
+def loss_fn(cfg: TransformerConfig, params: dict, batch: dict):
+    """batch: tokens i32[B, S], labels i32[B, S] (−1 = ignore)."""
+    logits, aux = forward(cfg, params, batch["tokens"])
+    labels = batch["labels"]
+    mask = labels >= 0
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # label log-prob via masked reduction (NOT take_along_axis: a gather over
+    # the model-sharded vocab dim would force an all-gather of the logits)
+    col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    ll = jnp.sum(
+        jnp.where(col == jnp.maximum(labels, 0)[..., None], logits, 0.0), axis=-1
+    )
+    nll = (lse - ll) * mask
+    n = jnp.maximum(mask.sum(), 1)
+    loss = nll.sum() / n
+    zl = cfg.z_loss * ((lse * mask) ** 2).sum() / n
+    total = loss + zl + cfg.aux_loss_weight * aux
+    return total, {"nll": loss, "z_loss": zl, "aux": aux, "tokens": n}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with KV cache
+# ---------------------------------------------------------------------------
+
+def make_cache(cfg: TransformerConfig, batch: int, max_len: int) -> dict:
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    return {
+        "k": jnp.zeros(shape, cfg.compute_dtype),
+        "v": jnp.zeros(shape, cfg.compute_dtype),
+    }
+
+
+def cache_defs(cfg: TransformerConfig, batch: int, max_len: int) -> dict:
+    """ParamDef-style tree for dry-run cache ShapeDtypeStructs."""
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    # kv_seq/head_dim are fallback shards: they engage exactly when batch or
+    # kv_heads cannot divide the mesh axes (long-context b=1, GQA kv<model).
+    logical = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+    return {
+        "k": ParamDef(shape, logical, cfg.compute_dtype, "zeros"),
+        "v": ParamDef(shape, logical, cfg.compute_dtype, "zeros"),
+    }
+
+
+def prefill(cfg: TransformerConfig, params: dict, tokens: jax.Array, cache: dict):
+    """Fill the cache with the prompt; returns (logits_last, cache)."""
+    B, S = tokens.shape
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    x = shard(x, "batch", "seq", "embed")
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+
+    def body(x, lp):
+        h, (k, v) = L.attention_block(
+            L.rms_norm(x, lp["ln1"]), lp["attn"], cfg, positions
+        )
+        x = x + h
+        y = L.rms_norm(x, lp["ln2"])
+        if cfg.is_moe:
+            f, _ = moe_lib.moe_ffn(y, lp["moe"], cfg)
+        else:
+            f = L.swiglu(y, lp["mlp"])
+        return x + f, (k, v)
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body)
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"], unroll=cfg.scan_unroll)
+    x = L.rms_norm(x, params["ln_f"])
+    logits = _unembed(cfg, params, x[:, -1:, :])
+    S_max = cache["k"].shape[2]
+    pad = S_max - S
+    ks = jnp.pad(ks.astype(cache["k"].dtype), ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    vs = jnp.pad(vs.astype(cache["v"].dtype), ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    return logits[:, 0], {"k": ks, "v": vs}
+
+
+def decode_step(
+    cfg: TransformerConfig,
+    params: dict,
+    cache: dict,
+    tokens: jax.Array,  # i32[B] last generated token
+    pos: jax.Array,  # scalar i32: write position (= current length)
+):
+    """One token of batched decode. Returns (logits f32[B, V], new cache)."""
+    B = tokens.shape[0]
+    x = params["embed"].astype(cfg.compute_dtype)[tokens][:, None, :]  # [B,1,D]
+    x = shard(x, "batch", None, "embed")
+    positions = jnp.full((B, 1), pos, jnp.int32)
+
+    def body(x, xs):
+        lp, kc, vc = xs
+        h, (k_new, v_new) = L.attention_block(
+            L.rms_norm(x, lp["ln1"]),
+            lp["attn"],
+            cfg,
+            positions,
+            k_cache=kc,
+            v_cache=vc,
+            cache_pos=pos,
+            kv_valid_len=pos + 1,
+        )
+        x = x + h
+        y = L.rms_norm(x, lp["ln2"])
+        if cfg.is_moe:
+            f, _ = moe_lib.moe_ffn(y, lp["moe"], cfg)
+        else:
+            f = L.swiglu(y, lp["mlp"])
+        return x + f, (k_new, v_new)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"]), unroll=cfg.scan_unroll
+    )
+    x = L.rms_norm(x, params["ln_f"])
+    logits = _unembed(cfg, params, x)
+    return logits[:, 0], {"k": ks, "v": vs}

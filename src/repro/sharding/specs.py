@@ -1,0 +1,142 @@
+"""Logical-axis sharding rules → PartitionSpecs (MaxText-style, minimal).
+
+Models annotate every parameter and activation with *logical* dimension
+names ("batch", "heads", "ffn", "vocab", "experts", …).  A ``ShardingRules``
+table maps logical names to candidate mesh axes; ``logical_spec`` resolves
+them against a concrete mesh (skipping axes the mesh doesn't have, never
+using one mesh axis twice in a spec).  This keeps every model definition
+mesh-agnostic: the same code lowers on ``(data, model)``,
+``(pod, data, model)``, or a single CPU device (no mesh → no constraint).
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field, replace
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Default logical-axis → mesh-axes table. Tuple values are *joined* mesh axes
+# (e.g. batch is sharded over pod AND data).
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ffn": ("model",),
+    "experts": ("model",),
+    "vocab": ("model",),
+    "embed": (),  # d_model replicated by default
+    "seq": ("model",),  # sequence parallelism: saved activations shard over model
+    "docs": ("pod", "data"),  # geo engine: document shards
+    "queries": ("model",),  # geo engine: query replicas
+    "edges": ("pod", "data", "model"),  # GNN: edge partitioning
+    "nodes": ("pod", "data", "model"),  # GNN node-sharded state (shard_map path)
+    "rows": ("model",),  # recsys embedding-table rows
+    "candidates": ("pod", "data"),  # retrieval candidate sharding
+    "layers": (),
+    "expert_ffn": (),
+    "stage": ("pod",),  # pipeline stages (optional PP)
+    "zero1_dim0": ("data",),  # ZeRO-1 optimizer-moment sharding
+    "qkv_out": ("model",),  # flattened H*Dh projection output (TP column)
+    "kv_out": ("model",),  # flattened KVH*Dh projection output
+    "head_dim": ("model",),  # per-head feature dim (KV-cache fallback shard)
+    "kv_seq": ("pod", "data"),  # KV-cache sequence dim (long-context decode)
+}
+
+
+@dataclass
+class ShardingContext:
+    mesh: Mesh | None = None
+    rules: dict[str, tuple[str, ...]] = field(default_factory=lambda: dict(DEFAULT_RULES))
+
+
+_CTX = threading.local()
+
+
+def get_context() -> ShardingContext:
+    if not hasattr(_CTX, "ctx"):
+        _CTX.ctx = ShardingContext()
+    return _CTX.ctx
+
+
+class use_sharding:
+    """Context manager installing (mesh, rules) for model code."""
+
+    def __init__(self, mesh: Mesh | None, rules: dict | None = None):
+        self.new = ShardingContext(mesh, dict(rules or DEFAULT_RULES))
+
+    def __enter__(self):
+        self.prev = get_context()
+        _CTX.ctx = self.new
+        return self.new
+
+    def __exit__(self, *exc):
+        _CTX.ctx = self.prev
+        return False
+
+
+def logical_spec(
+    dims: tuple[str | None, ...],
+    mesh_axis_names: tuple[str, ...],
+    rules: dict[str, tuple[str, ...]] | None = None,
+    shape: tuple[int, ...] | None = None,
+    mesh: Mesh | None = None,
+) -> P:
+    """Resolve logical dim names to a PartitionSpec for a mesh.
+
+    Shape-aware: a candidate mesh axis is only taken if the cumulative shard
+    product still divides the dimension (jit in_shardings require exact
+    division; an indivisible axis is dropped and stays available for later
+    dims — e.g. a KV cache whose 8 kv-heads can't split over model=16 falls
+    through to head_dim 128, which can).
+    """
+    rules = rules or get_context().rules
+    sizes = dict(zip(mesh.axis_names, mesh.shape.values() if hasattr(mesh.shape, "values") else mesh.shape)) if mesh is not None else {}
+    used: set[str] = set()
+    out = []
+    for i, d in enumerate(dims):
+        if d is None:
+            out.append(None)
+            continue
+        dim_size = shape[i] if shape is not None else None
+        axes = []
+        prod = 1
+        for a in rules.get(d, ()):
+            if a not in mesh_axis_names or a in used:
+                continue
+            a_size = sizes.get(a)
+            if dim_size is not None and a_size is not None:
+                if dim_size % (prod * a_size) != 0:
+                    continue
+                prod *= a_size
+            axes.append(a)
+        used.update(axes)
+        if len(axes) == 0:
+            out.append(None)
+        elif len(axes) == 1:
+            out.append(axes[0])
+        else:
+            out.append(tuple(axes))
+    return P(*out)
+
+
+def shard(x: jax.Array, *dims: str | None) -> jax.Array:
+    """Apply a logical sharding constraint (no-op without a mesh context)."""
+    ctx = get_context()
+    if ctx.mesh is None:
+        return x
+    spec = logical_spec(
+        tuple(dims), ctx.mesh.axis_names, ctx.rules, tuple(x.shape), ctx.mesh
+    )
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def named_sharding(
+    mesh: Mesh,
+    dims: tuple[str | None, ...],
+    rules=None,
+    shape: tuple[int, ...] | None = None,
+) -> NamedSharding:
+    return NamedSharding(
+        mesh, logical_spec(dims, mesh.axis_names, rules, shape, mesh)
+    )

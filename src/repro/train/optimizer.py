@@ -1,0 +1,140 @@
+"""AdamW with global-norm clipping, cosine/linear schedules, grad
+accumulation, and optional ZeRO-1-style optimizer-state sharding.
+
+Built from scratch (no optax in this environment) — the optimizer is part of
+the substrate.  State is a pytree mirroring params; with
+``zero1=True`` the first-moment/second-moment trees carry an extra
+sharding constraint over the ``data`` axis (rules key "zero1"), which under
+SPMD shards optimizer memory ZeRO-1 style while keeping the update local.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.specs import get_context, shard
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"  # cosine | linear | constant
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    zero1: bool = False  # shard m/v over the data axis (ZeRO-1)
+
+
+def lr_at(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        decay = 1.0
+    elif cfg.schedule == "linear":
+        decay = jnp.maximum(
+            1.0 - (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1),
+            0.0,
+        )
+    else:  # cosine
+        frac = jnp.clip(
+            (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1),
+            0.0,
+            1.0,
+        )
+        decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * decay
+
+
+def init_opt_state(cfg: OptimizerConfig, params) -> dict:
+    zeros = lambda p: jnp.zeros_like(p)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+
+
+def zero1_sharding(mesh, spec, shape):
+    """ZeRO-1 moment sharding: the param's own spec + the ``data`` axis on
+    the first free dim it divides (so moments shard over data×model while
+    params stay replicated across data)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    used = {
+        a
+        for e in spec
+        for a in (e if isinstance(e, tuple) else (e,))
+        if a is not None
+    }
+    if "data" in used or "data" not in mesh.axis_names:
+        return NamedSharding(mesh, spec)
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (e, dim) in enumerate(zip(entries, shape)):
+        if e is None and dim % mesh.shape["data"] == 0:
+            entries[i] = "data"
+            return NamedSharding(mesh, P(*entries))
+    return NamedSharding(mesh, spec)
+
+
+def _constrain_tree(tree, shardings):
+    if shardings is None:
+        return tree
+    return jax.tree.map(
+        lambda x, s: x if s is None else jax.lax.with_sharding_constraint(x, s),
+        tree,
+        shardings,
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_update(cfg: OptimizerConfig, grads, params, state, moment_shardings=None):
+    """One AdamW step. Returns (new_params, new_state, metrics).
+
+    ``moment_shardings``: optional pytree (same structure as params) of
+    NamedShardings for m/v — the ZeRO-1 layout from ``zero1_sharding``.
+    """
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, p, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        step_ = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step_).astype(p.dtype), m, v
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_p = jax.tree.leaves(params)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(g, p, m, v) for g, p, m, v in zip(flat_g, flat_p, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    if cfg.zero1 and moment_shardings is not None:
+        new_m = _constrain_tree(new_m, moment_shardings)
+        new_v = _constrain_tree(new_v, moment_shardings)
+    return (
+        new_p,
+        {"step": step, "m": new_m, "v": new_v},
+        {"grad_norm": gnorm, "lr": lr},
+    )

@@ -1,0 +1,14 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def random_rects(rng, n):
+    """n random well-formed rects in the unit square, (n, 4) f32."""
+    lo = rng.uniform(0, 0.9, (n, 2))
+    hi = lo + rng.uniform(0.01, 0.1, (n, 2))
+    return np.concatenate([lo, np.minimum(hi, 1.0)], axis=1).astype(np.float32)

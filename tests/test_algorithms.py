@@ -1,0 +1,135 @@
+"""End-to-end algorithm tests: all three paper algorithms vs the exact
+oracle, graceful budget degradation, Pallas-scorer equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import GeoSearchEngine, QueryBudgets
+from repro.corpus import make_corpus, make_query_trace
+
+
+@pytest.fixture(scope="module")
+def engine_and_trace():
+    corpus = make_corpus(n_docs=500, n_terms=120, seed=3)
+    eng = GeoSearchEngine.build(
+        corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
+        pagerank=corpus.pagerank, grid=32,
+        budgets=QueryBudgets(
+            max_candidates=512, max_tiles=256, k_sweeps=4, sweep_budget=1024, top_k=10
+        ),
+    )
+    trace = make_query_trace(corpus, n_queries=24, seed=7)
+    return eng, trace
+
+
+ALGOS = ["text_first", "geo_first", "k_sweep"]
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_recall_vs_oracle(engine_and_trace, algo):
+    eng, trace = engine_and_trace
+    rec = eng.recall_at_k(trace, algo)
+    assert rec >= 0.95, f"{algo} recall {rec}"
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_results_respect_semantics(engine_and_trace, algo):
+    """Every returned doc must contain all query terms AND its footprint
+    must intersect the query footprint (paper §III.B)."""
+    eng, trace = engine_and_trace
+    res = eng.query(trace, algo)
+    ids = np.asarray(res.ids)
+    scores = np.asarray(res.scores)
+    text = eng.index.text
+    offs = np.asarray(text.offsets)
+    posts = np.asarray(text.postings)
+    doc_rects = np.asarray(eng.index.spatial.doc_rects)
+    q_terms = np.asarray(trace.terms)
+    q_rects = np.asarray(trace.rects)
+    for b in range(ids.shape[0]):
+        for j, d in enumerate(ids[b]):
+            if d < 0:
+                continue
+            assert np.isfinite(scores[b, j])
+            for t in q_terms[b]:
+                if t < 0:
+                    continue
+                sl = posts[offs[t] : offs[t + 1]]
+                assert d in sl, f"doc {d} missing term {t}"
+            inter = 0.0
+            for r in doc_rects[d]:
+                for q in q_rects[b]:
+                    w = min(r[2], q[2]) - max(r[0], q[0])
+                    h = min(r[3], q[3]) - max(r[1], q[1])
+                    inter += max(w, 0) * max(h, 0)
+            assert inter > 0, f"doc {d} no geo overlap"
+
+
+def test_scores_sorted_descending(engine_and_trace):
+    eng, trace = engine_and_trace
+    for algo in ALGOS:
+        s = np.asarray(eng.query(trace, algo).scores)
+        finite = np.where(np.isfinite(s), s, -1e30)  # −inf diffs are nan
+        assert (np.diff(finite, axis=1) <= 1e-6).all()
+
+
+def test_budget_degradation_graceful():
+    """Tiny budgets must not crash or return invalid docs — only lose recall."""
+    corpus = make_corpus(n_docs=300, n_terms=80, seed=5)
+    eng = GeoSearchEngine.build(
+        corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
+        pagerank=corpus.pagerank, grid=16,
+        budgets=QueryBudgets(
+            max_candidates=16, max_tiles=8, k_sweeps=1, sweep_budget=32, top_k=5
+        ),
+    )
+    trace = make_query_trace(corpus, n_queries=8, seed=2)
+    for algo in ALGOS:
+        res = eng.query(trace, algo)
+        ids = np.asarray(res.ids)
+        assert ((ids >= -1) & (ids < 300)).all()
+
+
+def test_pallas_scorer_matches_jnp(engine_and_trace):
+    from repro.kernels.geo_score.ops import geo_score_toeprints
+
+    eng, trace = engine_and_trace
+    a = eng.query(trace, "k_sweep")
+    b = eng.query(trace, "k_sweep", tp_scorer=geo_score_toeprints)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_allclose(
+        np.asarray(a.scores), np.asarray(b.scores), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_ksweep_stats_account_io(engine_and_trace):
+    eng, trace = engine_and_trace
+    res = eng.query(trace, "k_sweep")
+    stats = {k: np.asarray(v) for k, v in res.stats.items()}
+    assert (stats["sweeps"] <= eng.budgets.k_sweeps).all()
+    assert (stats["sweep_slack"] >= 0).all()
+    assert (
+        stats["bytes_spatial"]
+        == stats["sweeps"] * eng.budgets.sweep_budget * (16 + 4 + 4)
+    ).all()
+
+
+def test_quantized_impacts_similar_ranking(engine_and_trace):
+    """Lossy-compressed (f16) impacts preserve top-k (paper future work)."""
+    from dataclasses import replace
+    from repro.core.engine import GeoIndex
+    from repro.core.text_index import quantize_impacts
+
+    eng, trace = engine_and_trace
+    q_index = GeoIndex(
+        text=quantize_impacts(eng.index.text, jnp.float16),
+        spatial=eng.index.spatial,
+        pagerank=eng.index.pagerank,
+    )
+    eng2 = GeoSearchEngine(index=q_index, budgets=eng.budgets, weights=eng.weights)
+    a = eng.query(trace, "k_sweep")
+    b = eng2.query(trace, "k_sweep")
+    # top-1 must agree on ≥90% of queries
+    agree = (np.asarray(a.ids)[:, 0] == np.asarray(b.ids)[:, 0]).mean()
+    assert agree >= 0.9

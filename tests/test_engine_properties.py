@@ -1,0 +1,83 @@
+"""Engine-level property tests (hypothesis): system invariants that must
+hold for ANY corpus/query drawn from the generator."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import GeoSearchEngine, QueryBudgets
+from repro.corpus import make_corpus, make_query_trace
+
+
+def _engine(n_docs, seed, early=False):
+    corpus = make_corpus(n_docs=n_docs, n_terms=60, seed=seed)
+    eng = GeoSearchEngine.build(
+        corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
+        pagerank=corpus.pagerank, grid=16,
+        budgets=QueryBudgets(
+            max_candidates=n_docs * 4, max_tiles=256, k_sweeps=4,
+            sweep_budget=n_docs * 2, top_k=5, early_termination=early,
+        ),
+    )
+    return corpus, eng
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(50, 150), st.integers(0, 10_000))
+def test_full_budget_ksweep_matches_oracle(n_docs, seed):
+    """With budgets ≥ corpus size, K-SWEEP is EXACT (recall 1.0)."""
+    corpus, eng = _engine(n_docs, seed)
+    trace = make_query_trace(corpus, n_queries=6, seed=seed + 1)
+    assert eng.recall_at_k(trace, "k_sweep") == 1.0
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(50, 120), st.integers(0, 10_000))
+def test_algorithms_agree_under_full_budgets(n_docs, seed):
+    """All three algorithms return identical top-k when nothing truncates."""
+    corpus, eng = _engine(n_docs, seed)
+    trace = make_query_trace(corpus, n_queries=6, seed=seed + 2)
+    ids = {}
+    for algo in ["text_first", "geo_first", "k_sweep"]:
+        ids[algo] = np.asarray(eng.query(trace, algo).ids)
+    # compare as sets per query (ties may reorder equal scores)
+    for b in range(6):
+        sets = [set(x for x in ids[a][b] if x >= 0) for a in ids]
+        assert sets[0] == sets[1] == sets[2], (b, sets)
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(60, 120), st.integers(0, 10_000))
+def test_early_termination_only_loses_recall(n_docs, seed):
+    """Early termination must only DROP results, never invent them: every
+    returned doc must also be valid under the exact semantics."""
+    corpus, eng = _engine(n_docs, seed, early=True)
+    trace = make_query_trace(corpus, n_queries=4, seed=seed + 3)
+    got = np.asarray(eng.query(trace, "k_sweep").ids)
+    want = np.asarray(eng.oracle(trace, k=n_docs).ids)  # all valid results
+    for b in range(4):
+        valid = set(x for x in want[b] if x >= 0)
+        returned = set(x for x in got[b] if x >= 0)
+        assert returned <= valid, (b, returned - valid)
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 10_000))
+def test_compressed_index_subset_property(seed):
+    """f16 index results are a subset of valid results (never invalid docs)."""
+    corpus = make_corpus(n_docs=100, n_terms=60, seed=seed)
+    budgets = QueryBudgets(max_candidates=400, max_tiles=256, k_sweeps=4,
+                           sweep_budget=200, top_k=5)
+    kw = dict(pagerank=corpus.pagerank, grid=16, budgets=budgets)
+    eng32 = GeoSearchEngine.build(corpus.doc_terms, corpus.doc_rects,
+                                  corpus.doc_amps, corpus.n_terms, **kw)
+    eng16 = GeoSearchEngine.build(corpus.doc_terms, corpus.doc_rects,
+                                  corpus.doc_amps, corpus.n_terms,
+                                  compress=True, **kw)
+    trace = make_query_trace(corpus, n_queries=4, seed=seed + 4)
+    want = np.asarray(eng32.oracle(trace, k=100).ids)
+    got = np.asarray(eng16.query(trace, "k_sweep").ids)
+    for b in range(4):
+        valid = set(x for x in want[b] if x >= 0)
+        returned = set(x for x in got[b] if x >= 0)
+        assert returned <= valid

@@ -1,0 +1,111 @@
+"""Unit + property tests for rectangle/Morton geometry."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import geometry as G
+
+coord = st.floats(0.0, 1.0, width=32, allow_nan=False)
+
+
+def make_rect(x0, y0, w, h):
+    return jnp.array([x0, y0, min(x0 + w, 1.0), min(y0 + h, 1.0)], jnp.float32)
+
+
+class TestIntersection:
+    def test_disjoint(self):
+        a = jnp.array([0.0, 0.0, 0.2, 0.2])
+        b = jnp.array([0.5, 0.5, 0.9, 0.9])
+        assert float(G.rect_intersection_area(a, b)) == 0.0
+
+    def test_contained(self):
+        a = jnp.array([0.0, 0.0, 1.0, 1.0])
+        b = jnp.array([0.2, 0.2, 0.4, 0.4])
+        np.testing.assert_allclose(
+            float(G.rect_intersection_area(a, b)), 0.04, rtol=1e-5
+        )
+
+    def test_empty_rect_zero(self):
+        a = jnp.asarray(G.EMPTY_RECT)
+        b = jnp.array([0.0, 0.0, 1.0, 1.0])
+        assert float(G.rect_intersection_area(a, b)) == 0.0
+        assert float(G.rect_area(a)) == 0.0
+
+    @settings(max_examples=100, deadline=None)
+    @given(coord, coord, coord, coord, coord, coord, coord, coord)
+    def test_symmetry_and_bounds(self, x0, y0, w0, h0, x1, y1, w1, h1):
+        a = make_rect(x0, y0, w0 * 0.3, h0 * 0.3)
+        b = make_rect(x1, y1, w1 * 0.3, h1 * 0.3)
+        iab = float(G.rect_intersection_area(a, b))
+        iba = float(G.rect_intersection_area(b, a))
+        assert iab == pytest.approx(iba, rel=1e-6)
+        assert iab <= float(G.rect_area(a)) + 1e-6
+        assert iab <= float(G.rect_area(b)) + 1e-6
+        assert iab >= 0.0
+
+    @settings(max_examples=50, deadline=None)
+    @given(coord, coord, coord, coord)
+    def test_self_intersection_is_area(self, x0, y0, w, h):
+        a = make_rect(x0, y0, w * 0.5, h * 0.5)
+        np.testing.assert_allclose(
+            float(G.rect_intersection_area(a, a)), float(G.rect_area(a)), rtol=1e-5
+        )
+
+
+class TestMorton:
+    def test_matches_numpy(self):
+        rng = np.random.default_rng(0)
+        ix = rng.integers(0, 1024, 100).astype(np.uint32)
+        iy = rng.integers(0, 1024, 100).astype(np.uint32)
+        got = np.asarray(G.morton_encode(jnp.asarray(ix.astype(np.int32)), jnp.asarray(iy.astype(np.int32))))
+        want = G.morton_encode_np(ix, iy)
+        np.testing.assert_array_equal(got, want.astype(np.int32))
+
+    def test_bijective_on_grid(self):
+        g = 64
+        xs, ys = np.meshgrid(np.arange(g), np.arange(g))
+        codes = G.morton_encode_np(xs.ravel().astype(np.uint32), ys.ravel().astype(np.uint32))
+        assert len(np.unique(codes)) == g * g
+
+    def test_locality(self):
+        # adjacent cells differ by small code distance on average vs random
+        g = 256
+        rng = np.random.default_rng(1)
+        x = rng.integers(0, g - 1, 1000).astype(np.uint32)
+        y = rng.integers(0, g - 1, 1000).astype(np.uint32)
+        d_adj = np.abs(
+            G.morton_encode_np(x, y) - G.morton_encode_np(x + 1, y)
+        ).mean()
+        x2 = rng.integers(0, g, 1000).astype(np.uint32)
+        y2 = rng.integers(0, g, 1000).astype(np.uint32)
+        d_rand = np.abs(G.morton_encode_np(x, y) - G.morton_encode_np(x2, y2)).mean()
+        assert d_adj < d_rand / 10
+
+
+class TestTiles:
+    def test_enumerate_covers_rect(self):
+        r = jnp.array([0.26, 0.26, 0.52, 0.40], jnp.float32)
+        tiles, valid = G.enumerate_rect_tiles(r, grid=8, max_tiles=64)
+        got = sorted(set(int(t) for t, v in zip(tiles, valid) if v))
+        # covered cells: x in [2..4], y in [2..3] (inclusive of boundary rule)
+        want = sorted({ty * 8 + tx for tx in (2, 3, 4) for ty in (2, 3)})
+        assert got == want
+
+    def test_empty_rect_no_tiles(self):
+        tiles, valid = G.enumerate_rect_tiles(
+            jnp.asarray(G.EMPTY_RECT), grid=8, max_tiles=16
+        )
+        assert not bool(valid.any())
+
+    @settings(max_examples=50, deadline=None)
+    @given(coord, coord, coord, coord)
+    def test_point_in_rect_tile_enumerated(self, x0, y0, w, h):
+        r = make_rect(x0 * 0.8, y0 * 0.8, max(w * 0.1, 1e-3), max(h * 0.1, 1e-3))
+        grid = 16
+        tiles, valid = G.enumerate_rect_tiles(r, grid=grid, max_tiles=grid * grid)
+        cx, cy = (r[0] + r[2]) / 2, (r[1] + r[3]) / 2
+        ix, iy = G.point_to_cell(cx, cy, grid)
+        center_tile = int(iy) * grid + int(ix)
+        enumerated = set(int(t) for t, v in zip(tiles, valid) if v)
+        assert center_tile in enumerated

@@ -1,0 +1,194 @@
+"""Text & spatial index construction + query-time primitive tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import spatial_index as S
+from repro.core import text_index as T
+
+
+def small_index():
+    docs = [
+        np.array([0, 1, 1, 2], np.int32),
+        np.array([1, 3], np.int32),
+        np.array([0, 2, 2, 2], np.int32),
+        np.array([3, 3, 1], np.int32),
+    ]
+    return T.build_text_index_np(docs, n_terms=4, n_bitmap_terms=2), docs
+
+
+class TestTextIndex:
+    def test_postings_sorted_and_complete(self):
+        idx, docs = small_index()
+        offs = np.asarray(idx.offsets)
+        posts = np.asarray(idx.postings)
+        for w in range(4):
+            sl = posts[offs[w] : offs[w + 1]]
+            assert (np.diff(sl) > 0).all()  # strictly ascending (unique docs)
+            want = sorted(d for d, terms in enumerate(docs) if w in terms)
+            assert list(sl) == want
+
+    def test_probe_membership(self):
+        idx, docs = small_index()
+        for w in range(4):
+            member, imp = T.probe_term(idx, jnp.int32(w), jnp.arange(4, dtype=jnp.int32))
+            for d in range(4):
+                want = w in docs[d]
+                assert bool(member[d]) == want, (w, d)
+                if want:
+                    assert float(imp[d]) > 0
+
+    def test_conjunction_equals_brute_force(self):
+        idx, docs = small_index()
+        terms = jnp.array([1, 2, -1, -1], jnp.int32)
+        cand, valid, score = T.conjunction_candidates(idx, terms, 16)
+        got = sorted(int(c) for c, v in zip(cand, valid) if v)
+        want = sorted(d for d, t in enumerate(docs) if 1 in t and 2 in t)
+        assert got == want
+
+    def test_conjunction_empty_query(self):
+        idx, _ = small_index()
+        terms = jnp.array([-1, -1, -1, -1], jnp.int32)
+        _, valid, _ = T.conjunction_candidates(idx, terms, 16)
+        assert not bool(valid.any())
+
+    def test_impacts_quantize(self):
+        idx, _ = small_index()
+        q = T.quantize_impacts(idx, jnp.float16)
+        assert q.impacts.dtype == jnp.float16
+        np.testing.assert_allclose(
+            np.asarray(q.impacts, np.float32), np.asarray(idx.impacts), rtol=2e-3
+        )
+
+    def test_bitmaps_match_postings(self):
+        idx, docs = small_index()
+        bm = np.asarray(idx.bitmaps)
+        ids = np.asarray(idx.bitmap_term_ids)
+        for row, w in enumerate(ids):
+            for d in range(4):
+                bit = (bm[row, d // 32] >> (d % 32)) & 1
+                assert bool(bit) == (w in docs[d])
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(2, 40), st.integers(2, 8), st.integers(1, 97))
+    def test_property_conjunction_random(self, n_docs, n_terms, seed):
+        rng = np.random.default_rng(seed)
+        docs = [
+            rng.integers(0, n_terms, rng.integers(1, 10)).astype(np.int32)
+            for _ in range(n_docs)
+        ]
+        idx = T.build_text_index_np(docs, n_terms)
+        t = rng.integers(0, n_terms, 2)
+        terms = jnp.array([t[0], t[1], -1, -1], jnp.int32)
+        cand, valid, _ = T.conjunction_candidates(idx, terms, n_docs + 8)
+        got = sorted(set(int(c) for c, v in zip(cand, valid) if v))
+        want = sorted(
+            d for d, dt in enumerate(docs) if t[0] in dt and t[1] in dt
+        )
+        assert got == want
+
+
+def small_spatial(n=40, seed=0, grid=8, m=2):
+    rng = np.random.default_rng(seed)
+    R = 3
+    rects = np.zeros((n, R, 4), np.float32)
+    rects[:, :, 0] = 1.0
+    rects[:, :, 1] = 1.0
+    amps = np.zeros((n, R), np.float32)
+    for i in range(n):
+        k = rng.integers(1, R + 1)
+        for j in range(k):
+            lo = rng.uniform(0, 0.85, 2)
+            hi = lo + rng.uniform(0.02, 0.15, 2)
+            rects[i, j] = [lo[0], lo[1], min(hi[0], 1), min(hi[1], 1)]
+            amps[i, j] = rng.uniform(0.2, 1.0)
+    return S.build_spatial_index_np(rects, amps, grid=grid, m_intervals=m), rects, amps
+
+
+class TestSpatialIndex:
+    def test_morton_sorted(self):
+        idx, _, _ = small_spatial()
+        from repro.core import geometry as G
+
+        cx = np.asarray((idx.tp_rects[:, 0] + idx.tp_rects[:, 2]) / 2)
+        cy = np.asarray((idx.tp_rects[:, 1] + idx.tp_rects[:, 3]) / 2)
+        fine = 1 << 15
+        codes = G.morton_encode_np(
+            np.clip(cx * fine, 0, fine - 1).astype(np.uint32),
+            np.clip(cy * fine, 0, fine - 1).astype(np.uint32),
+        )
+        assert (np.diff(codes) >= 0).all()
+
+    def test_tile_intervals_cover_all_toeprints(self):
+        """Every toe print must be covered by the intervals of every tile it
+        intersects (completeness of the grid structure)."""
+        idx, _, _ = small_spatial()
+        from repro.core import geometry as G
+
+        starts = np.asarray(idx.tile_starts)
+        ends = np.asarray(idx.tile_ends)
+        rects = np.asarray(idx.tp_rects)
+        grid = idx.grid
+        eps = 0.5 / grid * 1e-3
+        for t in range(idx.n_toeprints):
+            x0, y0, x1, y1 = rects[t]
+            tx0 = int(np.clip(np.floor(x0 * grid), 0, grid - 1))
+            ty0 = int(np.clip(np.floor(y0 * grid), 0, grid - 1))
+            tx1 = int(np.clip(np.floor((x1 - eps) * grid), 0, grid - 1))
+            ty1 = int(np.clip(np.floor((y1 - eps) * grid), 0, grid - 1))
+            for ty in range(ty0, ty1 + 1):
+                for tx in range(tx0, tx1 + 1):
+                    tile = ty * grid + tx
+                    covered = any(
+                        starts[tile, j] <= t < ends[tile, j]
+                        for j in range(idx.m_intervals)
+                        if starts[tile, j] != S.INVALID
+                    )
+                    assert covered, (t, tile)
+
+    def test_coalesce_k_sweeps_covers_intervals(self):
+        starts = jnp.array([5, 100, 7, S.INVALID, 102], jnp.int32)
+        ends = jnp.array([9, 105, 12, S.INVALID, 110], jnp.int32)
+        s, e = S.coalesce_k_sweeps(starts, ends, k=2)
+        s, e = np.asarray(s), np.asarray(e)
+        # two sweeps: [5,12) and [100,110)
+        got = sorted((int(a), int(b)) for a, b in zip(s, e) if a != S.INVALID)
+        assert got == [(5, 12), (100, 110)]
+
+    def test_coalesce_k1_single_sweep(self):
+        starts = jnp.array([5, 100, 7], jnp.int32)
+        ends = jnp.array([9, 105, 12], jnp.int32)
+        s, e = S.coalesce_k_sweeps(starts, ends, k=1)
+        got = [(int(a), int(b)) for a, b in zip(np.asarray(s), np.asarray(e)) if a != S.INVALID]
+        assert got == [(5, 105)]
+
+    def test_coalesce_all_invalid(self):
+        starts = jnp.full((4,), S.INVALID, jnp.int32)
+        s, e = S.coalesce_k_sweeps(starts, starts, k=3)
+        assert (np.asarray(s) == S.INVALID).all()
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 500), st.integers(1, 30)), min_size=1, max_size=12),
+           st.integers(1, 6))
+    def test_property_sweeps_cover_and_disjoint(self, ivs, k):
+        starts = jnp.array([a for a, _ in ivs], jnp.int32)
+        ends = jnp.array([a + w for a, w in ivs], jnp.int32)
+        s, e = S.coalesce_k_sweeps(starts, ends, k)
+        s, e = np.asarray(s), np.asarray(e)
+        sw = sorted((a, b) for a, b in zip(s, e) if a != S.INVALID)
+        assert len(sw) <= k
+        # coverage: every interval point set within some sweep
+        for a, w in ivs:
+            assert any(sa <= a and a + w <= sb for sa, sb in sw), (a, w, sw)
+        # disjoint & sorted
+        for (a1, b1), (a2, b2) in zip(sw, sw[1:]):
+            assert b1 <= a2
+
+    def test_fetch_sweeps_masks(self):
+        idx, _, _ = small_spatial()
+        s = jnp.array([0, S.INVALID], jnp.int32)
+        e = jnp.array([5, S.INVALID], jnp.int32)
+        rects, amps, docs, ok = S.fetch_sweeps(idx, s, e, sweep_budget=8)
+        assert int(ok.sum()) == 5
+        assert ok.shape == (16,)

@@ -1,0 +1,106 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret mode on CPU; identical code targets TPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.bitmap_filter.ops import bitmap_and_popcount
+from repro.kernels.bitmap_filter.ref import bitmap_and_popcount_ref
+from repro.kernels.geo_score.ops import geo_score_docs, geo_score_toeprints
+from repro.kernels.geo_score.ref import geo_score_toeprints_ref
+
+
+def _rects(rng, n):
+    lo = rng.uniform(0, 0.9, (n, 2)).astype(np.float32)
+    hi = lo + rng.uniform(0.005, 0.2, (n, 2)).astype(np.float32)
+    return np.concatenate([lo, np.minimum(hi, 1.0)], axis=1)
+
+
+@pytest.mark.parametrize("T", [1, 7, 128, 1024, 1025, 4096, 10000])
+@pytest.mark.parametrize("Q", [1, 2, 8])
+def test_geo_score_shape_sweep(T, Q):
+    rng = np.random.default_rng(T * 31 + Q)
+    r = jnp.asarray(_rects(rng, T))
+    a = jnp.asarray(rng.uniform(0, 1, T).astype(np.float32))
+    qr = jnp.asarray(_rects(rng, Q))
+    qa = jnp.asarray(rng.uniform(0, 1, Q).astype(np.float32))
+    got = geo_score_toeprints(r, a, qr, qa)
+    want = geo_score_toeprints_ref(r, a, qr, qa)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float16, jnp.bfloat16])
+def test_geo_score_dtype_sweep(dtype):
+    rng = np.random.default_rng(9)
+    r = jnp.asarray(_rects(rng, 512)).astype(dtype)
+    a = jnp.asarray(rng.uniform(0, 1, 512).astype(np.float32)).astype(dtype)
+    qr = jnp.asarray(_rects(rng, 4)).astype(dtype)
+    qa = jnp.ones((4,), dtype)
+    got = geo_score_toeprints(r, a, qr, qa)
+    want = geo_score_toeprints_ref(
+        r.astype(jnp.float32), a.astype(jnp.float32),
+        qr.astype(jnp.float32), qa.astype(jnp.float32),
+    )
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+def test_geo_score_empty_rect_padding():
+    rng = np.random.default_rng(1)
+    r = np.asarray(_rects(rng, 8))
+    r[3] = [1.0, 1.0, 0.0, 0.0]  # empty
+    a = np.ones((8,), np.float32)
+    got = geo_score_toeprints(
+        jnp.asarray(r), jnp.asarray(a),
+        jnp.asarray([[0.0, 0.0, 1.0, 1.0]], dtype=jnp.float32), jnp.ones((1,)),
+    )
+    assert float(got[3]) == 0.0
+
+
+def test_geo_score_docs_matches_footprint_module():
+    from repro.core.footprint import geo_score as fp_score
+
+    rng = np.random.default_rng(2)
+    C, R, Q = 33, 3, 2
+    rects = jnp.asarray(_rects(rng, C * R).reshape(C, R, 4))
+    amps = jnp.asarray(rng.uniform(0, 1, (C, R)).astype(np.float32))
+    qr = jnp.asarray(_rects(rng, Q))
+    qa = jnp.ones((Q,))
+    got = geo_score_docs(rects, amps, qr, qa)
+    want = fp_score(rects, amps, qr, qa)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+@pytest.mark.parametrize("d", [1, 2, 3, 4])
+@pytest.mark.parametrize("W", [1, 31, 32, 1024, 1025, 8192])
+def test_bitmap_shape_sweep(d, W):
+    rng = np.random.default_rng(d * 131 + W)
+    bm = jnp.asarray(rng.integers(0, 2**32, (d, W), dtype=np.uint32))
+    g_and, g_cnt = bitmap_and_popcount(bm)
+    w_and, w_cnt = bitmap_and_popcount_ref(bm)
+    np.testing.assert_array_equal(np.asarray(g_and), np.asarray(w_and))
+    np.testing.assert_array_equal(np.asarray(g_cnt), np.asarray(w_cnt))
+
+
+def test_bitmap_known_values():
+    bm = jnp.asarray(np.array([[0b1010, 0xFFFFFFFF], [0b0110, 0xFFFF0000]], np.uint32))
+    anded, cnt = bitmap_and_popcount(bm)
+    assert int(anded[0]) == 0b0010 and int(cnt[0]) == 1
+    assert int(anded[1]) == 0xFFFF0000 and int(cnt[1]) == 16
+
+
+def test_bitmap_conjunction_against_index():
+    """Bitmap AND+popcount equals the brute-force conjunction count."""
+    from repro.core.text_index import build_text_index_np
+
+    rng = np.random.default_rng(4)
+    docs = [rng.integers(0, 6, rng.integers(1, 8)).astype(np.int32) for _ in range(200)]
+    idx = build_text_index_np(docs, 6, n_bitmap_terms=6)
+    ids = np.asarray(idx.bitmap_term_ids)
+    row = {int(w): i for i, w in enumerate(ids)}
+    t0, t1 = 0, 1
+    bm = jnp.asarray(np.asarray(idx.bitmaps)[[row[t0], row[t1]]])
+    _, cnt = bitmap_and_popcount(bm)
+    want = sum(1 for d in docs if t0 in d and t1 in d)
+    assert int(cnt.sum()) == want
