@@ -13,6 +13,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
                      (paper §Conclusions future work).
 * ``kernel_*``     — Pallas kernels vs jnp oracles (CPU interpret: check
                      only; derived column reports modeled VMEM bytes/call).
+* ``serving_*``    — the production serving stack (repro.serving): zipf
+                     trace through cache + shape-bucketed batcher, QPS,
+                     p50/p99 latency, hit rate, padding overhead.  The
+                     full sweep lives in ``benchmarks.serve_bench``.
 
 Usage: ``PYTHONPATH=src python -m benchmarks.run [--quick]``
 """
@@ -246,8 +250,7 @@ def bench_distributed(quick: bool) -> None:
     budgets = QueryBudgets(max_candidates=512, max_tiles=64, k_sweeps=4,
                            sweep_budget=256, top_k=10)
     n = len(jax.devices())
-    mesh = jax.make_mesh((n, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = jax.make_mesh((n, 1), ("data", "model"))
     sharded = shard_corpus_np(corpus.doc_terms, corpus.doc_rects, corpus.doc_amps,
                               corpus.pagerank, corpus.n_terms, n, "geo", grid=32)
     serve = make_serve_fn(mesh, budgets, doc_axes=("data",), grid=32,
@@ -256,6 +259,37 @@ def bench_distributed(quick: bool) -> None:
     with mesh:
         dt, _ = _time(lambda: serve(sharded, trace))
     _row("distributed_serve", dt / 32 * 1e6, f"devices={n}")
+
+
+def bench_serving(quick: bool) -> None:
+    """End-to-end serving stack on a Zipf trace (cache × batcher)."""
+    from repro.core import GeoSearchEngine, QueryBudgets
+    from repro.corpus import make_corpus, make_zipf_trace
+    from repro.serving import (
+        GeoServer, ShapeBucketedBatcher, SingleDeviceExecutor, make_cache,
+    )
+
+    n_docs = 2000 if quick else 12000
+    n_q = 512 if quick else 2048
+    corpus = make_corpus(n_docs, 500 if quick else 1500, seed=9)
+    budgets = QueryBudgets(
+        max_candidates=1024, max_tiles=256, k_sweeps=8,
+        sweep_budget=max(n_docs // 8, 256), top_k=10,
+    )
+    eng = GeoSearchEngine.build(
+        corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
+        pagerank=corpus.pagerank, grid=32, budgets=budgets,
+    )
+    trace = make_zipf_trace(corpus, n_queries=n_q, pool_size=max(n_q // 8, 32), seed=10)
+    from benchmarks.serve_bench import report_row
+
+    for cache in ["none", "landlord"]:
+        server = GeoServer(
+            SingleDeviceExecutor(eng),
+            cache=make_cache(cache, 512),
+            batcher=ShapeBucketedBatcher(max_batch=32, max_terms=8, max_rects=4),
+        )
+        report_row(f"serving_zipf_{cache}", server.run_trace(trace))
 
 
 def main() -> None:
@@ -269,6 +303,7 @@ def main() -> None:
     bench_geo_partition(args.quick)
     bench_kernels(args.quick)
     bench_distributed(args.quick)
+    bench_serving(args.quick)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,115 @@
+"""Serving-stack benchmark: cache policy × batcher × sharding sweeps.
+
+Prints the same ``name,us_per_call,derived`` CSV rows as ``benchmarks.run``
+but for the serving layer (``repro.serving``):
+
+* ``serve_cache_*``   — zipf trace through none / lru / landlord caches:
+                        QPS, p50/p99 latency, hit rate.
+* ``serve_batcher_*`` — bucketed vs fixed-shape batching: padding overhead
+                        and number of compiled shapes.
+* ``serve_shards_*``  — doc-sharded scatter-gather execution.
+
+All single-device rows share one engine so jit compiles amortize across
+configurations (the engine's compiled-function cache is keyed per shape,
+exactly as a long-running server would hold it).
+
+``--smoke`` shrinks corpus/trace/bucket-lattice so the whole file finishes
+in well under a minute on CPU — it is part of ``scripts/check.sh``'s
+pre-merge gate.
+
+Usage: ``PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]``
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core import GeoSearchEngine, QueryBudgets
+from repro.corpus import make_corpus, make_uniform_trace, make_zipf_trace
+from repro.serving import (
+    GeoServer,
+    ShapeBucketedBatcher,
+    ShardedExecutor,
+    SingleDeviceExecutor,
+    make_cache,
+)
+
+
+def _row(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def report_row(name: str, rep) -> None:
+    """Shared derived-column format for serving rows (also used by run.py)."""
+    _row(
+        name,
+        1e6 / rep.qps if rep.qps else 0.0,
+        f"qps={rep.qps:.0f};p50_ms={rep.percentile_ms(50):.3f};"
+        f"p99_ms={rep.percentile_ms(99):.3f};hit_rate={rep.hit_rate:.3f};"
+        f"padding={rep.padding_overhead:.3f};shapes={rep.n_compiled_shapes}",
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes; finishes < 60 s on CPU (pre-merge gate)")
+    args = ap.parse_args()
+    smoke = args.smoke
+    n_docs = 1200 if smoke else 20000
+    n_q = 384 if smoke else 4096
+    max_batch = 16 if smoke else 32
+    # smoke: a coarse bucket lattice → few compiles; full: the real lattice
+    buckets = dict(
+        term_buckets=[4, 8] if smoke else [],
+        rect_buckets=[2, 4] if smoke else [],
+    )
+
+    def batcher(kind="bucketed"):
+        if kind == "fixed":
+            return ShapeBucketedBatcher(
+                max_batch=max_batch, max_terms=8, max_rects=4,
+                term_buckets=[8], rect_buckets=[4], batch_sizes=[max_batch],
+            )
+        return ShapeBucketedBatcher(
+            max_batch=max_batch, max_terms=8, max_rects=4,
+            term_buckets=list(buckets["term_buckets"]),
+            rect_buckets=list(buckets["rect_buckets"]),
+        )
+
+    print("name,us_per_call,derived")
+    corpus = make_corpus(n_docs, 400 if smoke else 2000, seed=0)
+    budgets = QueryBudgets(
+        max_candidates=1024, max_tiles=256, k_sweeps=8,
+        sweep_budget=max(n_docs // 8, 256), top_k=10,
+    )
+    eng = GeoSearchEngine.build(
+        corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
+        pagerank=corpus.pagerank, grid=32, budgets=budgets,
+    )
+    single = SingleDeviceExecutor(eng)
+    zipf = make_zipf_trace(corpus, n_queries=n_q, pool_size=max(n_q // 8, 32), seed=1)
+    uni = make_uniform_trace(corpus, n_queries=n_q // 2, seed=1)
+
+    for cache in ["none", "lru", "landlord"]:
+        server = GeoServer(single, cache=make_cache(cache, 512), batcher=batcher())
+        report_row(f"serve_cache_{cache}_zipf", server.run_trace(zipf))
+    server = GeoServer(single, cache=make_cache("landlord", 512), batcher=batcher())
+    report_row("serve_cache_landlord_uniform", server.run_trace(uni))
+
+    for kind in ["bucketed", "fixed"]:
+        server = GeoServer(single, cache=None, batcher=batcher(kind))
+        report_row(f"serve_batcher_{kind}", server.run_trace(zipf))
+
+    sharded = ShardedExecutor.build(
+        corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
+        pagerank=corpus.pagerank, n_shards=2 if smoke else 4, partition="geo",
+        grid=32, budgets=budgets,
+    )
+    # fixed shape for the sharded row: per-shard engines each compile fresh,
+    # so keep the smoke-mode compile count at one shape per shard
+    server = GeoServer(sharded, cache=None, batcher=batcher("fixed"))
+    report_row(f"serve_shards_{sharded.n_shards}", server.run_trace(zipf))
+
+
+if __name__ == "__main__":
+    main()

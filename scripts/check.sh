@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Pre-merge gate: compile sanity, tier-1 tests, serving smoke bench.
+# Usage: scripts/check.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== compileall =="
+python -m compileall -q src benchmarks
+
+echo "== tier-1 pytest =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+
+echo "== serving smoke bench =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.serve_bench --smoke
+
+echo "== OK =="

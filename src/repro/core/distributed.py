@@ -36,7 +36,12 @@ from repro.core import algorithms as alg
 from repro.core import ranking
 from repro.core.engine import GeoIndex
 from repro.core.spatial_index import SpatialIndex, build_spatial_index_np
-from repro.core.text_index import TextIndex, build_text_index_np
+from repro.core.text_index import (
+    TextIndex,
+    build_text_index_np,
+    global_idf_np as tidx_global_idf,
+    rescale_impacts_to_global,
+)
 from repro.core import geometry
 
 
@@ -69,6 +74,23 @@ class ShardedGeoIndex:
         return self.postings.shape[0]
 
 
+def partition_order(doc_rects: np.ndarray, n_shards: int, partition: str) -> np.ndarray:
+    """Doc permutation for sharding: ``hash`` round-robin or ``geo`` Morton."""
+    n_docs = doc_rects.shape[0]
+    if partition == "geo":
+        cx = doc_rects[:, :, [0, 2]].mean(axis=(1, 2))
+        cy = doc_rects[:, :, [1, 3]].mean(axis=(1, 2))
+        fine = 1 << 15
+        code = geometry.morton_encode_np(
+            np.clip((cx * fine), 0, fine - 1).astype(np.uint32),
+            np.clip((cy * fine), 0, fine - 1).astype(np.uint32),
+        )
+        return np.argsort(code, kind="stable")
+    if partition == "hash":
+        return np.argsort(np.arange(n_docs) % n_shards, kind="stable")
+    raise ValueError(partition)
+
+
 def shard_corpus_np(
     doc_terms: list[np.ndarray],
     doc_rects: np.ndarray,
@@ -82,21 +104,10 @@ def shard_corpus_np(
 ) -> ShardedGeoIndex:
     """Partition a corpus and build one index per shard (host side)."""
     n_docs = len(doc_terms)
-    if partition == "geo":
-        cx = doc_rects[:, :, [0, 2]].mean(axis=(1, 2))
-        cy = doc_rects[:, :, [1, 3]].mean(axis=(1, 2))
-        fine = 1 << 15
-        code = geometry.morton_encode_np(
-            np.clip((cx * fine), 0, fine - 1).astype(np.uint32),
-            np.clip((cy * fine), 0, fine - 1).astype(np.uint32),
-        )
-        order = np.argsort(code, kind="stable")
-    elif partition == "hash":
-        order = np.argsort(np.arange(n_docs) % n_shards, kind="stable")
-    else:
-        raise ValueError(partition)
+    order = partition_order(doc_rects, n_shards, partition)
 
     per = (n_docs + n_shards - 1) // n_shards
+    idf_global = tidx_global_idf(doc_terms, n_terms)
     shards = []
     offsets = []
     global_ids = []
@@ -106,6 +117,9 @@ def shard_corpus_np(
         global_ids.append(sel)
         terms = [doc_terms[i] for i in sel]
         text = build_text_index_np(terms, n_terms)
+        # broadcast global term statistics (IDF) so shards rank like the
+        # single-index engine would
+        text = rescale_impacts_to_global(text, idf_global)
         spatial = build_spatial_index_np(
             doc_rects[sel], doc_amps[sel], grid, m_intervals
         )

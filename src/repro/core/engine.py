@@ -136,12 +136,15 @@ class GeoSearchEngine:
         want = self.oracle(batch, k)
         got_ids = np.asarray(got.ids)
         want_ids = np.asarray(want.ids)
-        hits, total = 0, 0
-        for b in range(got_ids.shape[0]):
-            w = set(int(x) for x in want_ids[b] if x >= 0)
-            g = set(int(x) for x in got_ids[b] if x >= 0)
-            total += len(w)
-            hits += len(w & g)
+        # vectorized membership: want[b, i] found anywhere in got[b, :]
+        want_valid = want_ids >= 0
+        got_valid = got_ids >= 0
+        found = (
+            (want_ids[:, :, None] == got_ids[:, None, :])
+            & want_valid[:, :, None]
+            & got_valid[:, None, :]
+        ).any(axis=-1)
+        total = int(want_valid.sum())
         if total == 0:
             return 1.0  # vacuous: no query has any valid result
-        return hits / total
+        return float(found.sum()) / total

@@ -129,6 +129,39 @@ def quantize_impacts(index: TextIndex, dtype=jnp.float16) -> TextIndex:
     )
 
 
+def global_idf_np(doc_terms: list[np.ndarray], n_terms: int) -> np.ndarray:
+    """Corpus-wide IDF, matching ``build_text_index_np``'s formula."""
+    df = np.zeros((n_terms,), dtype=np.float64)
+    for terms in doc_terms:
+        np.add.at(df, np.unique(terms), 1.0)
+    return np.log(1.0 + len(doc_terms) / np.maximum(df, 1.0))
+
+
+def rescale_impacts_to_global(index: TextIndex, idf_global: np.ndarray) -> TextIndex:
+    """Swap a shard-local index's IDF for the corpus-global one.
+
+    Text impacts are ``idf · (1+log tf) / sqrt(doc_len)``; tf and doc_len
+    are per-document, but idf is a *collection* statistic — a shard scoring
+    with its local idf would rank differently from the whole corpus.  Real
+    distributed engines broadcast global term stats to every shard; we do
+    the same by rescaling each posting's impact by ``idf_global/idf_local``.
+    """
+    offsets = np.asarray(index.offsets)
+    counts = np.diff(offsets)
+    idf_local = np.log(1.0 + index.n_docs / np.maximum(counts.astype(np.float64), 1.0))
+    ratio = np.where(counts > 0, idf_global / idf_local, 1.0)
+    impacts = np.asarray(index.impacts) * np.repeat(ratio, counts).astype(np.float32)
+    return TextIndex(
+        postings=index.postings,
+        impacts=jnp.asarray(impacts),
+        offsets=index.offsets,
+        bitmaps=index.bitmaps,
+        bitmap_term_ids=index.bitmap_term_ids,
+        n_docs=index.n_docs,
+        n_terms=index.n_terms,
+    )
+
+
 # ---------------------------------------------------------------------------
 # Query-time primitives (jit-safe)
 # ---------------------------------------------------------------------------

@@ -1,3 +1,17 @@
-from repro.corpus.synth import SynthCorpus, make_corpus, make_query_trace
+from repro.corpus.synth import (
+    SynthCorpus,
+    TraceQuery,
+    make_corpus,
+    make_query_trace,
+    make_uniform_trace,
+    make_zipf_trace,
+)
 
-__all__ = ["SynthCorpus", "make_corpus", "make_query_trace"]
+__all__ = [
+    "SynthCorpus",
+    "TraceQuery",
+    "make_corpus",
+    "make_query_trace",
+    "make_uniform_trace",
+    "make_zipf_trace",
+]

@@ -14,6 +14,10 @@ extracted footprints, plus a realistic geographic query trace):
   footprints; non-geo docs get a country-wide low-amplitude rect).
 * **Queries**: ``d`` terms from the same Zipf head + a footprint around a
   random city with town/city/region extent.
+* **Traces** (``make_zipf_trace``): a *stream* of variable-width queries
+  with Zipf-skewed repetition over a finite pool of distinct searches and
+  geographic hot-spot locality — the workload shape the serving layer's
+  cache and batcher are designed for.
 """
 from __future__ import annotations
 
@@ -137,3 +141,88 @@ def make_query_trace(
     return QueryBatch(
         terms=jnp.asarray(terms), rects=jnp.asarray(rects), amps=jnp.asarray(amps)
     )
+
+
+@dataclass
+class TraceQuery:
+    """One un-padded query in a serving trace (variable widths)."""
+
+    terms: np.ndarray  # i32[d], no padding
+    rects: np.ndarray  # f32[r, 4]
+    amps: np.ndarray  # f32[r]
+
+
+def _one_query(rng, corpus: SynthCorpus, city: int, d_terms: int, q_rects: int):
+    """Sample one variable-width query about ``city`` (terms from a doc)."""
+    nt = int(rng.integers(1, d_terms + 1))
+    doc = corpus.doc_terms[rng.integers(0, len(corpus.doc_terms))]
+    terms = np.unique(rng.choice(doc, size=min(nt, len(doc)), replace=False))
+    x, y, r = corpus.cities[city]
+    scales = np.array([0.3, 1.0, 3.0])
+    rects, amps = [], []
+    for _ in range(int(rng.integers(1, q_rects + 1))):
+        w = r * scales[rng.integers(0, 3)] * rng.uniform(0.5, 1.0)
+        px = np.clip(x + rng.normal(0, r / 4), 0.001, 0.999)
+        py = np.clip(y + rng.normal(0, r / 4), 0.001, 0.999)
+        x0, x1 = np.clip(px - w, 0, 1), np.clip(px + w, 0, 1)
+        y0, y1 = np.clip(py - w, 0, 1), np.clip(py + w, 0, 1)
+        if x1 <= x0 or y1 <= y0:
+            continue
+        rects.append((x0, y0, x1, y1))
+        amps.append(1.0)
+    if not rects:  # degenerate draw: whole-city rect
+        rects, amps = [(x - r, y - r, x + r, y + r)], [1.0]
+    return TraceQuery(
+        terms=terms.astype(np.int32),
+        rects=np.asarray(rects, dtype=np.float32),
+        amps=np.asarray(amps, dtype=np.float32),
+    )
+
+
+def make_zipf_trace(
+    corpus: SynthCorpus,
+    n_queries: int = 2048,
+    pool_size: int = 256,
+    zipf_a: float = 1.1,
+    hot_frac: float = 0.8,
+    n_hot_cities: int = 4,
+    d_terms: int = 4,
+    q_rects: int = 2,
+    seed: int = 1,
+) -> list[TraceQuery]:
+    """Skewed serving trace: Zipf repetition + geographic hot spots.
+
+    A pool of ``pool_size`` distinct queries is built first; ``hot_frac``
+    of them are about one of the ``n_hot_cities`` largest cities (the
+    paper's observation that geographic query load concentrates on big
+    population centers).  The trace then samples the pool with Zipf(``a``)
+    rank skew, so head queries repeat heavily — the regime where a result
+    cache pays for itself — while the tail keeps the batcher honest.
+    """
+    rng = np.random.default_rng(seed)
+    hot = np.argsort(-corpus.cities[:, 2])[:n_hot_cities]
+    pool = []
+    for _ in range(pool_size):
+        if rng.random() < hot_frac:
+            city = int(hot[rng.integers(0, len(hot))])
+        else:
+            city = int(rng.integers(0, len(corpus.cities)))
+        pool.append(_one_query(rng, corpus, city, d_terms, q_rects))
+    # Zipf over pool ranks (rejection-free: clip the unbounded tail)
+    ranks = np.minimum(rng.zipf(zipf_a, n_queries) - 1, pool_size - 1)
+    return [pool[r] for r in ranks]
+
+
+def make_uniform_trace(
+    corpus: SynthCorpus,
+    n_queries: int = 2048,
+    d_terms: int = 4,
+    q_rects: int = 2,
+    seed: int = 1,
+) -> list[TraceQuery]:
+    """Adversarial trace for the cache: every query distinct, no locality."""
+    rng = np.random.default_rng(seed)
+    return [
+        _one_query(rng, corpus, int(rng.integers(0, len(corpus.cities))), d_terms, q_rects)
+        for _ in range(n_queries)
+    ]

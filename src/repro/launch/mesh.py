@@ -16,7 +16,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        shape, axes
     )
 
 
@@ -27,5 +27,5 @@ def make_host_mesh(shape: tuple[int, ...] | None = None, axes: tuple[str, ...] |
         shape = (n, 1) if n > 1 else (1, 1)
         axes = ("data", "model")
     return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        shape, axes
     )

@@ -1,18 +1,70 @@
-"""Serving launcher for the geo search engine (the paper's workload).
+"""Serving launcher: trace-driven serving through ``repro.serving``.
 
-Builds a synthetic corpus + indexes, then serves batched query traffic
-through the selected algorithm, reporting QPS, latency, recall@10 vs the
-exact oracle, and the per-stage byte counters the paper optimizes.
+Builds a synthetic corpus + indexes, generates a serving trace (Zipf-skewed
+with geographic hot spots, or adversarially uniform), then drives it
+through the production serving stack —
+
+    trace → fingerprint → result cache → shape-bucketed batcher
+          → (sharded) executor → scatter-gather top-k merge
+
+— reporting QPS, p50/p99 latency, cache hit rate, padding overhead, number
+of compiled batch shapes, recall@k vs the exact oracle, and the paper's
+per-stage byte counters.
+
+    python -m repro.launch.serve --trace zipf --cache landlord --batcher bucketed
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import numpy as np
 
 from repro.core import GeoSearchEngine, QueryBudgets
-from repro.corpus import make_corpus, make_query_trace
+from repro.corpus import make_corpus, make_uniform_trace, make_zipf_trace
+from repro.serving import (
+    GeoServer,
+    ShapeBucketedBatcher,
+    ShardedExecutor,
+    SingleDeviceExecutor,
+    make_cache,
+)
+
+
+def build_stack(args, corpus):
+    budgets = QueryBudgets(
+        max_candidates=2048, max_tiles=256, k_sweeps=8,
+        sweep_budget=max(args.n_docs // 8, 256), top_k=args.top_k,
+    )
+    kw = {}
+    if args.use_pallas and args.algorithm == "k_sweep":
+        from repro.kernels.geo_score.ops import geo_score_toeprints
+
+        kw = {"tp_scorer": geo_score_toeprints}
+    if args.shards > 1:
+        executor = ShardedExecutor.build(
+            corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
+            pagerank=corpus.pagerank, n_shards=args.shards,
+            partition=args.partition, grid=args.grid, budgets=budgets,
+            algorithm=args.algorithm, **kw,
+        )
+    else:
+        eng = GeoSearchEngine.build(
+            corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
+            pagerank=corpus.pagerank, grid=args.grid, budgets=budgets,
+        )
+        executor = SingleDeviceExecutor(eng, args.algorithm, **kw)
+
+    cache = make_cache(args.cache, args.cache_capacity)
+    if args.batcher == "bucketed":
+        batcher = ShapeBucketedBatcher(
+            max_batch=args.batch, max_terms=8, max_rects=4
+        )
+    else:  # "fixed": one shape only — full padding, the pre-serving baseline
+        batcher = ShapeBucketedBatcher(
+            max_batch=args.batch, max_terms=8, max_rects=4,
+            term_buckets=[8], rect_buckets=[4], batch_sizes=[args.batch],
+        )
+    return GeoServer(executor, cache=cache, batcher=batcher), budgets
 
 
 def main() -> None:
@@ -20,57 +72,60 @@ def main() -> None:
     ap.add_argument("--n-docs", type=int, default=20000)
     ap.add_argument("--n-terms", type=int, default=2000)
     ap.add_argument("--grid", type=int, default=64)
-    ap.add_argument("--queries", type=int, default=256)
-    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--queries", type=int, default=2048)
+    ap.add_argument("--batch", type=int, default=32, help="max micro-batch size")
+    ap.add_argument("--top-k", type=int, default=10)
+    ap.add_argument("--trace", default="zipf", choices=["zipf", "uniform"])
+    ap.add_argument("--pool-size", type=int, default=256,
+                    help="distinct queries in the zipf trace pool")
+    ap.add_argument("--cache", default="landlord", choices=["none", "lru", "landlord"])
+    ap.add_argument("--cache-capacity", type=int, default=512)
+    ap.add_argument("--batcher", default="bucketed", choices=["bucketed", "fixed"])
+    ap.add_argument("--shards", type=int, default=1)
+    ap.add_argument("--partition", default="geo", choices=["hash", "geo"])
     ap.add_argument("--algorithm", default="k_sweep",
-                    choices=["text_first", "geo_first", "k_sweep", "all"])
+                    choices=["text_first", "geo_first", "k_sweep"])
     ap.add_argument("--use-pallas", action="store_true",
                     help="score with the Pallas geo_score kernel (interpret on CPU)")
+    ap.add_argument("--no-recall", action="store_true",
+                    help="skip the oracle recall check (slow on big corpora)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     print(f"building corpus: {args.n_docs} docs, {args.n_terms} terms …")
     corpus = make_corpus(args.n_docs, args.n_terms, seed=args.seed)
-    budgets = QueryBudgets(
-        max_candidates=2048, max_tiles=256, k_sweeps=8,
-        sweep_budget=max(args.n_docs // 8, 256), top_k=10,
-    )
-    eng = GeoSearchEngine.build(
-        corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
-        pagerank=corpus.pagerank, grid=args.grid, budgets=budgets,
-    )
-    trace = make_query_trace(corpus, n_queries=args.queries, seed=args.seed + 1)
+    server, budgets = build_stack(args, corpus)
 
-    algos = ["text_first", "geo_first", "k_sweep"] if args.algorithm == "all" else [args.algorithm]
-    kw = {}
-    if args.use_pallas:
-        from repro.kernels.geo_score.ops import geo_score_toeprints
-        kw = {"tp_scorer": geo_score_toeprints}
-
-    import jax
-    for algo in algos:
-        akw = kw if algo == "k_sweep" else {}
-        # batched serving loop
-        n_batches = args.queries // args.batch
-        # warmup/compile
-        sub = jax.tree.map(lambda x: x[: args.batch], trace)
-        eng.query(sub, algo, **akw)
-        t0 = time.perf_counter()
-        stats_acc: dict[str, float] = {}
-        for i in range(n_batches):
-            sub = jax.tree.map(lambda x: x[i * args.batch : (i + 1) * args.batch], trace)
-            res = eng.query(sub, algo, **akw)
-            for k, v in res.stats.items():
-                stats_acc[k] = stats_acc.get(k, 0.0) + float(np.asarray(v).sum())
-        jax.block_until_ready(res.scores)
-        dt = time.perf_counter() - t0
-        qps = n_batches * args.batch / dt
-        recall = eng.recall_at_k(jax.tree.map(lambda x: x[: args.batch], trace), algo)
-        per_q = {k: v / (n_batches * args.batch) for k, v in stats_acc.items()}
-        print(
-            f"{algo:12s} qps={qps:8.1f}  ms/query={1e3/qps:6.3f}  recall@10={recall:.3f}  "
-            + "  ".join(f"{k}={v:,.0f}" for k, v in sorted(per_q.items()))
+    if args.trace == "zipf":
+        trace = make_zipf_trace(
+            corpus, n_queries=args.queries, pool_size=args.pool_size,
+            seed=args.seed + 1,
         )
+    else:
+        trace = make_uniform_trace(corpus, n_queries=args.queries, seed=args.seed + 1)
+
+    print(
+        f"serving {len(trace)} queries: trace={args.trace} cache={args.cache} "
+        f"batcher={args.batcher} shards={args.shards} algo={args.algorithm} …"
+    )
+    report = server.run_trace(trace)
+    print(report.summary())
+
+    if not args.no_recall:
+        from repro.corpus import make_query_trace
+
+        eng = (
+            server.executor.engine
+            if isinstance(server.executor, SingleDeviceExecutor)
+            else GeoSearchEngine.build(
+                corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
+                pagerank=corpus.pagerank, grid=args.grid, budgets=budgets,
+            )
+        )
+        probe = make_query_trace(corpus, n_queries=min(64, args.queries),
+                                 seed=args.seed + 2)
+        rec = eng.recall_at_k(probe, args.algorithm)
+        print(f"recall@{budgets.top_k} vs oracle = {rec:.3f}")
 
 
 if __name__ == "__main__":

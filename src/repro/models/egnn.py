@@ -167,7 +167,8 @@ def make_sharded_loss(cfg: EGNNConfig, mesh):
         N_loc = feats.shape[0]
         P_tot = 1
         for a in axes:
-            P_tot *= jax.lax.axis_size(a)
+            # jax.lax.axis_size only exists in newer jax; psum(1) is equivalent
+            P_tot *= jax.lax.psum(1, a)
         N = N_loc * P_tot
 
         h = feats.astype(cfg.compute_dtype) @ params["encode"].astype(cfg.compute_dtype)

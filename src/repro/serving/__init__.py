@@ -1,0 +1,41 @@
+"""repro.serving — the production serving layer around the geo engine.
+
+The paper evaluates query processing against *real query traces*: skewed,
+bursty traffic where most of the end-to-end cost is decided by the layer
+around the index, not the index alone.  This package is that layer:
+
+    trace ──► fingerprint ──► result cache ──► shape-bucketed batcher
+                                  │                      │
+                                  │ hit                  ▼ miss batches
+                                  ▼              sharded executor
+                               response ◄──── scatter-gather top-k merge
+
+* :mod:`repro.serving.fingerprint` — normalized query keys (sorted terms +
+  quantized footprint rects) so geographically-near duplicates collide.
+* :mod:`repro.serving.cache`       — LRU and cost-aware Landlord caches.
+* :mod:`repro.serving.batcher`     — dynamic micro-batcher over a small
+  registry of padded static shapes (bounded jit recompiles).
+* :mod:`repro.serving.executor`    — single-device and doc-sharded
+  scatter-gather execution of query batches.
+* :mod:`repro.serving.server`      — the serve loop tying it together plus
+  QPS / latency / hit-rate / padding metrics.
+"""
+from repro.serving.batcher import BucketShape, ShapeBucketedBatcher
+from repro.serving.cache import LandlordCache, LRUCache, make_cache
+from repro.serving.executor import MeshExecutor, ShardedExecutor, SingleDeviceExecutor
+from repro.serving.fingerprint import query_fingerprint
+from repro.serving.server import GeoServer, ServeReport
+
+__all__ = [
+    "BucketShape",
+    "ShapeBucketedBatcher",
+    "LRUCache",
+    "LandlordCache",
+    "make_cache",
+    "SingleDeviceExecutor",
+    "ShardedExecutor",
+    "MeshExecutor",
+    "query_fingerprint",
+    "GeoServer",
+    "ServeReport",
+]

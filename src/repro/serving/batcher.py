@@ -1,0 +1,159 @@
+"""Shape-bucketed dynamic micro-batcher.
+
+The engine's query pipeline is jit-compiled per static shape
+``(batch, terms_per_query, rects_per_query)``.  A naive dynamic batcher
+would emit a fresh shape — and a fresh XLA compile — for every mix of
+query widths in flight.  This batcher instead *registers a small lattice
+of static shapes up front* (power-of-two term/rect capacities × power-of-
+two batch sizes) and pads every incoming query up to the nearest bucket:
+
+* the number of distinct compiled programs is bounded by
+  ``len(term_buckets) · len(rect_buckets) · log2(max_batch)+1`` regardless
+  of trace length;
+* padding waste is *measured*, not hidden — ``pad_slots`` (whole dummy
+  queries emitted to round a batch up) and ``pad_elements`` (padded term /
+  rect cells inside real queries) feed the serving report's
+  ``padding_overhead`` column.
+
+Invariants (unit-tested): every emitted batch's shape is in the registered
+set, and every submitted query appears in exactly one emitted batch.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class BucketShape:
+    """One registered static shape: capacities, not actual occupancy."""
+
+    batch: int
+    d_terms: int
+    q_rects: int
+
+
+@dataclass
+class PendingQuery:
+    qid: int
+    terms: np.ndarray  # i32[d]  (no padding)
+    rects: np.ndarray  # f32[r, 4]
+    amps: np.ndarray  # f32[r]
+
+
+@dataclass
+class RawBatch:
+    """A padded batch ready for the executor (host-side numpy)."""
+
+    shape: BucketShape
+    qids: list[int]  # real queries, len <= shape.batch
+    terms: np.ndarray  # i32[B, d]
+    rects: np.ndarray  # f32[B, r, 4]
+    amps: np.ndarray  # f32[B, r]
+
+    @property
+    def n_real(self) -> int:
+        return len(self.qids)
+
+
+def _pow2_buckets(max_value: int) -> list[int]:
+    out, v = [], 1
+    while v < max_value:
+        out.append(v)
+        v *= 2
+    out.append(max_value)
+    return out
+
+
+@dataclass
+class ShapeBucketedBatcher:
+    """Groups queries by (term, rect) bucket; flushes full or on demand."""
+
+    max_batch: int = 32
+    max_terms: int = 8
+    max_rects: int = 4
+    # filled in __post_init__
+    term_buckets: list[int] = field(default_factory=list)
+    rect_buckets: list[int] = field(default_factory=list)
+    batch_sizes: list[int] = field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        self.term_buckets = self.term_buckets or _pow2_buckets(self.max_terms)
+        self.rect_buckets = self.rect_buckets or _pow2_buckets(self.max_rects)
+        self.batch_sizes = self.batch_sizes or _pow2_buckets(self.max_batch)
+        self._pending: dict[tuple[int, int], list[PendingQuery]] = {}
+        # padding accounting
+        self.pad_slots = 0  # dummy whole-query rows
+        self.real_slots = 0
+        self.pad_elements = 0  # padded term/rect cells in real queries
+        self.real_elements = 0
+        self.emitted_shapes: set[BucketShape] = set()
+
+    # ------------------------------------------------------------------
+    @property
+    def registered_shapes(self) -> set[BucketShape]:
+        return {
+            BucketShape(b, d, r)
+            for b in self.batch_sizes
+            for d in self.term_buckets
+            for r in self.rect_buckets
+        }
+
+    def _bucket_of(self, n: int, buckets: list[int]) -> int:
+        for b in buckets:
+            if n <= b:
+                return b
+        raise ValueError(f"query dimension {n} exceeds largest bucket {buckets[-1]}")
+
+    # ------------------------------------------------------------------
+    def add(self, q: PendingQuery) -> list[RawBatch]:
+        """Enqueue one query; returns any batch made full by it."""
+        d = self._bucket_of(max(len(q.terms), 1), self.term_buckets)
+        r = self._bucket_of(max(len(q.rects), 1), self.rect_buckets)
+        key = (d, r)
+        self._pending.setdefault(key, []).append(q)
+        if len(self._pending[key]) >= self.max_batch:
+            return [self._emit(key, self._pending.pop(key))]
+        return []
+
+    def flush(self) -> list[RawBatch]:
+        """Emit everything still pending (end of trace / wait timeout)."""
+        out = [self._emit(k, qs) for k, qs in self._pending.items()]
+        self._pending.clear()
+        return out
+
+    # ------------------------------------------------------------------
+    def _emit(self, key: tuple[int, int], qs: list[PendingQuery]) -> RawBatch:
+        d, r = key
+        B = self._bucket_of(len(qs), self.batch_sizes)
+        shape = BucketShape(B, d, r)
+        terms = np.full((B, d), -1, dtype=np.int32)
+        rects = np.zeros((B, r, 4), dtype=np.float32)
+        rects[:, :, 0] = 1.0  # empty-rect padding (x1 < x0)
+        rects[:, :, 1] = 1.0
+        amps = np.zeros((B, r), dtype=np.float32)
+        for i, q in enumerate(qs):
+            nt, nr = len(q.terms), len(q.rects)
+            terms[i, :nt] = q.terms
+            rects[i, :nr] = q.rects
+            amps[i, :nr] = q.amps
+            self.pad_elements += (d - nt) + (r - nr)
+            self.real_elements += nt + nr
+        self.pad_slots += B - len(qs)
+        self.real_slots += len(qs)
+        self.emitted_shapes.add(shape)
+        return RawBatch(shape, [q.qid for q in qs], terms, rects, amps)
+
+    # ------------------------------------------------------------------
+    @property
+    def padding_overhead(self) -> float:
+        """Fraction of emitted batch slots that were padding."""
+        total = self.pad_slots + self.real_slots
+        return self.pad_slots / total if total else 0.0
+
+    @property
+    def element_padding_overhead(self) -> float:
+        """Fraction of term/rect cells inside real rows that were padding."""
+        total = self.pad_elements + self.real_elements
+        return self.pad_elements / total if total else 0.0

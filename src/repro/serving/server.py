@@ -1,0 +1,257 @@
+"""GeoServer: the trace-driven serve loop.
+
+One query's life:
+
+1. **fingerprint** — the raw (terms, rects, amps) triple is normalized
+   (:mod:`repro.serving.fingerprint`); near-duplicate searches collide.
+2. **cache lookup** — a hit returns the cached top-k immediately; its
+   latency is just the lookup.
+3. **batcher** — misses queue in their (terms, rects) shape bucket; a full
+   bucket flushes as one padded static-shape batch.
+4. **executor** — the batch runs on the engine (single device or sharded
+   scatter-gather); per-query rows are scattered back to their submitters,
+   latency = completion − arrival (so queue wait inside a bucket counts).
+5. **cache fill** — each executed query's result is inserted with its
+   *cost* (its share of the batch's measured execution time), which is
+   what the Landlord policy spends as eviction credit.
+
+``run_trace`` drives a whole trace through this loop and returns a
+:class:`ServeReport` with QPS, p50/p99 latency, cache hit rate, padding
+overhead, and the paper's per-stage byte counters (summed over executed
+batches — cache hits move no bytes, which is the point).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import algorithms as alg
+from repro.corpus.synth import TraceQuery
+from repro.serving.batcher import PendingQuery, RawBatch, ShapeBucketedBatcher
+from repro.serving.fingerprint import query_fingerprint
+
+
+@dataclass
+class QueryResult:
+    ids: np.ndarray  # i32[k]
+    scores: np.ndarray  # f32[k]
+
+
+@dataclass
+class ServeReport:
+    n_queries: int = 0
+    wall_s: float = 0.0
+    latencies_s: list[float] = field(default_factory=list)
+    cache_hits: int = 0
+    cache_misses: int = 0
+    n_batches: int = 0
+    pad_slots: int = 0
+    real_slots: int = 0
+    element_padding_overhead: float = 0.0
+    n_compiled_shapes: int = 0
+    stats: dict[str, float] = field(default_factory=dict)  # summed byte counters
+    shapes_used: set = field(default_factory=set)  # distinct shapes this run
+
+    @property
+    def qps(self) -> float:
+        return self.n_queries / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.cache_hits + self.cache_misses
+        return self.cache_hits / n if n else 0.0
+
+    @property
+    def padding_overhead(self) -> float:
+        total = self.pad_slots + self.real_slots
+        return self.pad_slots / total if total else 0.0
+
+    def percentile_ms(self, p: float) -> float:
+        if not self.latencies_s:
+            return 0.0
+        return float(np.percentile(np.asarray(self.latencies_s), p) * 1e3)
+
+    def summary(self) -> str:
+        per_q = {
+            k: v / max(self.n_queries, 1)
+            for k, v in sorted(self.stats.items())
+            if k.startswith("bytes_") or k in ("seeks", "n_probes", "candidates")
+        }
+        return (
+            f"queries={self.n_queries}  qps={self.qps:,.1f}  "
+            f"p50={self.percentile_ms(50):.3f}ms  p99={self.percentile_ms(99):.3f}ms  "
+            f"hit_rate={self.hit_rate:.3f}  batches={self.n_batches}  "
+            f"padding={self.padding_overhead:.3f}  "
+            f"elem_padding={self.element_padding_overhead:.3f}  "
+            f"shapes={self.n_compiled_shapes}\n"
+            + "  ".join(f"{k}/q={v:,.0f}" for k, v in per_q.items())
+        )
+
+
+class GeoServer:
+    """Cache → shape-bucketed batcher → executor, over a query trace."""
+
+    def __init__(
+        self,
+        executor,
+        cache=None,
+        batcher: ShapeBucketedBatcher | None = None,
+        fingerprint_quant: int = 128,
+    ):
+        self.executor = executor
+        self.cache = cache
+        self.batcher = batcher or ShapeBucketedBatcher()
+        self.fingerprint_quant = fingerprint_quant
+        # qid → (fingerprint key, arrival time)
+        self._inflight: dict[int, tuple[tuple, float]] = {}
+        self._next_qid = 0
+
+    # ------------------------------------------------------------------
+    def run_trace(self, trace: list[TraceQuery], warmup: bool = True) -> ServeReport:
+        """Serve a whole trace closed-loop; returns the metrics report.
+
+        ``warmup=True`` pre-compiles the batch shapes the trace will emit
+        (predicted by replaying the cache/batcher decisions host-side)
+        before the timed loop, so latency percentiles measure serving, not
+        XLA compilation.
+        """
+        report = ServeReport()
+        if warmup and trace:
+            self._warmup(trace)
+        # snapshot cumulative batcher counters so the report is per-run
+        b = self.batcher
+        base = (b.pad_slots, b.real_slots, b.pad_elements, b.real_elements)
+        t_start = time.perf_counter()
+        for q in trace:
+            t_arr = time.perf_counter()
+            if self.cache is not None:
+                key = query_fingerprint(
+                    q.terms, q.rects, q.amps, quant=self.fingerprint_quant
+                )
+                hit = self.cache.get(key)
+                if hit is not None:
+                    report.cache_hits += 1
+                    report.latencies_s.append(time.perf_counter() - t_arr)
+                    report.n_queries += 1
+                    continue
+            else:
+                key = None  # no cache → fingerprinting is pure overhead
+            report.cache_misses += 1
+            qid = self._next_qid
+            self._next_qid += 1
+            self._inflight[qid] = (key, t_arr)
+            for batch in self.batcher.add(PendingQuery(qid, q.terms, q.rects, q.amps)):
+                self._execute(batch, report)
+            report.n_queries += 1
+        for batch in self.batcher.flush():
+            self._execute(batch, report)
+        report.wall_s = time.perf_counter() - t_start
+        report.pad_slots = b.pad_slots - base[0]
+        report.real_slots = b.real_slots - base[1]
+        pad_el, real_el = b.pad_elements - base[2], b.real_elements - base[3]
+        report.element_padding_overhead = (
+            pad_el / (pad_el + real_el) if pad_el + real_el else 0.0
+        )
+        report.n_compiled_shapes = len(report.shapes_used)
+        assert not self._inflight, "batcher dropped in-flight queries"
+        return report
+
+    # ------------------------------------------------------------------
+    def _fresh_batcher(self) -> ShapeBucketedBatcher:
+        return ShapeBucketedBatcher(
+            max_batch=self.batcher.max_batch,
+            max_terms=self.batcher.max_terms,
+            max_rects=self.batcher.max_rects,
+            term_buckets=list(self.batcher.term_buckets),
+            rect_buckets=list(self.batcher.rect_buckets),
+            batch_sizes=list(self.batcher.batch_sizes),
+        )
+
+    def _predict_shapes(self, trace: list[TraceQuery]) -> set:
+        """Replay cache + batcher decisions (no execution) → emitted shapes.
+
+        Exact for LRU and for Landlord without eviction pressure; under
+        pressure Landlord's cost-dependent evictions may diverge, in which
+        case an unpredicted shape simply compiles inside the timed loop.
+        """
+        cache = (
+            type(self.cache)(self.cache.capacity) if self.cache is not None else None
+        )
+        batcher = self._fresh_batcher()
+        pending: dict[int, tuple] = {}
+        shapes: set = set()
+
+        def emit(raws):
+            for raw in raws:
+                shapes.add(raw.shape)
+                if cache is not None:
+                    for qid in raw.qids:
+                        cache.put(pending.pop(qid), True)
+
+        qid = 0
+        for q in trace:
+            key = query_fingerprint(
+                q.terms, q.rects, q.amps, quant=self.fingerprint_quant
+            )
+            if cache is not None and cache.get(key) is not None:
+                continue
+            pending[qid] = key
+            emit(batcher.add(PendingQuery(qid, q.terms, q.rects, q.amps)))
+            qid += 1
+        emit(batcher.flush())
+        return shapes
+
+    def _warmup(self, trace: list[TraceQuery]) -> None:
+        """Pre-compile every predicted batch shape with an inert batch."""
+        for shape in sorted(
+            self._predict_shapes(trace), key=lambda s: (s.batch, s.d_terms, s.q_rects)
+        ):
+            terms = np.full((shape.batch, shape.d_terms), -1, dtype=np.int32)
+            rects = np.zeros((shape.batch, shape.q_rects, 4), dtype=np.float32)
+            rects[:, :, 0] = 1.0
+            rects[:, :, 1] = 1.0
+            amps = np.zeros((shape.batch, shape.q_rects), dtype=np.float32)
+            res = self.executor.run(
+                alg.QueryBatch(
+                    terms=jnp.asarray(terms),
+                    rects=jnp.asarray(rects),
+                    amps=jnp.asarray(amps),
+                )
+            )
+            jax.block_until_ready(res.scores)
+
+    @staticmethod
+    def _to_query_batch(raw: RawBatch) -> alg.QueryBatch:
+        return alg.QueryBatch(
+            terms=jnp.asarray(raw.terms),
+            rects=jnp.asarray(raw.rects),
+            amps=jnp.asarray(raw.amps),
+        )
+
+    def _execute(self, raw: RawBatch, report: ServeReport) -> None:
+        t0 = time.perf_counter()
+        res = self.executor.run(self._to_query_batch(raw))
+        ids = np.asarray(res.ids)
+        scores = np.asarray(res.scores)
+        t_done = time.perf_counter()
+        report.n_batches += 1
+        report.shapes_used.add(raw.shape)
+        # batch cost shared equally by its real queries (Landlord credit)
+        cost = (t_done - t0) / max(raw.n_real, 1)
+        for row, qid in enumerate(raw.qids):
+            key, t_arr = self._inflight.pop(qid)
+            report.latencies_s.append(t_done - t_arr)
+            if self.cache is not None:
+                self.cache.put(
+                    key, QueryResult(ids[row].copy(), scores[row].copy()), cost=cost
+                )
+        for key, v in res.stats.items():
+            # only the real rows' work is attributable to served queries,
+            # but padded rows burn real bytes too — count everything
+            report.stats[key] = report.stats.get(key, 0.0) + float(
+                np.asarray(v, dtype=np.float64).sum()
+            )

@@ -61,7 +61,8 @@ def psum_compressed(grads, error_buf, axis_names):
     """
     n = 1
     for ax in axis_names:
-        n *= jax.lax.axis_size(ax)
+        # jax.lax.axis_size only exists in newer jax; psum(1) is equivalent
+        n *= jax.lax.psum(1, ax)
 
     q, s, err = compress_tree(grads, error_buf)
 

@@ -33,8 +33,7 @@ def test_distributed_serve_matches_oracle():
         corpus = make_corpus(n_docs=512, n_terms=100, seed=0)
         budgets = QueryBudgets(max_candidates=512, max_tiles=256, k_sweeps=4,
                                sweep_budget=256, top_k=10)
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
         sharded = shard_corpus_np(corpus.doc_terms, corpus.doc_rects,
                                   corpus.doc_amps, corpus.pagerank,
                                   corpus.n_terms, 4, "geo", grid=32)
@@ -80,8 +79,7 @@ def test_distributed_lm_train_step_matches_single_device():
         p1, _, m1 = step1(params, init_opt_state(opt, params), batch)
 
         # 4x2 mesh
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
         with use_sharding(mesh), mesh:
             stepN = make_train_step(lambda p, b: loss_fn(cfg, p, b), opt, donate=False)
             pN, _, mN = stepN(params, init_opt_state(opt, params), batch)
@@ -102,8 +100,7 @@ def test_compressed_psum_matches_mean():
         from jax.experimental.shard_map import shard_map
         from repro.train.compression import psum_compressed
 
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = jax.make_mesh((8,), ("data",))
         rng = np.random.default_rng(0)
         g = jnp.asarray(rng.normal(0, 1, (8, 512)).astype(np.float32))
 
@@ -131,10 +128,54 @@ def test_zero1_moment_sharding():
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.train.optimizer import OptimizerConfig, zero1_sharding
 
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
         spec = P(None, "model")
         sh = zero1_sharding(mesh, spec, (64, 32))
         print(json.dumps({"spec": str(sh.spec)}))
     """))
     assert "data" in r["spec"] and "model" in r["spec"]
+
+
+def test_mesh_executor_serving_stack():
+    """The serving stack (cache + batcher) over the shard_map MeshExecutor:
+    with full budgets, mesh-served results must match the exact oracle."""
+    r = run_in_subprocess(textwrap.dedent("""
+        import json, numpy as np, jax
+        from repro.corpus import make_corpus, make_query_trace, make_zipf_trace
+        from repro.core import GeoSearchEngine, QueryBudgets
+        from repro.serving import (
+            GeoServer, LRUCache, MeshExecutor, ShapeBucketedBatcher,
+        )
+
+        corpus = make_corpus(n_docs=512, n_terms=100, seed=0)
+        budgets = QueryBudgets(max_candidates=1024, max_tiles=2048, k_sweeps=8,
+                               sweep_budget=1024, top_k=10)
+        mesh = jax.make_mesh((8, 1), ("data", "model"))
+        mx = MeshExecutor.build(
+            corpus.doc_terms, corpus.doc_rects, corpus.doc_amps,
+            corpus.n_terms, pagerank=corpus.pagerank, mesh=mesh,
+            partition="geo", grid=32, budgets=budgets)
+        eng = GeoSearchEngine.build(
+            corpus.doc_terms, corpus.doc_rects, corpus.doc_amps,
+            corpus.n_terms, pagerank=corpus.pagerank, grid=32,
+            budgets=budgets)
+        q = make_query_trace(corpus, n_queries=16, seed=1)
+        got = mx.run(q)
+        want = eng.oracle(q)  # exact ground truth
+        g, w = np.asarray(got.ids), np.asarray(want.ids)
+        hits = sum(len(set(w[b][w[b]>=0]) & set(g[b][g[b]>=0]))
+                   for b in range(16))
+        tot = int(sum((w[b]>=0).sum() for b in range(16)))
+
+        # and the full serve loop on top of the mesh executor
+        server = GeoServer(mx, cache=LRUCache(256),
+                           batcher=ShapeBucketedBatcher(max_batch=8))
+        rep = server.run_trace(make_zipf_trace(corpus, n_queries=64,
+                                               pool_size=16, seed=2))
+        print(json.dumps({"recall": hits/max(tot,1),
+                          "served": rep.n_queries,
+                          "hit_rate": rep.hit_rate}))
+    """))
+    assert r["recall"] >= 0.99
+    assert r["served"] == 64
+    assert r["hit_rate"] >= 0.30

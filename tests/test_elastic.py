@@ -41,8 +41,7 @@ def test_elastic_resume_on_smaller_mesh():
         dc = LMDataConfig(vocab=256, seq_len=32, global_batch=8)
 
         # phase 1: 8 devices as (data=4, model=2)
-        mesh1 = jax.make_mesh((4, 2), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh1 = jax.make_mesh((4, 2), ("data", "model"))
         losses = []
         with tempfile.TemporaryDirectory() as d:
             with use_sharding(mesh1), mesh1:

@@ -3,6 +3,9 @@ hold for ANY corpus/query drawn from the generator."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import GeoSearchEngine, QueryBudgets
