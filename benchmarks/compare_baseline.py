@@ -1,0 +1,115 @@
+"""Benchmark-regression gate: compare a serve_bench JSON dump to a baseline.
+
+Reads two files produced by ``benchmarks.serve_bench --json`` (the checked-in
+``benchmarks/baseline_smoke.json`` and a fresh run) and fails when serving
+performance regressed beyond noise:
+
+* **p99 latency** — fail when ``current > p99_factor × baseline + slack_ms``
+  *and* ``current > min_fail_ms``.  The additive slack absorbs proportional
+  CPU-runner jitter; the absolute floor absorbs one-off scheduler hiccups
+  (a single 150 ms stall inside a 3 s open-loop trace cascades through
+  queue-wait and can 8× a 20 ms p99 without any code regression — while a
+  genuine "batcher stopped batching" regression lands in the hundreds of
+  ms to seconds and clears the floor easily).
+* **QPS** — fail when ``current < qps_factor × baseline``.
+
+Rows present in the baseline but missing from the current run fail too (a
+silently dropped benchmark is how gates rot).  Rows new in the current run
+are reported but not gated — regenerate the baseline to start gating them::
+
+    PYTHONPATH=src python -m benchmarks.serve_bench --smoke --json benchmarks/baseline_smoke.json
+
+Thresholds follow the CI gate spec (2× p99, 0.5× QPS) and are deliberately
+tolerant: this catches "the batcher stopped batching", not 10% drift.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.compare_baseline \\
+        benchmarks/baseline_smoke.json /tmp/serve_smoke.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        payload = json.load(f)
+    return payload["rows"] if "rows" in payload else payload
+
+
+def compare(
+    baseline: dict[str, dict],
+    current: dict[str, dict],
+    p99_factor: float = 2.0,
+    qps_factor: float = 0.5,
+    slack_ms: float = 25.0,
+    min_fail_ms: float = 250.0,
+) -> list[str]:
+    """Return a list of human-readable failures (empty = gate passes)."""
+    failures: list[str] = []
+    for name, base in sorted(baseline.items()):
+        cur = current.get(name)
+        if cur is None:
+            failures.append(f"{name}: present in baseline but missing from current run")
+            continue
+        b_p99, c_p99 = base.get("p99_ms"), cur.get("p99_ms")
+        if b_p99 is not None and c_p99 is not None:
+            limit = max(p99_factor * b_p99 + slack_ms, min_fail_ms)
+            if c_p99 > limit:
+                failures.append(
+                    f"{name}: p99_ms {c_p99:.3f} > limit {limit:.3f} "
+                    f"(max of {p99_factor}x baseline {b_p99:.3f} + {slack_ms}ms "
+                    f"slack, {min_fail_ms}ms floor)"
+                )
+        b_qps, c_qps = base.get("qps"), cur.get("qps")
+        if b_qps is not None and c_qps is not None:
+            floor = qps_factor * b_qps
+            if c_qps < floor:
+                failures.append(
+                    f"{name}: qps {c_qps:.0f} < floor {floor:.0f} "
+                    f"({qps_factor}x baseline {b_qps:.0f})"
+                )
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="serve_bench baseline-regression gate")
+    ap.add_argument("baseline", help="checked-in baseline JSON")
+    ap.add_argument("current", help="fresh serve_bench --json output")
+    ap.add_argument("--p99-factor", type=float, default=2.0)
+    ap.add_argument("--qps-factor", type=float, default=0.5)
+    ap.add_argument("--slack-ms", type=float, default=25.0)
+    ap.add_argument("--min-fail-ms", type=float, default=250.0,
+                    help="p99 below this never fails (one-off stall immunity)")
+    args = ap.parse_args()
+
+    baseline = load_rows(args.baseline)
+    current = load_rows(args.current)
+    failures = compare(
+        baseline, current,
+        p99_factor=args.p99_factor, qps_factor=args.qps_factor,
+        slack_ms=args.slack_ms, min_fail_ms=args.min_fail_ms,
+    )
+    new_rows = sorted(set(current) - set(baseline))
+    for name in sorted(set(baseline) & set(current)):
+        b, c = baseline[name], current[name]
+        print(
+            f"{name}: p99_ms {b.get('p99_ms', float('nan')):.3f} -> "
+            f"{c.get('p99_ms', float('nan')):.3f}  "
+            f"qps {b.get('qps', float('nan')):.0f} -> {c.get('qps', float('nan')):.0f}"
+        )
+    if new_rows:
+        print(f"ungated new rows (regenerate baseline to gate): {', '.join(new_rows)}")
+    if failures:
+        print("\nREGRESSIONS:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        sys.exit(1)
+    print(f"\nbaseline gate OK ({len(baseline)} rows, no regressions)")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,15 +15,16 @@ Prints ``name,us_per_call,derived`` CSV rows:
                      only; derived column reports modeled VMEM bytes/call).
 * ``serving_*``    — the production serving stack (repro.serving): zipf
                      trace through cache + shape-bucketed batcher, QPS,
-                     p50/p99 latency, hit rate, padding overhead.  The
-                     full sweep lives in ``benchmarks.serve_bench``.
+                     p50/p99 latency, hit rate, padding overhead; the
+                     ``serving_arrival_*`` rows replay the same trace
+                     open-loop (Poisson arrivals) across deadline settings.
+                     The full sweep lives in ``benchmarks.serve_bench``.
 
 Usage: ``PYTHONPATH=src python -m benchmarks.run [--quick]``
 """
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
 import jax
@@ -262,11 +263,11 @@ def bench_distributed(quick: bool) -> None:
 
 
 def bench_serving(quick: bool) -> None:
-    """End-to-end serving stack on a Zipf trace (cache × batcher)."""
+    """End-to-end serving stack on a Zipf trace (cache × batcher × arrival)."""
     from repro.core import GeoSearchEngine, QueryBudgets
-    from repro.corpus import make_corpus, make_zipf_trace
+    from repro.corpus import make_corpus, make_zipf_trace, stamp_arrivals
     from repro.serving import (
-        GeoServer, ShapeBucketedBatcher, SingleDeviceExecutor, make_cache,
+        DeadlineBatcher, GeoServer, SingleDeviceExecutor, make_cache,
     )
 
     n_docs = 2000 if quick else 12000
@@ -287,9 +288,23 @@ def bench_serving(quick: bool) -> None:
         server = GeoServer(
             SingleDeviceExecutor(eng),
             cache=make_cache(cache, 512),
-            batcher=ShapeBucketedBatcher(max_batch=32, max_terms=8, max_rects=4),
+            batcher=DeadlineBatcher(max_batch=32, max_terms=8, max_rects=4),
         )
         report_row(f"serving_zipf_{cache}", server.run_trace(trace))
+
+    # open-loop arrival replay: deadline flush vs tail latency at fixed load
+    rate = 400.0 if quick else 800.0
+    arr = stamp_arrivals(trace, "poisson", rate_qps=rate, seed=11)
+    for wait_ms in [2.0, float("inf")]:
+        tag = "inf" if wait_ms == float("inf") else f"{wait_ms:g}"
+        server = GeoServer(
+            SingleDeviceExecutor(eng), cache=None,
+            batcher=DeadlineBatcher(
+                max_batch=32, max_terms=8, max_rects=4, max_wait_s=wait_ms * 1e-3
+            ),
+        )
+        rep = server.run_trace(arr, arrival="poisson", slo_ms=50.0)
+        report_row(f"serving_arrival_poisson_w{tag}", rep)
 
 
 def main() -> None:

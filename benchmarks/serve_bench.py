@@ -1,13 +1,18 @@
-"""Serving-stack benchmark: cache policy × batcher × sharding sweeps.
+"""Serving-stack benchmark: cache policy × batcher × sharding × arrival sweeps.
 
 Prints the same ``name,us_per_call,derived`` CSV rows as ``benchmarks.run``
 but for the serving layer (``repro.serving``):
 
-* ``serve_cache_*``   — zipf trace through none / lru / landlord caches:
-                        QPS, p50/p99 latency, hit rate.
-* ``serve_batcher_*`` — bucketed vs fixed-shape batching: padding overhead
-                        and number of compiled shapes.
-* ``serve_shards_*``  — doc-sharded scatter-gather execution.
+* ``serve_cache_*``     — zipf trace through none / lru / landlord caches:
+                          QPS, p50/p99 latency, hit rate.
+* ``serve_batcher_*``   — bucketed vs fixed-shape batching: padding overhead
+                          and number of compiled shapes.
+* ``serve_shards_*``    — doc-sharded scatter-gather execution.
+* ``serving_arrival_*`` — open-loop replay (Poisson + bursty MMPP arrivals)
+                          across ``max_wait_ms`` deadlines: the throughput
+                          vs tail-latency tradeoff of deadline-based batch
+                          flush, with batch-wait / queue-wait / service p99
+                          and SLO attainment per row.
 
 All single-device rows share one engine so jit compiles amortize across
 configurations (the engine's compiled-function cache is keyed per shape,
@@ -15,44 +20,68 @@ exactly as a long-running server would hold it).
 
 ``--smoke`` shrinks corpus/trace/bucket-lattice so the whole file finishes
 in well under a minute on CPU — it is part of ``scripts/check.sh``'s
-pre-merge gate.
+pre-merge gate.  ``--json PATH`` additionally dumps every row's parsed
+derived fields for the baseline-regression comparison
+(``benchmarks.compare_baseline``).
 
-Usage: ``PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]``
+Usage: ``PYTHONPATH=src python -m benchmarks.serve_bench [--smoke] [--json out.json]``
 """
 from __future__ import annotations
 
 import argparse
+import json
 
 from repro.core import GeoSearchEngine, QueryBudgets
-from repro.corpus import make_corpus, make_uniform_trace, make_zipf_trace
+from repro.corpus import make_corpus, make_uniform_trace, make_zipf_trace, stamp_arrivals
 from repro.serving import (
+    DeadlineBatcher,
     GeoServer,
-    ShapeBucketedBatcher,
     ShardedExecutor,
     SingleDeviceExecutor,
     make_cache,
 )
 
+ROWS: dict[str, dict] = {}  # name -> parsed row (for --json / baseline compare)
+
 
 def _row(name: str, us: float, derived: str = "") -> None:
     print(f"{name},{us:.1f},{derived}", flush=True)
+    rec: dict = {"us_per_call": us}
+    for part in derived.split(";"):
+        if not part:
+            continue
+        k, _, v = part.partition("=")
+        try:
+            rec[k] = float(v)
+        except ValueError:
+            rec[k] = v
+    ROWS[name] = rec
 
 
 def report_row(name: str, rep) -> None:
     """Shared derived-column format for serving rows (also used by run.py)."""
-    _row(
-        name,
-        1e6 / rep.qps if rep.qps else 0.0,
+    derived = (
         f"qps={rep.qps:.0f};p50_ms={rep.percentile_ms(50):.3f};"
         f"p99_ms={rep.percentile_ms(99):.3f};hit_rate={rep.hit_rate:.3f};"
-        f"padding={rep.padding_overhead:.3f};shapes={rep.n_compiled_shapes}",
+        f"padding={rep.padding_overhead:.3f};shapes={rep.n_compiled_shapes}"
     )
+    if rep.arrival != "closed":
+        derived += (
+            f";bw_p99_ms={rep.stage_percentile_ms('batch_wait', 99):.3f}"
+            f";qw_p99_ms={rep.stage_percentile_ms('queue_wait', 99):.3f}"
+            f";svc_p99_ms={rep.stage_percentile_ms('service', 99):.3f}"
+        )
+        if rep.slo_ms is not None:
+            derived += f";slo={rep.slo_attainment:.3f}"
+    _row(name, 1e6 / rep.qps if rep.qps else 0.0, derived)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes; finishes < 60 s on CPU (pre-merge gate)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write all rows as JSON (baseline comparison input)")
     args = ap.parse_args()
     smoke = args.smoke
     n_docs = 1200 if smoke else 20000
@@ -64,16 +93,18 @@ def main() -> None:
         rect_buckets=[2, 4] if smoke else [],
     )
 
-    def batcher(kind="bucketed"):
+    def batcher(kind="bucketed", max_wait_s=float("inf")):
         if kind == "fixed":
-            return ShapeBucketedBatcher(
+            return DeadlineBatcher(
                 max_batch=max_batch, max_terms=8, max_rects=4,
                 term_buckets=[8], rect_buckets=[4], batch_sizes=[max_batch],
+                max_wait_s=max_wait_s,
             )
-        return ShapeBucketedBatcher(
+        return DeadlineBatcher(
             max_batch=max_batch, max_terms=8, max_rects=4,
             term_buckets=list(buckets["term_buckets"]),
             rect_buckets=list(buckets["rect_buckets"]),
+            max_wait_s=max_wait_s,
         )
 
     print("name,us_per_call,derived")
@@ -100,6 +131,25 @@ def main() -> None:
         server = GeoServer(single, cache=None, batcher=batcher(kind))
         report_row(f"serve_batcher_{kind}", server.run_trace(zipf))
 
+    # open-loop arrival sweep: deadline (max_wait_ms) trades padding +
+    # throughput against tail latency; no cache so every query batches.
+    # smoke keeps the offered load well under capacity: near saturation,
+    # queue-wait amplifies machine noise nonlinearly and the CI baseline
+    # comparison would flap
+    rate = 120.0 if smoke else 800.0
+    arr_trace = stamp_arrivals(zipf, "poisson", rate_qps=rate, seed=2)
+    for wait_ms in [0.0, 2.0, 8.0, float("inf")]:
+        tag = "inf" if wait_ms == float("inf") else f"{wait_ms:g}"
+        server = GeoServer(
+            single, cache=None, batcher=batcher(max_wait_s=wait_ms * 1e-3)
+        )
+        rep = server.run_trace(arr_trace, arrival="poisson", slo_ms=50.0)
+        report_row(f"serving_arrival_poisson_w{tag}", rep)
+    burst_trace = stamp_arrivals(zipf, "bursty", rate_qps=rate, seed=3)
+    server = GeoServer(single, cache=None, batcher=batcher(max_wait_s=8e-3))
+    rep = server.run_trace(burst_trace, arrival="bursty", slo_ms=50.0)
+    report_row("serving_arrival_bursty_w8", rep)
+
     sharded = ShardedExecutor.build(
         corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
         pagerank=corpus.pagerank, n_shards=2 if smoke else 4, partition="geo",
@@ -109,6 +159,11 @@ def main() -> None:
     # so keep the smoke-mode compile count at one shape per shard
     server = GeoServer(sharded, cache=None, batcher=batcher("fixed"))
     report_row(f"serve_shards_{sharded.n_shards}", server.run_trace(zipf))
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"smoke": smoke, "rows": ROWS}, f, indent=2, sort_keys=True)
+        print(f"wrote {len(ROWS)} rows to {args.json}")
 
 
 if __name__ == "__main__":

@@ -1,8 +1,19 @@
 #!/usr/bin/env bash
-# Pre-merge gate: compile sanity, tier-1 tests, serving smoke bench.
+# Pre-merge gate: lint, compile sanity, tier-1 tests, serving smoke bench,
+# and the benchmark baseline-regression comparison — the same steps CI runs
+# (.github/workflows/ci.yml), so local green means CI green.
 # Usage: scripts/check.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+if command -v ruff >/dev/null 2>&1; then
+  echo "== ruff lint =="
+  ruff check .
+  echo "== ruff format check (serving layer) =="
+  ruff format --check src/repro/serving benchmarks/compare_baseline.py
+else
+  echo "== ruff not installed; skipping lint (CI runs it) =="
+fi
 
 echo "== compileall =="
 python -m compileall -q src benchmarks
@@ -11,6 +22,12 @@ echo "== tier-1 pytest =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 
 echo "== serving smoke bench =="
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.serve_bench --smoke
+smoke_json="$(mktemp /tmp/serve_smoke.XXXXXX.json)"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.serve_bench --smoke --json "$smoke_json"
+
+echo "== benchmark baseline comparison =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.compare_baseline \
+  benchmarks/baseline_smoke.json "$smoke_json"
+rm -f "$smoke_json"
 
 echo "== OK =="

@@ -8,7 +8,7 @@ the smoke configs with real arrays.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any
 
 

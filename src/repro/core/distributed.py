@@ -24,12 +24,11 @@ Partitioning policies (paper §Conclusions future work):
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core import algorithms as alg

@@ -14,7 +14,6 @@ pipeline — plus ``oracle`` for exact evaluation.
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from functools import partial
 from typing import Callable
 
 import jax

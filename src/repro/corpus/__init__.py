@@ -1,17 +1,23 @@
 from repro.corpus.synth import (
+    ARRIVAL_KINDS,
     SynthCorpus,
     TraceQuery,
+    make_arrivals,
     make_corpus,
     make_query_trace,
     make_uniform_trace,
     make_zipf_trace,
+    stamp_arrivals,
 )
 
 __all__ = [
+    "ARRIVAL_KINDS",
     "SynthCorpus",
     "TraceQuery",
+    "make_arrivals",
     "make_corpus",
     "make_query_trace",
     "make_uniform_trace",
     "make_zipf_trace",
+    "stamp_arrivals",
 ]

@@ -21,7 +21,7 @@ extracted footprints, plus a realistic geographic query trace):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 
 import numpy as np
 
@@ -145,11 +145,19 @@ def make_query_trace(
 
 @dataclass
 class TraceQuery:
-    """One un-padded query in a serving trace (variable widths)."""
+    """One un-padded query in a serving trace (variable widths).
+
+    ``arrival_s`` stamps when the query enters the system (seconds from
+    trace start).  Closed-loop replay ignores it; open-loop replay
+    (:meth:`repro.serving.server.GeoServer.run_trace` with
+    ``arrival != "closed"``) releases queries at these times regardless of
+    server progress, which is what makes tail latency under load visible.
+    """
 
     terms: np.ndarray  # i32[d], no padding
     rects: np.ndarray  # f32[r, 4]
     amps: np.ndarray  # f32[r]
+    arrival_s: float = 0.0
 
 
 def _one_query(rng, corpus: SynthCorpus, city: int, d_terms: int, q_rects: int):
@@ -211,6 +219,105 @@ def make_zipf_trace(
     # Zipf over pool ranks (rejection-free: clip the unbounded tail)
     ranks = np.minimum(rng.zipf(zipf_a, n_queries) - 1, pool_size - 1)
     return [pool[r] for r in ranks]
+
+
+# ---------------------------------------------------------------------------
+# arrival processes
+# ---------------------------------------------------------------------------
+
+ARRIVAL_KINDS = ("closed", "poisson", "bursty", "diurnal")
+
+
+def make_arrivals(
+    kind: str,
+    n: int,
+    rate_qps: float = 200.0,
+    seed: int = 0,
+    burst_factor: float = 4.0,
+    on_frac: float = 0.1,
+    diurnal_period_s: float = 60.0,
+    diurnal_depth: float = 0.8,
+) -> np.ndarray:
+    """Arrival-time stamps (seconds, non-decreasing, f64[n]) for a stream.
+
+    * ``closed``  — all zeros; the replay loop ignores them (next query is
+      released when the previous one finishes — PR 1 behavior).
+    * ``poisson`` — open-loop Poisson process at ``rate_qps``: i.i.d.
+      exponential inter-arrivals, the memoryless baseline load model.
+    * ``bursty``  — two-state MMPP (on/off Markov-modulated Poisson): an ON
+      state firing at ``burst_factor × rate_qps`` for ~``on_frac`` of the
+      time, and an OFF state at the complementary rate so the *mean* rate
+      stays ``rate_qps``.  Dwell times in each state are exponential with
+      mean ``diurnal_period_s / 10`` (bursts are short relative to the
+      diurnal swing).  This is the flash-crowd regime where deadline-based
+      flushing earns its keep.
+    * ``diurnal`` — inhomogeneous Poisson with a sinusoidal rate profile
+      ``rate_qps · (1 + diurnal_depth · sin(2πt / diurnal_period_s))``,
+      generated by thinning; models the day/night swing of a geoportal.
+
+    ``burst_factor · on_frac`` must be < 1 so the OFF rate stays positive.
+    """
+    if kind not in ARRIVAL_KINDS:
+        raise ValueError(f"unknown arrival kind {kind!r}; want one of {ARRIVAL_KINDS}")
+    if kind == "closed":
+        return np.zeros(n, dtype=np.float64)
+    if rate_qps <= 0:
+        raise ValueError("rate_qps must be > 0 for open-loop arrivals")
+    rng = np.random.default_rng(seed)
+    if kind == "poisson":
+        return np.cumsum(rng.exponential(1.0 / rate_qps, n))
+    if kind == "bursty":
+        if not 0.0 < on_frac < 1.0:
+            raise ValueError("on_frac must be in (0, 1)")
+        if burst_factor * on_frac >= 1.0:
+            raise ValueError("burst_factor * on_frac must be < 1 (mean-rate budget)")
+        rate_on = burst_factor * rate_qps
+        rate_off = (1.0 - burst_factor * on_frac) * rate_qps / (1.0 - on_frac)
+        mean_dwell = diurnal_period_s / 10.0
+        out = np.empty(n, dtype=np.float64)
+        t, i, on = 0.0, 0, False
+        state_end = t + rng.exponential(mean_dwell * (1.0 - on_frac))
+        while i < n:
+            rate = rate_on if on else rate_off
+            nxt = t + rng.exponential(1.0 / rate)
+            if nxt >= state_end:
+                # no arrival before the state switch; restart the clock in
+                # the new state (exponential dwell ⇒ memoryless, so this is
+                # an exact simulation, not an approximation)
+                t, on = state_end, not on
+                state_end = t + rng.exponential(
+                    mean_dwell * (on_frac if on else 1.0 - on_frac)
+                )
+                continue
+            t = nxt
+            out[i] = t
+            i += 1
+        return out
+    # diurnal: thinning against the peak rate
+    rate_max = rate_qps * (1.0 + diurnal_depth)
+    out = np.empty(n, dtype=np.float64)
+    t, i = 0.0, 0
+    while i < n:
+        t += rng.exponential(1.0 / rate_max)
+        rate_t = rate_qps * (
+            1.0 + diurnal_depth * np.sin(2.0 * np.pi * t / diurnal_period_s)
+        )
+        if rng.random() * rate_max < rate_t:
+            out[i] = t
+            i += 1
+    return out
+
+
+def stamp_arrivals(
+    trace: list[TraceQuery],
+    kind: str = "poisson",
+    rate_qps: float = 200.0,
+    seed: int = 0,
+    **kw,
+) -> list[TraceQuery]:
+    """Return a copy of ``trace`` with ``arrival_s`` stamped by ``kind``."""
+    times = make_arrivals(kind, len(trace), rate_qps=rate_qps, seed=seed, **kw)
+    return [replace(q, arrival_s=float(t)) for q, t in zip(trace, times)]
 
 
 def make_uniform_trace(

@@ -16,7 +16,7 @@ compute is useful (remat & padding waste show up here).
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 # TPU v5e hardware constants (per chip)
 PEAK_FLOPS = 197e12  # bf16

@@ -1,29 +1,49 @@
 """Serving launcher: trace-driven serving through ``repro.serving``.
 
 Builds a synthetic corpus + indexes, generates a serving trace (Zipf-skewed
-with geographic hot spots, or adversarially uniform), then drives it
-through the production serving stack —
+with geographic hot spots, or adversarially uniform), optionally stamps it
+with an open-loop arrival process, then drives it through the production
+serving stack —
 
-    trace → fingerprint → result cache → shape-bucketed batcher
+    trace → fingerprint → result cache → deadline/shape-bucketed batcher
           → (sharded) executor → scatter-gather top-k merge
 
 — reporting QPS, p50/p99 latency, cache hit rate, padding overhead, number
 of compiled batch shapes, recall@k vs the exact oracle, and the paper's
 per-stage byte counters.
 
+Replay discipline (``--arrival``):
+
+* ``closed`` (default) — next query released when the previous finishes;
+  wall-clock timing, the PR 1 baseline.
+* ``poisson`` / ``bursty`` / ``diurnal`` — open-loop replay: queries enter
+  at stamped arrival times (``--rate-qps`` mean rate) whether or not the
+  server has kept up, batches flush on fill **or** on the oldest query's
+  ``--max-wait-ms`` deadline, and the report decomposes each query's
+  latency into batch-wait / queue-wait / service p50+p99 plus the fraction
+  of queries meeting the ``--slo-ms`` budget.
+
+Examples::
+
     python -m repro.launch.serve --trace zipf --cache landlord --batcher bucketed
+    python -m repro.launch.serve --trace zipf --arrival poisson \\
+        --rate-qps 200 --max-wait-ms 5 --slo-ms 50
 """
 from __future__ import annotations
 
 import argparse
 
-import numpy as np
-
 from repro.core import GeoSearchEngine, QueryBudgets
-from repro.corpus import make_corpus, make_uniform_trace, make_zipf_trace
+from repro.corpus import (
+    ARRIVAL_KINDS,
+    make_corpus,
+    make_uniform_trace,
+    make_zipf_trace,
+    stamp_arrivals,
+)
 from repro.serving import (
+    DeadlineBatcher,
     GeoServer,
-    ShapeBucketedBatcher,
     ShardedExecutor,
     SingleDeviceExecutor,
     make_cache,
@@ -54,21 +74,23 @@ def build_stack(args, corpus):
         )
         executor = SingleDeviceExecutor(eng, args.algorithm, **kw)
 
-    cache = make_cache(args.cache, args.cache_capacity)
+    cache = make_cache(args.cache, args.cache_capacity, max_bytes=args.cache_max_bytes)
+    max_wait_s = args.max_wait_ms * 1e-3
     if args.batcher == "bucketed":
-        batcher = ShapeBucketedBatcher(
-            max_batch=args.batch, max_terms=8, max_rects=4
+        batcher = DeadlineBatcher(
+            max_batch=args.batch, max_terms=8, max_rects=4, max_wait_s=max_wait_s
         )
     else:  # "fixed": one shape only — full padding, the pre-serving baseline
-        batcher = ShapeBucketedBatcher(
+        batcher = DeadlineBatcher(
             max_batch=args.batch, max_terms=8, max_rects=4,
             term_buckets=[8], rect_buckets=[4], batch_sizes=[args.batch],
+            max_wait_s=max_wait_s,
         )
     return GeoServer(executor, cache=cache, batcher=batcher), budgets
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--n-docs", type=int, default=20000)
     ap.add_argument("--n-terms", type=int, default=2000)
     ap.add_argument("--grid", type=int, default=64)
@@ -80,7 +102,19 @@ def main() -> None:
                     help="distinct queries in the zipf trace pool")
     ap.add_argument("--cache", default="landlord", choices=["none", "lru", "landlord"])
     ap.add_argument("--cache-capacity", type=int, default=512)
+    ap.add_argument("--cache-max-bytes", type=float, default=None,
+                    help="landlord result-payload byte budget (size-aware admission)")
     ap.add_argument("--batcher", default="bucketed", choices=["bucketed", "fixed"])
+    ap.add_argument("--arrival", default="closed", choices=list(ARRIVAL_KINDS),
+                    help="closed-loop replay, or an open-loop arrival process "
+                         "(poisson | bursty MMPP on/off | diurnal sinusoid)")
+    ap.add_argument("--rate-qps", type=float, default=200.0,
+                    help="mean offered load for open-loop arrivals")
+    ap.add_argument("--max-wait-ms", type=float, default=float("inf"),
+                    help="deadline before a non-full bucket flushes anyway "
+                         "(0 = flush every query immediately; inf = count-only)")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="latency budget; report the fraction of queries under it")
     ap.add_argument("--shards", type=int, default=1)
     ap.add_argument("--partition", default="geo", choices=["hash", "geo"])
     ap.add_argument("--algorithm", default="k_sweep",
@@ -103,12 +137,18 @@ def main() -> None:
         )
     else:
         trace = make_uniform_trace(corpus, n_queries=args.queries, seed=args.seed + 1)
+    if args.arrival != "closed":
+        trace = stamp_arrivals(
+            trace, args.arrival, rate_qps=args.rate_qps, seed=args.seed + 3
+        )
 
     print(
-        f"serving {len(trace)} queries: trace={args.trace} cache={args.cache} "
-        f"batcher={args.batcher} shards={args.shards} algo={args.algorithm} …"
+        f"serving {len(trace)} queries: trace={args.trace} arrival={args.arrival} "
+        f"rate_qps={args.rate_qps:g} max_wait_ms={args.max_wait_ms:g} "
+        f"cache={args.cache} batcher={args.batcher} shards={args.shards} "
+        f"algo={args.algorithm} …"
     )
-    report = server.run_trace(trace)
+    report = server.run_trace(trace, arrival=args.arrival, slo_ms=args.slo_ms)
     print(report.summary())
 
     if not args.no_recall:

@@ -20,19 +20,19 @@ from __future__ import annotations
 import dataclasses
 from dataclasses import dataclass
 from functools import partial
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.configs.base import ArchSpec, ShapeSpec
 from repro.models import egnn as egnn_lib
 from repro.models import recsys as rec_lib
 from repro.models import transformer as tf_lib
-from repro.models.params import ParamDef, param_shapes
-from repro.sharding.specs import named_sharding, use_sharding
+from repro.models.params import param_shapes
+from repro.sharding.specs import named_sharding
 from repro.train.loop import make_train_step
 from repro.train.optimizer import OptimizerConfig
 
@@ -414,7 +414,7 @@ def build_recsys_cell(spec: ArchSpec, shape: ShapeSpec, mesh, opt_cfg=None) -> C
 
 def build_geoweb_cell(spec: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
     from repro.core import algorithms as alg
-    from repro.core.distributed import make_serve_fn, sharded_index_specs, ShardedGeoIndex
+    from repro.core.distributed import make_serve_fn, ShardedGeoIndex
 
     cfg = spec.config
     if mesh is None:

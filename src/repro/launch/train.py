@@ -7,7 +7,6 @@ checkpointing, fault injection, and deterministic data.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 import jax
 

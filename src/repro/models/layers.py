@@ -6,7 +6,6 @@ context (or no-op on a single device).
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,7 @@ Models declare a nested dict of ``ParamDef``; from it we derive
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,7 @@ All four models share a batch dict convention:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field as dfield
+from dataclasses import dataclass
 from typing import Any
 
 import jax

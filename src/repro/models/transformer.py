@@ -8,8 +8,7 @@ Remat (``jax.checkpoint``) wraps the scanned body; policy configurable.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from functools import partial
+from dataclasses import dataclass
 from typing import Any
 
 import jax
@@ -17,7 +16,7 @@ import jax.numpy as jnp
 
 from repro.models import layers as L
 from repro.models import moe as moe_lib
-from repro.models.params import ParamDef, init_params, param_count, param_shapes
+from repro.models.params import ParamDef, init_params, param_count
 from repro.sharding.specs import shard
 
 

@@ -12,15 +12,19 @@ around the index, not the index alone.  This package is that layer:
 
 * :mod:`repro.serving.fingerprint` — normalized query keys (sorted terms +
   quantized footprint rects) so geographically-near duplicates collide.
-* :mod:`repro.serving.cache`       — LRU and cost-aware Landlord caches.
+* :mod:`repro.serving.cache`       — LRU and cost-aware Landlord caches
+  (entry-count capacity + optional result-payload byte budget).
 * :mod:`repro.serving.batcher`     — dynamic micro-batcher over a small
-  registry of padded static shapes (bounded jit recompiles).
+  registry of padded static shapes (bounded jit recompiles); the
+  :class:`DeadlineBatcher` variant also flushes a bucket when its oldest
+  query's ``max_wait_s`` deadline expires.
 * :mod:`repro.serving.executor`    — single-device and doc-sharded
   scatter-gather execution of query batches.
-* :mod:`repro.serving.server`      — the serve loop tying it together plus
-  QPS / latency / hit-rate / padding metrics.
+* :mod:`repro.serving.server`      — the serve loop (closed-loop wall-clock
+  replay or event-driven open-loop replay over stamped arrival times) plus
+  QPS / latency-decomposition / hit-rate / padding / SLO metrics.
 """
-from repro.serving.batcher import BucketShape, ShapeBucketedBatcher
+from repro.serving.batcher import BucketShape, DeadlineBatcher, ShapeBucketedBatcher
 from repro.serving.cache import LandlordCache, LRUCache, make_cache
 from repro.serving.executor import MeshExecutor, ShardedExecutor, SingleDeviceExecutor
 from repro.serving.fingerprint import query_fingerprint
@@ -28,6 +32,7 @@ from repro.serving.server import GeoServer, ServeReport
 
 __all__ = [
     "BucketShape",
+    "DeadlineBatcher",
     "ShapeBucketedBatcher",
     "LRUCache",
     "LandlordCache",

@@ -20,7 +20,7 @@ set, and every submitted query appears in exactly one emitted batch.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, fields
 
 import numpy as np
 
@@ -91,6 +91,18 @@ class ShapeBucketedBatcher:
         self.emitted_shapes: set[BucketShape] = set()
 
     # ------------------------------------------------------------------
+    def clone_empty(self) -> "ShapeBucketedBatcher":
+        """A fresh batcher with identical configuration and no state.
+
+        Works for subclasses too (all their config lives in dataclass
+        fields) — the server uses this to replay batching decisions
+        host-side for shape prediction/warmup.
+        """
+        kw = {f.name: getattr(self, f.name) for f in fields(self)}
+        for k in ("term_buckets", "rect_buckets", "batch_sizes"):
+            kw[k] = list(kw[k])
+        return type(self)(**kw)
+
     @property
     def registered_shapes(self) -> set[BucketShape]:
         return {
@@ -106,12 +118,17 @@ class ShapeBucketedBatcher:
                 return b
         raise ValueError(f"query dimension {n} exceeds largest bucket {buckets[-1]}")
 
+    def _key_of(self, q: PendingQuery) -> tuple[int, int]:
+        """The (term, rect) bucket a query lands in."""
+        return (
+            self._bucket_of(max(len(q.terms), 1), self.term_buckets),
+            self._bucket_of(max(len(q.rects), 1), self.rect_buckets),
+        )
+
     # ------------------------------------------------------------------
     def add(self, q: PendingQuery) -> list[RawBatch]:
         """Enqueue one query; returns any batch made full by it."""
-        d = self._bucket_of(max(len(q.terms), 1), self.term_buckets)
-        r = self._bucket_of(max(len(q.rects), 1), self.rect_buckets)
-        key = (d, r)
+        key = self._key_of(q)
         self._pending.setdefault(key, []).append(q)
         if len(self._pending[key]) >= self.max_batch:
             return [self._emit(key, self._pending.pop(key))]
@@ -157,3 +174,75 @@ class ShapeBucketedBatcher:
         """Fraction of term/rect cells inside real rows that were padding."""
         total = self.pad_elements + self.real_elements
         return self.pad_elements / total if total else 0.0
+
+
+@dataclass
+class DeadlineBatcher(ShapeBucketedBatcher):
+    """Clock-aware batcher: flush on full **or** on the oldest query's deadline.
+
+    Each bucket remembers when its oldest pending query was enqueued; that
+    query's deadline is ``enqueue_time + max_wait_s``.  The serve loop asks
+    :meth:`next_deadline` for the earliest deadline across buckets (its next
+    timer event) and :meth:`due` for every bucket whose deadline has passed,
+    in deadline order — so a half-full bucket never holds a query hostage
+    for longer than ``max_wait_s``.
+
+    Two edge cases pin the semantics (unit-tested):
+
+    * ``max_wait_s = 0``   — every query flushes immediately in a batch of
+      one: minimum latency, maximum padding.
+    * ``max_wait_s = inf`` — deadlines never fire; behavior is bit-identical
+      to the count-only :class:`ShapeBucketedBatcher` (PR 1).
+
+    The clock is whatever the caller passes as ``now`` — wall seconds in a
+    live server, virtual seconds in simulation/tests — which is what makes
+    deadline behavior deterministic under test.
+    """
+
+    max_wait_s: float = float("inf")
+
+    def __post_init__(self) -> None:
+        super().__post_init__()
+        if self.max_wait_s < 0:
+            raise ValueError("max_wait_s must be >= 0 (inf = count-only)")
+        self._oldest: dict[tuple[int, int], float] = {}
+
+    # ------------------------------------------------------------------
+    def add(self, q: PendingQuery, now: float = 0.0) -> list[RawBatch]:
+        """Enqueue at time ``now``; returns any batch made full by it."""
+        key = self._key_of(q)
+        out = super().add(q)
+        if out:
+            self._oldest.pop(key, None)
+        else:
+            self._oldest.setdefault(key, now)
+        return out
+
+    # ------------------------------------------------------------------
+    def next_deadline(self) -> float | None:
+        """Earliest pending deadline, or ``None`` if nothing can expire."""
+        if not self._oldest or self.max_wait_s == float("inf"):
+            return None
+        return min(self._oldest.values()) + self.max_wait_s
+
+    def due(self, now: float) -> list[RawBatch]:
+        """Flush every bucket whose oldest query expired by ``now``.
+
+        Batches come back in deadline order (oldest expiry first), so a
+        replay loop draining multiple overdue buckets services them in the
+        order their queries would have timed out.
+        """
+        if self.max_wait_s == float("inf"):
+            return []
+        ripe = sorted(
+            (t, k) for k, t in self._oldest.items() if t + self.max_wait_s <= now
+        )
+        out = []
+        for _, key in ripe:
+            del self._oldest[key]
+            out.append(self._emit(key, self._pending.pop(key)))
+        return out
+
+    def flush(self) -> list[RawBatch]:
+        self._oldest.clear()
+        return super().flush()

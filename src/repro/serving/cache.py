@@ -69,7 +69,9 @@ class LRUCache(_CacheStats):
         self.misses += 1
         return None
 
-    def put(self, key: Hashable, value: Any, cost: float = 1.0) -> None:
+    def put(
+        self, key: Hashable, value: Any, cost: float = 1.0, size: float = 1.0
+    ) -> None:
         if key in self._data:
             self._data.move_to_end(key)
             self._data[key] = value
@@ -78,6 +80,10 @@ class LRUCache(_CacheStats):
             self._data.popitem(last=False)
             self.evictions += 1
         self._data[key] = value
+
+    def fresh_clone(self) -> "LRUCache":
+        """Empty cache with the same configuration (for shape prediction)."""
+        return LRUCache(self.capacity)
 
 
 class LandlordCache(_CacheStats):
@@ -88,13 +94,27 @@ class LandlordCache(_CacheStats):
     Eviction pops the minimum-expiry entry and advances ``L`` to its expiry
     (equivalent to subtracting the minimum credit from everyone).  A hit
     re-credits the entry: its expiry becomes ``L + cost/size`` again.
+
+    **Size-aware admission**: with a ``max_bytes`` budget, ``size`` is the
+    entry's payload bytes (the server passes the top-k arrays' ``nbytes``)
+    and eviction also runs while the byte budget is exceeded, so many small
+    results can coexist with few large ones under one memory ceiling — the
+    GreedyDual-*Size* half of the algorithm.  An entry larger than the whole
+    budget is never admitted (admitting it would evict everything for a
+    result too big to keep).  Without ``max_bytes`` the cache is count-
+    bounded only and ``size`` just scales credit, as before.
     """
 
-    def __init__(self, capacity: int):
+    def __init__(self, capacity: int, max_bytes: float | None = None):
         super().__init__()
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
+        if max_bytes is not None and max_bytes <= 0:
+            raise ValueError("max_bytes must be > 0 (or None for unbounded)")
         self.capacity = capacity
+        self.max_bytes = max_bytes
+        self.bytes_used = 0.0
+        self.rejected = 0  # oversized entries refused admission
         self.clock = 0.0
         # key -> [value, cost, size, expiry, generation]
         self._data: dict[Hashable, list] = {}
@@ -115,9 +135,7 @@ class LandlordCache(_CacheStats):
         # hit-heavy workloads (the cache's target regime) that is O(hits)
         # growth for a fixed-capacity cache — compact when it gets silly
         if len(self._heap) > 4 * self.capacity + 64:
-            self._heap = [
-                (e[3], e[4], id(e), k) for k, e in self._data.items()
-            ]
+            self._heap = [(e[3], e[4], id(e), k) for k, e in self._data.items()]
             heapq.heapify(self._heap)
 
     def get(self, key: Hashable):
@@ -131,20 +149,33 @@ class LandlordCache(_CacheStats):
         self._push(key, entry)
         return entry[0]
 
-    def put(self, key: Hashable, value: Any, cost: float = 1.0, size: float = 1.0) -> None:
+    def put(
+        self, key: Hashable, value: Any, cost: float = 1.0, size: float = 1.0
+    ) -> None:
         cost = max(float(cost), 1e-12)
         size = max(float(size), 1e-12)
+        if self.max_bytes is not None and size > self.max_bytes:
+            self.rejected += 1
+            return
         if key in self._data:
             entry = self._data[key]
+            self.bytes_used += size - entry[2]
             entry[0], entry[1], entry[2] = value, cost, size
             entry[3] = self.clock + cost / size
             self._push(key, entry)
-            return
-        while len(self._data) >= self.capacity:
-            self._evict_one()
-        entry = [value, cost, size, self.clock + cost / size, 0]
-        self._data[key] = entry
-        self._push(key, entry)
+        else:
+            while len(self._data) >= self.capacity:
+                self._evict_one()
+            entry = [value, cost, size, self.clock + cost / size, 0]
+            self._data[key] = entry
+            self.bytes_used += size
+            self._push(key, entry)
+        if self.max_bytes is not None:
+            # may evict the entry just admitted if its credit is the minimum
+            while self._data and self.bytes_used > self.max_bytes:
+                self._evict_one()
+            if not self._data:
+                self.bytes_used = 0.0  # clear any float residue
 
     def _evict_one(self) -> None:
         while self._heap:
@@ -154,17 +185,29 @@ class LandlordCache(_CacheStats):
                 continue  # stale heap record (renewed or replaced)
             self.clock = max(self.clock, expiry)  # charge rent = min credit
             del self._data[key]
+            self.bytes_used -= entry[2]
             self.evictions += 1
             return
         raise RuntimeError("landlord heap empty while cache non-empty")
 
+    def fresh_clone(self) -> "LandlordCache":
+        """Empty cache with the same configuration (for shape prediction)."""
+        return LandlordCache(self.capacity, max_bytes=self.max_bytes)
 
-def make_cache(policy: str, capacity: int):
-    """Factory: ``none`` | ``lru`` | ``landlord``."""
+
+def make_cache(policy: str, capacity: int, max_bytes: float | None = None):
+    """Factory: ``none`` | ``lru`` | ``landlord``.
+
+    ``max_bytes`` (Landlord only) adds a result-payload byte budget on top
+    of the entry-count capacity; combining it with another policy is an
+    error rather than a silent no-op.
+    """
+    if policy != "landlord" and max_bytes is not None:
+        raise ValueError(f"max_bytes is only supported by landlord, not {policy!r}")
     if policy == "none":
         return None
     if policy == "lru":
         return LRUCache(capacity)
     if policy == "landlord":
-        return LandlordCache(capacity)
+        return LandlordCache(capacity, max_bytes=max_bytes)
     raise ValueError(f"unknown cache policy {policy!r}")

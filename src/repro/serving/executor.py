@@ -177,9 +177,7 @@ class MeshExecutor:
 
         budgets = budgets or alg.QueryBudgets()
         doc_axes = tuple(a for a in DEFAULT_RULES["docs"] if a in mesh.axis_names)
-        query_axis = next(
-            a for a in DEFAULT_RULES["queries"] if a in mesh.axis_names
-        )
+        query_axis = next(a for a in DEFAULT_RULES["queries"] if a in mesh.axis_names)
         n_shards = 1
         for a in doc_axes:
             n_shards *= mesh.shape[a]

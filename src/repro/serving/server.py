@@ -1,4 +1,4 @@
-"""GeoServer: the trace-driven serve loop.
+"""GeoServer: the trace-driven serve loop (closed- and open-loop).
 
 One query's life:
 
@@ -6,23 +6,34 @@ One query's life:
    (:mod:`repro.serving.fingerprint`); near-duplicate searches collide.
 2. **cache lookup** — a hit returns the cached top-k immediately; its
    latency is just the lookup.
-3. **batcher** — misses queue in their (terms, rects) shape bucket; a full
-   bucket flushes as one padded static-shape batch.
+3. **batcher** — misses queue in their (terms, rects) shape bucket; the
+   bucket flushes when it fills *or* when its oldest query's deadline
+   (``max_wait_s``) expires (:class:`~repro.serving.batcher.DeadlineBatcher`).
 4. **executor** — the batch runs on the engine (single device or sharded
-   scatter-gather); per-query rows are scattered back to their submitters,
-   latency = completion − arrival (so queue wait inside a bucket counts).
+   scatter-gather); per-query rows are scattered back to their submitters.
 5. **cache fill** — each executed query's result is inserted with its
-   *cost* (its share of the batch's measured execution time), which is
-   what the Landlord policy spends as eviction credit.
+   *cost* (its share of the batch's measured execution time — the Landlord
+   eviction credit) and its *size* (the top-k payload bytes — the Landlord
+   byte-budget admission input).
 
-``run_trace`` drives a whole trace through this loop and returns a
-:class:`ServeReport` with QPS, p50/p99 latency, cache hit rate, padding
-overhead, and the paper's per-stage byte counters (summed over executed
-batches — cache hits move no bytes, which is the point).
+``run_trace`` supports two replay disciplines:
+
+* **closed-loop** (``arrival="closed"``, PR 1 behavior): the next query is
+  released as soon as the previous one is handled; wall-clock timing.
+* **open-loop** (any other ``arrival`` label): queries are released at the
+  ``arrival_s`` stamps on the trace regardless of server progress, as an
+  event-driven simulation over a virtual clock.  Service durations are
+  *measured* on the real executor (or supplied via ``service_time`` for
+  deterministic tests) and charged to a single busy-server timeline, so
+  queueing delay under burst is modeled, not hidden.  Per-query latency is
+  decomposed exactly into **batch-wait** (arrival → bucket flush) +
+  **queue-wait** (flush → executor free) + **service** (batch execution),
+  and the report adds p50/p99 of each plus SLO attainment.
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 
 import jax
@@ -31,7 +42,12 @@ import numpy as np
 
 from repro.core import algorithms as alg
 from repro.corpus.synth import TraceQuery
-from repro.serving.batcher import PendingQuery, RawBatch, ShapeBucketedBatcher
+from repro.serving.batcher import (
+    DeadlineBatcher,
+    PendingQuery,
+    RawBatch,
+    ShapeBucketedBatcher,
+)
 from repro.serving.fingerprint import query_fingerprint
 
 
@@ -55,6 +71,12 @@ class ServeReport:
     n_compiled_shapes: int = 0
     stats: dict[str, float] = field(default_factory=dict)  # summed byte counters
     shapes_used: set = field(default_factory=set)  # distinct shapes this run
+    # latency decomposition (one entry per query, same order as latencies_s)
+    batch_wait_s: list[float] = field(default_factory=list)
+    queue_wait_s: list[float] = field(default_factory=list)
+    service_s: list[float] = field(default_factory=list)
+    arrival: str = "closed"
+    slo_ms: float | None = None
 
     @property
     def qps(self) -> float:
@@ -70,10 +92,25 @@ class ServeReport:
         total = self.pad_slots + self.real_slots
         return self.pad_slots / total if total else 0.0
 
+    @property
+    def slo_attainment(self) -> float:
+        """Fraction of queries whose end-to-end latency met ``slo_ms``."""
+        if self.slo_ms is None or not self.latencies_s:
+            return 1.0
+        lat = np.asarray(self.latencies_s)
+        return float((lat <= self.slo_ms * 1e-3).mean())
+
     def percentile_ms(self, p: float) -> float:
         if not self.latencies_s:
             return 0.0
         return float(np.percentile(np.asarray(self.latencies_s), p) * 1e3)
+
+    def stage_percentile_ms(self, stage: str, p: float) -> float:
+        """Percentile of one latency component: batch_wait|queue_wait|service."""
+        xs = getattr(self, f"{stage}_s")
+        if not xs:
+            return 0.0
+        return float(np.percentile(np.asarray(xs), p) * 1e3)
 
     def summary(self) -> str:
         per_q = {
@@ -81,19 +118,32 @@ class ServeReport:
             for k, v in sorted(self.stats.items())
             if k.startswith("bytes_") or k in ("seeks", "n_probes", "candidates")
         }
-        return (
+        lines = [
             f"queries={self.n_queries}  qps={self.qps:,.1f}  "
             f"p50={self.percentile_ms(50):.3f}ms  p99={self.percentile_ms(99):.3f}ms  "
             f"hit_rate={self.hit_rate:.3f}  batches={self.n_batches}  "
             f"padding={self.padding_overhead:.3f}  "
             f"elem_padding={self.element_padding_overhead:.3f}  "
-            f"shapes={self.n_compiled_shapes}\n"
-            + "  ".join(f"{k}/q={v:,.0f}" for k, v in per_q.items())
-        )
+            f"shapes={self.n_compiled_shapes}"
+        ]
+        if self.batch_wait_s:
+            decomp = "  ".join(
+                f"{stage}_p50/p99={self.stage_percentile_ms(stage, 50):.3f}/"
+                f"{self.stage_percentile_ms(stage, 99):.3f}ms"
+                for stage in ("batch_wait", "queue_wait", "service")
+            )
+            slo = (
+                f"  slo_{self.slo_ms:g}ms={self.slo_attainment:.3f}"
+                if self.slo_ms is not None
+                else ""
+            )
+            lines.append(f"arrival={self.arrival}  {decomp}{slo}")
+        lines.append("  ".join(f"{k}/q={v:,.0f}" for k, v in per_q.items()))
+        return "\n".join(lines)
 
 
 class GeoServer:
-    """Cache → shape-bucketed batcher → executor, over a query trace."""
+    """Cache → deadline/shape-bucketed batcher → executor, over a query trace."""
 
     def __init__(
         self,
@@ -104,52 +154,53 @@ class GeoServer:
     ):
         self.executor = executor
         self.cache = cache
-        self.batcher = batcher or ShapeBucketedBatcher()
+        self.batcher = batcher or DeadlineBatcher()
         self.fingerprint_quant = fingerprint_quant
         # qid → (fingerprint key, arrival time)
         self._inflight: dict[int, tuple[tuple, float]] = {}
         self._next_qid = 0
+        self._free_at = 0.0  # open-loop executor busy-until (virtual seconds)
+        # open-loop cache fills deferred to their batch's virtual completion:
+        # (done_time, key, value, cost), completion-ordered
+        self._pending_fills: deque[tuple[float, tuple, QueryResult, float]] = deque()
 
     # ------------------------------------------------------------------
-    def run_trace(self, trace: list[TraceQuery], warmup: bool = True) -> ServeReport:
-        """Serve a whole trace closed-loop; returns the metrics report.
+    def run_trace(
+        self,
+        trace: list[TraceQuery],
+        warmup: bool = True,
+        arrival: str = "closed",
+        slo_ms: float | None = None,
+        service_time=None,
+    ) -> ServeReport:
+        """Serve a whole trace; returns the metrics report.
+
+        ``arrival="closed"`` replays back-to-back on the wall clock (PR 1).
+        Any other label replays **open-loop**: queries enter at their
+        ``arrival_s`` stamps on a virtual clock and queue when the server
+        falls behind.  ``service_time`` (optional, ``RawBatch -> seconds``)
+        replaces measured execution time in the virtual timeline, making
+        open-loop replay fully deterministic for tests; cache-hit lookup
+        latency is likewise pinned to zero when it is supplied.
 
         ``warmup=True`` pre-compiles the batch shapes the trace will emit
         (predicted by replaying the cache/batcher decisions host-side)
         before the timed loop, so latency percentiles measure serving, not
         XLA compilation.
         """
-        report = ServeReport()
+        open_loop = arrival != "closed"
+        if open_loop and not isinstance(self.batcher, DeadlineBatcher):
+            raise ValueError("open-loop replay requires a DeadlineBatcher")
+        report = ServeReport(arrival=arrival, slo_ms=slo_ms)
         if warmup and trace:
-            self._warmup(trace)
+            self._warmup(trace, open_loop)
         # snapshot cumulative batcher counters so the report is per-run
         b = self.batcher
         base = (b.pad_slots, b.real_slots, b.pad_elements, b.real_elements)
-        t_start = time.perf_counter()
-        for q in trace:
-            t_arr = time.perf_counter()
-            if self.cache is not None:
-                key = query_fingerprint(
-                    q.terms, q.rects, q.amps, quant=self.fingerprint_quant
-                )
-                hit = self.cache.get(key)
-                if hit is not None:
-                    report.cache_hits += 1
-                    report.latencies_s.append(time.perf_counter() - t_arr)
-                    report.n_queries += 1
-                    continue
-            else:
-                key = None  # no cache → fingerprinting is pure overhead
-            report.cache_misses += 1
-            qid = self._next_qid
-            self._next_qid += 1
-            self._inflight[qid] = (key, t_arr)
-            for batch in self.batcher.add(PendingQuery(qid, q.terms, q.rects, q.amps)):
-                self._execute(batch, report)
-            report.n_queries += 1
-        for batch in self.batcher.flush():
-            self._execute(batch, report)
-        report.wall_s = time.perf_counter() - t_start
+        if open_loop:
+            self._run_open(trace, report, service_time)
+        else:
+            self._run_closed(trace, report)
         report.pad_slots = b.pad_slots - base[0]
         report.real_slots = b.real_slots - base[1]
         pad_el, real_el = b.pad_elements - base[2], b.real_elements - base[3]
@@ -161,27 +212,126 @@ class GeoServer:
         return report
 
     # ------------------------------------------------------------------
-    def _fresh_batcher(self) -> ShapeBucketedBatcher:
-        return ShapeBucketedBatcher(
-            max_batch=self.batcher.max_batch,
-            max_terms=self.batcher.max_terms,
-            max_rects=self.batcher.max_rects,
-            term_buckets=list(self.batcher.term_buckets),
-            rect_buckets=list(self.batcher.rect_buckets),
-            batch_sizes=list(self.batcher.batch_sizes),
-        )
+    def _lookup(self, q: TraceQuery):
+        if self.cache is None:
+            return None, None  # no cache → fingerprinting is pure overhead
+        key = query_fingerprint(q.terms, q.rects, q.amps, quant=self.fingerprint_quant)
+        return key, self.cache.get(key)
 
-    def _predict_shapes(self, trace: list[TraceQuery]) -> set:
+    def _run_closed(self, trace: list[TraceQuery], report: ServeReport) -> None:
+        """PR 1 wall-clock loop + deadline flushes discovered between queries."""
+        deadline_aware = isinstance(self.batcher, DeadlineBatcher)
+        t_start = time.perf_counter()
+        for q in trace:
+            t_arr = time.perf_counter() - t_start
+            if deadline_aware:
+                dl = self.batcher.next_deadline()
+                if dl is not None and dl <= t_arr:
+                    for raw in self.batcher.due(t_arr):
+                        self._execute(raw, report, flush_t=t_arr, t0=t_start)
+            key, hit = self._lookup(q)
+            if hit is not None:
+                report.cache_hits += 1
+                lookup_s = time.perf_counter() - t_start - t_arr
+                self._record(report, lookup_s, 0.0, 0.0, lookup_s)
+                report.n_queries += 1
+                continue
+            report.cache_misses += 1
+            qid = self._next_qid
+            self._next_qid += 1
+            self._inflight[qid] = (key, t_arr)
+            pending = PendingQuery(qid, q.terms, q.rects, q.amps)
+            raws = (
+                self.batcher.add(pending, t_arr)
+                if deadline_aware
+                else self.batcher.add(pending)
+            )
+            for raw in raws:
+                self._execute(raw, report, flush_t=t_arr, t0=t_start)
+            report.n_queries += 1
+        t_end = time.perf_counter() - t_start
+        for raw in self.batcher.flush():
+            self._execute(raw, report, flush_t=t_end, t0=t_start)
+        report.wall_s = time.perf_counter() - t_start
+
+    def _run_open(self, trace, report: ServeReport, service_time) -> None:
+        """Event-driven open-loop replay over the trace's arrival stamps."""
+        b: DeadlineBatcher = self.batcher
+        trace = sorted(trace, key=lambda q: q.arrival_s)  # stable: FIFO on ties
+        self._free_at = 0.0
+        self._pending_fills.clear()
+        t_first = trace[0].arrival_s if trace else 0.0
+        t_last = trace[-1].arrival_s if trace else 0.0
+        for q in trace:
+            now = q.arrival_s
+            self._apply_fills(now)
+            # fire every deadline timer that expires before this arrival
+            while True:
+                dl = b.next_deadline()
+                if dl is None or dl > now:
+                    break
+                for raw in b.due(dl):
+                    self._execute_open(
+                        raw, report, flush_t=dl, service_time=service_time
+                    )
+            t_lk = time.perf_counter()
+            key, hit = self._lookup(q)
+            if hit is not None:
+                report.cache_hits += 1
+                # a hit's latency is just the (real, measured) lookup; zero
+                # under an injected service model so tests are deterministic
+                lookup_s = (
+                    0.0 if service_time is not None else time.perf_counter() - t_lk
+                )
+                self._record(report, lookup_s, 0.0, 0.0, lookup_s)
+                report.n_queries += 1
+                continue
+            report.cache_misses += 1
+            qid = self._next_qid
+            self._next_qid += 1
+            self._inflight[qid] = (key, now)
+            for raw in b.add(PendingQuery(qid, q.terms, q.rects, q.amps), now):
+                self._execute_open(raw, report, flush_t=now, service_time=service_time)
+            report.n_queries += 1
+        # drain: fire remaining finite deadlines in order, then the
+        # infinite-wait leftovers at the end of the stream
+        while True:
+            dl = b.next_deadline()
+            if dl is None:
+                break
+            for raw in b.due(dl):
+                self._execute_open(raw, report, flush_t=dl, service_time=service_time)
+        for raw in b.flush():
+            flush_t = max(t_last, self._free_at)
+            self._execute_open(raw, report, flush_t=flush_t, service_time=service_time)
+        self._apply_fills(float("inf"))  # a later run_trace sees the full cache
+        report.wall_s = max(self._free_at, t_last) - t_first
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _record(report, latency, batch_wait, queue_wait, service) -> None:
+        report.latencies_s.append(latency)
+        report.batch_wait_s.append(batch_wait)
+        report.queue_wait_s.append(queue_wait)
+        report.service_s.append(service)
+
+    def _predict_shapes(self, trace: list[TraceQuery], open_loop: bool) -> set:
         """Replay cache + batcher decisions (no execution) → emitted shapes.
 
         Exact for LRU and for Landlord without eviction pressure; under
-        pressure Landlord's cost-dependent evictions may diverge, in which
-        case an unpredicted shape simply compiles inside the timed loop.
+        pressure Landlord's cost/size-dependent evictions may diverge, and
+        in open-loop mode the real loop fills the cache at *completion*
+        time rather than emission time, so a duplicate arriving while its
+        twin is still queued may hit here and miss there.  Closed-loop
+        prediction is time-blind: with a finite ``max_wait_s`` the real
+        loop's wall-clock deadline flushes can emit smaller batch shapes
+        than predicted (open-loop replay is the intended home of finite
+        deadlines).  Either way an unpredicted shape simply compiles
+        inside the timed loop.
         """
-        cache = (
-            type(self.cache)(self.cache.capacity) if self.cache is not None else None
-        )
-        batcher = self._fresh_batcher()
+        cache = self.cache.fresh_clone() if self.cache is not None else None
+        batcher = self.batcher.clone_empty()
+        deadline_aware = isinstance(batcher, DeadlineBatcher)
         pending: dict[int, tuple] = {}
         shapes: set = set()
 
@@ -193,22 +343,43 @@ class GeoServer:
                         cache.put(pending.pop(qid), True)
 
         qid = 0
-        for q in trace:
+
+        def admit(q: TraceQuery, now: float) -> None:
+            nonlocal qid
             key = query_fingerprint(
                 q.terms, q.rects, q.amps, quant=self.fingerprint_quant
             )
             if cache is not None and cache.get(key) is not None:
-                continue
+                return
             pending[qid] = key
-            emit(batcher.add(PendingQuery(qid, q.terms, q.rects, q.amps)))
+            p = PendingQuery(qid, q.terms, q.rects, q.amps)
+            emit(batcher.add(p, now) if deadline_aware else batcher.add(p))
             qid += 1
+
+        if open_loop:
+            for q in sorted(trace, key=lambda q: q.arrival_s):
+                while True:
+                    dl = batcher.next_deadline()
+                    if dl is None or dl > q.arrival_s:
+                        break
+                    emit(batcher.due(dl))
+                admit(q, q.arrival_s)
+            while True:
+                dl = batcher.next_deadline()
+                if dl is None:
+                    break
+                emit(batcher.due(dl))
+        else:
+            for q in trace:
+                admit(q, 0.0)
         emit(batcher.flush())
         return shapes
 
-    def _warmup(self, trace: list[TraceQuery]) -> None:
+    def _warmup(self, trace: list[TraceQuery], open_loop: bool = False) -> None:
         """Pre-compile every predicted batch shape with an inert batch."""
         for shape in sorted(
-            self._predict_shapes(trace), key=lambda s: (s.batch, s.d_terms, s.q_rects)
+            self._predict_shapes(trace, open_loop),
+            key=lambda s: (s.batch, s.d_terms, s.q_rects),
         ):
             terms = np.full((shape.batch, shape.d_terms), -1, dtype=np.int32)
             rects = np.zeros((shape.batch, shape.q_rects, 4), dtype=np.float32)
@@ -232,26 +403,84 @@ class GeoServer:
             amps=jnp.asarray(raw.amps),
         )
 
-    def _execute(self, raw: RawBatch, report: ServeReport) -> None:
-        t0 = time.perf_counter()
+    # ------------------------------------------------------------------
+    def _finish_batch(self, raw: RawBatch, report: ServeReport):
+        """Run the executor; return host results + per-row payload bytes."""
         res = self.executor.run(self._to_query_batch(raw))
         ids = np.asarray(res.ids)
         scores = np.asarray(res.scores)
-        t_done = time.perf_counter()
         report.n_batches += 1
         report.shapes_used.add(raw.shape)
-        # batch cost shared equally by its real queries (Landlord credit)
-        cost = (t_done - t0) / max(raw.n_real, 1)
-        for row, qid in enumerate(raw.qids):
-            key, t_arr = self._inflight.pop(qid)
-            report.latencies_s.append(t_done - t_arr)
-            if self.cache is not None:
-                self.cache.put(
-                    key, QueryResult(ids[row].copy(), scores[row].copy()), cost=cost
-                )
         for key, v in res.stats.items():
             # only the real rows' work is attributable to served queries,
             # but padded rows burn real bytes too — count everything
             report.stats[key] = report.stats.get(key, 0.0) + float(
                 np.asarray(v, dtype=np.float64).sum()
             )
+        return ids, scores
+
+    def _fill_cache(self, key, ids, scores, row: int, cost: float) -> None:
+        if self.cache is None:
+            return
+        value = QueryResult(ids[row].copy(), scores[row].copy())
+        self.cache.put(
+            key, value, cost=cost, size=value.ids.nbytes + value.scores.nbytes
+        )
+
+    def _execute(
+        self, raw: RawBatch, report: ServeReport, flush_t: float, t0: float
+    ) -> None:
+        """Closed-loop execution: wall-clock timing relative to ``t0``.
+
+        Service is measured per batch (``t_exec → t_done``), so when one
+        flush event drains several batches (end-of-trace, overdue-deadline
+        bursts) the later batches' wait behind the earlier ones lands in
+        queue-wait, not in their service time or Landlord cost.
+        """
+        t_exec = time.perf_counter() - t0
+        ids, scores = self._finish_batch(raw, report)
+        t_done = time.perf_counter() - t0
+        # batch cost shared equally by its real queries (Landlord credit)
+        service = t_done - t_exec
+        cost = service / max(raw.n_real, 1)
+        for row, qid in enumerate(raw.qids):
+            key, t_arr = self._inflight.pop(qid)
+            self._record(
+                report, t_done - t_arr, flush_t - t_arr, t_exec - flush_t, service
+            )
+            self._fill_cache(key, ids, scores, row, cost)
+
+    def _apply_fills(self, now: float) -> None:
+        """Insert deferred results whose batch completed by virtual ``now``.
+
+        Open-loop cache fills become visible only at their batch's virtual
+        completion — a duplicate arriving while its twin is still queued or
+        executing misses, exactly as it would in a live server.
+        """
+        fills = self._pending_fills
+        while fills and fills[0][0] <= now:
+            _, key, value, cost = fills.popleft()
+            self.cache.put(
+                key, value, cost=cost, size=value.ids.nbytes + value.scores.nbytes
+            )
+
+    def _execute_open(
+        self, raw: RawBatch, report: ServeReport, flush_t: float, service_time
+    ) -> None:
+        """Open-loop execution: charge service time to the virtual timeline."""
+        t0 = time.perf_counter()
+        ids, scores = self._finish_batch(raw, report)
+        if service_time is not None:
+            dt = float(service_time(raw))
+        else:
+            dt = time.perf_counter() - t0
+        start = max(flush_t, self._free_at)
+        done = start + dt
+        self._free_at = done
+        cost = dt / max(raw.n_real, 1)
+        for row, qid in enumerate(raw.qids):
+            key, t_arr = self._inflight.pop(qid)
+            self._record(report, done - t_arr, flush_t - t_arr, start - flush_t, dt)
+            if self.cache is not None:
+                value = QueryResult(ids[row].copy(), scores[row].copy())
+                self._pending_fills.append((done, key, value, cost))

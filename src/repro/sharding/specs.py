@@ -11,7 +11,7 @@ mesh-agnostic: the same code lowers on ``(data, model)``,
 from __future__ import annotations
 
 import threading
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, field
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

@@ -15,15 +15,13 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from functools import partial
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
 from repro.train import checkpoint as ckpt_lib
-from repro.train import compression
-from repro.train.optimizer import OptimizerConfig, adamw_update, init_opt_state
+from repro.train.optimizer import OptimizerConfig, adamw_update
 
 
 def make_train_step(

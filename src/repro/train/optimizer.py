@@ -9,14 +9,12 @@ SPMD shards optimizer memory ZeRO-1 style while keeping the update local.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from functools import partial
-from typing import Any
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 
-from repro.sharding.specs import get_context, shard
+from repro.sharding.specs import shard
 
 
 @dataclass(frozen=True)

@@ -117,7 +117,6 @@ def test_ksweep_stats_account_io(engine_and_trace):
 
 def test_quantized_impacts_similar_ranking(engine_and_trace):
     """Lossy-compressed (f16) impacts preserve top-k (paper future work)."""
-    from dataclasses import replace
     from repro.core.engine import GeoIndex
     from repro.core.text_index import quantize_impacts
 

@@ -1,0 +1,336 @@
+"""Deadline-batcher + open-loop arrival replay tests (virtual clock).
+
+Everything here is deterministic: the batcher is driven with explicit
+``now`` values, and the serve loop runs with an injected ``service_time``
+model over a dummy executor, so no wall-clock or XLA timing leaks in.
+"""
+import numpy as np
+import pytest
+
+from repro.core import algorithms as alg
+from repro.corpus import (
+    make_arrivals,
+    make_corpus,
+    make_zipf_trace,
+    stamp_arrivals,
+)
+from repro.serving import (
+    DeadlineBatcher,
+    GeoServer,
+    LandlordCache,
+    LRUCache,
+    ShapeBucketedBatcher,
+)
+from repro.serving.batcher import PendingQuery
+
+
+def _query(qid: int, d: int = 3, r: int = 1) -> PendingQuery:
+    lo = np.full((r, 2), 0.1, np.float32)
+    return PendingQuery(
+        qid,
+        np.arange(d, dtype=np.int32),
+        np.concatenate([lo, lo + 0.1], axis=1),
+        np.ones((r,), np.float32),
+    )
+
+
+class DummyExecutor:
+    """Fixed results, one byte-counter; lets serve-loop tests skip jax."""
+
+    top_k = 5
+
+    def run(self, batch):
+        B = int(batch.terms.shape[0])
+        return alg.TopKResult(
+            ids=np.zeros((B, 5), np.int32),
+            scores=np.zeros((B, 5), np.float32),
+            stats={"bytes_seq": np.ones(B)},
+        )
+
+
+# ---------------------------------------------------------------------------
+# DeadlineBatcher (virtual clock)
+# ---------------------------------------------------------------------------
+
+def test_flush_on_deadline():
+    b = DeadlineBatcher(max_batch=4, max_terms=8, max_rects=4, max_wait_s=0.01)
+    assert b.add(_query(0), now=0.0) == []
+    assert b.next_deadline() == pytest.approx(0.01)
+    assert b.due(0.009) == []  # not ripe yet
+    out = b.due(0.01)
+    assert len(out) == 1 and out[0].qids == [0]
+    assert b.next_deadline() is None  # nothing pending
+
+
+def test_flush_on_full_wins_over_deadline():
+    """A bucket that fills flushes immediately; its deadline timer dies."""
+    b = DeadlineBatcher(max_batch=2, max_terms=8, max_rects=4, max_wait_s=10.0)
+    assert b.add(_query(0), now=0.0) == []
+    out = b.add(_query(1), now=1.0)  # fills → flush now, long before t=10
+    assert len(out) == 1 and out[0].qids == [0, 1]
+    assert b.next_deadline() is None
+    assert b.due(100.0) == []
+
+
+def test_due_returns_batches_in_deadline_order():
+    b = DeadlineBatcher(max_batch=8, max_terms=8, max_rects=4, max_wait_s=0.01)
+    b.add(_query(0, d=2, r=1), now=0.000)  # bucket (2,1) → deadline 0.010
+    b.add(_query(1, d=7, r=3), now=0.004)  # bucket (8,4) → deadline 0.014
+    # oldest-per-bucket rules: a second query doesn't reset bucket 1's timer
+    b.add(_query(2, d=2, r=1), now=0.008)
+    out = b.due(1.0)
+    assert [raw.qids for raw in out] == [[0, 2], [1]]
+
+
+def test_zero_wait_flushes_every_query_alone():
+    b = DeadlineBatcher(max_batch=8, max_terms=8, max_rects=4, max_wait_s=0.0)
+    b.add(_query(0), now=0.5)
+    assert b.next_deadline() == pytest.approx(0.5)  # due the instant it lands
+    out = b.due(0.5)
+    assert len(out) == 1 and out[0].n_real == 1 and out[0].shape.batch == 1
+
+
+def test_infinite_wait_reproduces_count_only_batcher():
+    """max_wait=inf must be bit-identical to PR 1's ShapeBucketedBatcher."""
+    rng = np.random.default_rng(0)
+    queries = [
+        _query(i, d=int(rng.integers(1, 9)), r=int(rng.integers(1, 5)))
+        for i in range(200)
+    ]
+    count_only = ShapeBucketedBatcher(max_batch=8, max_terms=8, max_rects=4)
+    deadline = DeadlineBatcher(max_batch=8, max_terms=8, max_rects=4)
+    assert deadline.max_wait_s == float("inf")
+    got, want = [], []
+    for i, q in enumerate(queries):
+        want.extend(count_only.add(q))
+        assert deadline.next_deadline() is None
+        got.extend(deadline.add(q, now=i * 0.001))
+    want.extend(count_only.flush())
+    got.extend(deadline.flush())
+    assert [raw.qids for raw in got] == [raw.qids for raw in want]
+    assert [raw.shape for raw in got] == [raw.shape for raw in want]
+    assert deadline.pad_slots == count_only.pad_slots
+    assert deadline.pad_elements == count_only.pad_elements
+
+
+def test_clone_empty_preserves_deadline_config():
+    b = DeadlineBatcher(max_batch=4, max_terms=8, max_rects=4, max_wait_s=0.25)
+    b.add(_query(0), now=0.0)
+    c = b.clone_empty()
+    assert type(c) is DeadlineBatcher and c.max_wait_s == 0.25
+    assert c.next_deadline() is None and c.real_slots == 0
+
+
+# ---------------------------------------------------------------------------
+# arrival processes
+# ---------------------------------------------------------------------------
+
+def test_arrivals_closed_is_all_zero():
+    assert (make_arrivals("closed", 100) == 0).all()
+
+
+@pytest.mark.parametrize("kind", ["poisson", "bursty", "diurnal"])
+def test_arrivals_are_sorted_and_roughly_at_rate(kind):
+    t = make_arrivals(kind, 8000, rate_qps=200.0, seed=7, diurnal_period_s=2.0)
+    assert t.shape == (8000,)
+    assert (np.diff(t) >= 0).all()
+    # mean rate within a loose factor (bursty/diurnal have heavy variance)
+    achieved = len(t) / t[-1]
+    assert 0.5 * 200.0 < achieved < 2.0 * 200.0, achieved
+
+
+def test_arrivals_validation():
+    with pytest.raises(ValueError):
+        make_arrivals("weibull", 10)
+    with pytest.raises(ValueError):
+        make_arrivals("poisson", 10, rate_qps=0.0)
+    with pytest.raises(ValueError):
+        make_arrivals("bursty", 10, burst_factor=20.0, on_frac=0.5)
+
+
+def test_stamp_arrivals_preserves_queries():
+    corpus = make_corpus(n_docs=100, n_terms=50, seed=0)
+    trace = make_zipf_trace(corpus, n_queries=50, pool_size=8, seed=1)
+    stamped = stamp_arrivals(trace, "poisson", rate_qps=100.0, seed=2)
+    assert len(stamped) == len(trace)
+    assert all(s.arrival_s >= 0 for s in stamped)
+    assert all(
+        np.array_equal(s.terms, q.terms) and np.array_equal(s.rects, q.rects)
+        for s, q in zip(stamped, trace)
+    )
+    assert all(q.arrival_s == 0.0 for q in trace)  # originals untouched
+
+
+# ---------------------------------------------------------------------------
+# open-loop replay (virtual clock through the whole serve loop)
+# ---------------------------------------------------------------------------
+
+def _stamped_trace(n=300, rate=500.0):
+    corpus = make_corpus(n_docs=200, n_terms=100, seed=0)
+    trace = make_zipf_trace(corpus, n_queries=n, pool_size=32, seed=1)
+    return stamp_arrivals(trace, "poisson", rate_qps=rate, seed=2)
+
+
+def _open_server(max_wait_s, cache=None):
+    return GeoServer(
+        DummyExecutor(),
+        cache=cache,
+        batcher=DeadlineBatcher(
+            max_batch=8, max_terms=8, max_rects=4, max_wait_s=max_wait_s
+        ),
+    )
+
+
+def test_open_loop_latency_decomposition_sums_exactly():
+    trace = _stamped_trace()
+    srv = _open_server(5e-3, cache=LRUCache(64))
+    rep = srv.run_trace(
+        trace, warmup=False, arrival="poisson", slo_ms=50.0,
+        service_time=lambda raw: 2e-3,
+    )
+    assert rep.n_queries == len(trace)
+    assert len(rep.latencies_s) == len(trace)
+    total = (
+        np.asarray(rep.batch_wait_s)
+        + np.asarray(rep.queue_wait_s)
+        + np.asarray(rep.service_s)
+    )
+    np.testing.assert_allclose(np.asarray(rep.latencies_s), total, rtol=0, atol=1e-12)
+    # every component is a real delay, never negative
+    assert min(rep.batch_wait_s) >= 0
+    assert min(rep.queue_wait_s) >= 0
+    assert min(rep.service_s) >= 0
+    assert 0.0 <= rep.slo_attainment <= 1.0
+
+
+def test_open_loop_is_deterministic_under_virtual_clock():
+    trace = _stamped_trace()
+    reps = [
+        _open_server(5e-3, cache=LRUCache(64)).run_trace(
+            trace, warmup=False, arrival="poisson", slo_ms=50.0,
+            service_time=lambda raw: 2e-3,
+        )
+        for _ in range(2)
+    ]
+    assert reps[0].latencies_s == reps[1].latencies_s
+    assert reps[0].batch_wait_s == reps[1].batch_wait_s
+    assert reps[0].n_batches == reps[1].n_batches
+
+
+def test_open_loop_deadline_bounds_batch_wait():
+    """No query waits in its bucket longer than max_wait (plus fill flushes)."""
+    trace = _stamped_trace()
+    rep = _open_server(3e-3).run_trace(
+        trace, warmup=False, arrival="poisson", service_time=lambda raw: 1e-3
+    )
+    assert max(rep.batch_wait_s) <= 3e-3 + 1e-12
+    # and a slower deadline trades longer batch-waits for fewer batches
+    rep_slow = _open_server(50e-3).run_trace(
+        trace, warmup=False, arrival="poisson", service_time=lambda raw: 1e-3
+    )
+    assert rep_slow.n_batches < rep.n_batches
+    assert max(rep_slow.batch_wait_s) > 3e-3
+
+
+def test_open_loop_requires_deadline_batcher():
+    srv = GeoServer(
+        DummyExecutor(),
+        batcher=ShapeBucketedBatcher(max_batch=8, max_terms=8, max_rects=4),
+    )
+    with pytest.raises(ValueError, match="DeadlineBatcher"):
+        srv.run_trace(_stamped_trace(n=4), warmup=False, arrival="poisson")
+
+
+def test_open_loop_cache_fill_waits_for_virtual_completion():
+    """A duplicate arriving while its twin is in flight misses; after the
+    twin's virtual completion it hits."""
+    import dataclasses
+
+    corpus = make_corpus(n_docs=100, n_terms=50, seed=0)
+    base = make_zipf_trace(corpus, n_queries=1, pool_size=1, seed=1)[0]
+    trace = [
+        dataclasses.replace(base, arrival_s=t) for t in (0.0, 0.001, 1.0)
+    ]
+    srv = _open_server(0.0, cache=LRUCache(16))  # zero wait: flush singletons
+    rep = srv.run_trace(
+        trace, warmup=False, arrival="poisson", service_time=lambda raw: 0.01
+    )
+    # q0 misses; q1 arrives at 1ms < q0's completion at 10ms → must miss too;
+    # q2 arrives at 1s, long after completion → hits
+    assert rep.cache_misses == 2
+    assert rep.cache_hits == 1
+
+
+def test_closed_inf_wait_matches_pr1_count_only_server():
+    """Acceptance: --arrival closed --max-wait-ms inf reproduces PR 1 metrics."""
+    corpus = make_corpus(n_docs=200, n_terms=100, seed=0)
+    trace = make_zipf_trace(corpus, n_queries=250, pool_size=32, seed=1)
+    old = GeoServer(
+        DummyExecutor(),
+        cache=LRUCache(64),
+        batcher=ShapeBucketedBatcher(max_batch=8, max_terms=8, max_rects=4),
+    ).run_trace(trace, warmup=False)
+    new = GeoServer(
+        DummyExecutor(),
+        cache=LRUCache(64),
+        batcher=DeadlineBatcher(max_batch=8, max_terms=8, max_rects=4),
+    ).run_trace(trace, warmup=False, arrival="closed")
+    assert new.hit_rate == old.hit_rate
+    assert new.cache_hits == old.cache_hits
+    assert new.pad_slots == old.pad_slots
+    assert new.real_slots == old.real_slots
+    assert new.padding_overhead == old.padding_overhead
+    assert new.element_padding_overhead == old.element_padding_overhead
+    assert new.shapes_used == old.shapes_used
+    assert new.n_batches == old.n_batches
+
+
+# ---------------------------------------------------------------------------
+# Landlord size-aware admission
+# ---------------------------------------------------------------------------
+
+def test_landlord_byte_budget_evicts_below_count_capacity():
+    c = LandlordCache(capacity=100, max_bytes=100.0)
+    c.put("a", 1, cost=1.0, size=40.0)
+    c.put("b", 2, cost=1.0, size=40.0)
+    assert c.bytes_used == pytest.approx(80.0)
+    c.put("c", 3, cost=1.0, size=40.0)  # 120 bytes > budget → evict to fit
+    assert len(c) == 2 and c.bytes_used <= 100.0
+    assert c.evictions == 1
+
+
+def test_landlord_oversized_entry_rejected():
+    c = LandlordCache(capacity=100, max_bytes=50.0)
+    c.put("small", 1, cost=1.0, size=10.0)
+    c.put("huge", 2, cost=100.0, size=500.0)  # larger than the whole budget
+    assert "huge" not in c and "small" in c
+    assert c.rejected == 1 and c.evictions == 0
+
+
+def test_landlord_byte_budget_prefers_high_credit_density():
+    """cost/size credit: a cheap-per-byte giant goes before pricey smalls."""
+    c = LandlordCache(capacity=100, max_bytes=100.0)
+    c.put("giant", 0, cost=1.0, size=90.0)  # credit 1/90
+    c.put("small1", 1, cost=1.0, size=5.0)  # credit 1/5
+    c.put("small2", 2, cost=1.0, size=50.0)  # over budget → evict giant
+    assert "giant" not in c
+    assert "small1" in c and "small2" in c
+
+
+def test_landlord_fresh_clone_copies_budget():
+    c = LandlordCache(capacity=7, max_bytes=123.0)
+    c.put("a", 1)
+    d = c.fresh_clone()
+    assert d.capacity == 7 and d.max_bytes == 123.0 and len(d) == 0
+
+
+def test_serve_loop_fills_cache_with_payload_sizes():
+    """The server passes result payload bytes as the Landlord entry size."""
+    trace = _stamped_trace(n=100)
+    cache = LandlordCache(capacity=1000)
+    _open_server(5e-3, cache=cache).run_trace(
+        trace, warmup=False, arrival="poisson", service_time=lambda raw: 1e-3
+    )
+    # DummyExecutor rows: 5 i32 ids + 5 f32 scores = 40 bytes per entry
+    assert len(cache) > 0
+    assert cache.bytes_used == pytest.approx(40.0 * len(cache))

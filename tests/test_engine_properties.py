@@ -1,7 +1,5 @@
 """Engine-level property tests (hypothesis): system invariants that must
 hold for ANY corpus/query drawn from the generator."""
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
