@@ -14,8 +14,11 @@ performance regressed beyond noise:
 * **QPS** — fail when ``current < qps_factor × baseline``.
 
 Rows present in the baseline but missing from the current run fail too (a
-silently dropped benchmark is how gates rot).  Rows new in the current run
-are reported but not gated — regenerate the baseline to start gating them::
+silently dropped benchmark is how gates rot).  Rows present in the new run
+but absent from the old baseline only *warn* — never fail — so adding
+benchmark rows and regenerating the baseline are not order-sensitive:
+a fresh run with extra rows passes against the old baseline, and the
+warning tells you to regenerate to start gating them::
 
     PYTHONPATH=src python -m benchmarks.serve_bench --smoke --json benchmarks/baseline_smoke.json
 
@@ -47,9 +50,19 @@ def compare(
     qps_factor: float = 0.5,
     slack_ms: float = 25.0,
     min_fail_ms: float = 250.0,
-) -> list[str]:
-    """Return a list of human-readable failures (empty = gate passes)."""
+) -> tuple[list[str], list[str]]:
+    """Return ``(failures, warnings)`` — the gate passes iff no failures.
+
+    Warnings cover rows present in ``current`` but absent from
+    ``baseline`` (new benchmarks are ungated until the baseline is
+    regenerated); they never fail the gate.
+    """
     failures: list[str] = []
+    warnings: list[str] = [
+        f"{name}: new row not in baseline (ungated; regenerate the baseline "
+        f"to start gating it)"
+        for name in sorted(set(current) - set(baseline))
+    ]
     for name, base in sorted(baseline.items()):
         cur = current.get(name)
         if cur is None:
@@ -72,7 +85,7 @@ def compare(
                     f"{name}: qps {c_qps:.0f} < floor {floor:.0f} "
                     f"({qps_factor}x baseline {b_qps:.0f})"
                 )
-    return failures
+    return failures, warnings
 
 
 def main() -> None:
@@ -88,12 +101,11 @@ def main() -> None:
 
     baseline = load_rows(args.baseline)
     current = load_rows(args.current)
-    failures = compare(
+    failures, warnings = compare(
         baseline, current,
         p99_factor=args.p99_factor, qps_factor=args.qps_factor,
         slack_ms=args.slack_ms, min_fail_ms=args.min_fail_ms,
     )
-    new_rows = sorted(set(current) - set(baseline))
     for name in sorted(set(baseline) & set(current)):
         b, c = baseline[name], current[name]
         print(
@@ -101,8 +113,8 @@ def main() -> None:
             f"{c.get('p99_ms', float('nan')):.3f}  "
             f"qps {b.get('qps', float('nan')):.0f} -> {c.get('qps', float('nan')):.0f}"
         )
-    if new_rows:
-        print(f"ungated new rows (regenerate baseline to gate): {', '.join(new_rows)}")
+    for w in warnings:
+        print(f"WARNING: {w}")
     if failures:
         print("\nREGRESSIONS:", file=sys.stderr)
         for f in failures:

@@ -17,8 +17,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
                      trace through cache + shape-bucketed batcher, QPS,
                      p50/p99 latency, hit rate, padding overhead; the
                      ``serving_arrival_*`` rows replay the same trace
-                     open-loop (Poisson arrivals) across deadline settings.
-                     The full sweep lives in ``benchmarks.serve_bench``.
+                     open-loop (Poisson arrivals) across deadline settings
+                     and the ``serving_workers_*`` rows sweep the worker
+                     pool × in-flight coalescing.  The full sweep lives in
+                     ``benchmarks.serve_bench``.
 
 Usage: ``PYTHONPATH=src python -m benchmarks.run [--quick]``
 """
@@ -305,6 +307,25 @@ def bench_serving(quick: bool) -> None:
         )
         rep = server.run_trace(arr, arrival="poisson", slo_ms=50.0)
         report_row(f"serving_arrival_poisson_w{tag}", rep)
+
+    # worker pool × in-flight coalescing at the same offered load; no cache
+    # (the Zipf trace repeats queries, so with nothing absorbing repeats
+    # every duplicate either re-executes or coalesces — the `coalesced`
+    # column measures the path directly)
+    sweep = [(1, True), (2, True)] if quick else [
+        (w, c) for w in (1, 2, 4) for c in (False, True)
+    ]
+    for n_workers, coal in sweep:
+        server = GeoServer(
+            SingleDeviceExecutor(eng), cache=None,
+            batcher=DeadlineBatcher(
+                max_batch=32, max_terms=8, max_rects=4, max_wait_s=2e-3
+            ),
+            n_workers=n_workers, coalesce=coal,
+        )
+        rep = server.run_trace(arr, arrival="poisson", slo_ms=50.0)
+        tag = "on" if coal else "off"
+        report_row(f"serving_workers_{n_workers}_coalesce_{tag}", rep)
 
 
 def main() -> None:

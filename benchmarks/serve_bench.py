@@ -13,6 +13,11 @@ but for the serving layer (``repro.serving``):
                           vs tail-latency tradeoff of deadline-based batch
                           flush, with batch-wait / queue-wait / service p99
                           and SLO attainment per row.
+* ``serving_workers_*`` — the multi-worker dispatch queue × in-flight
+                          coalescing sweep on the Zipf trace (duplicates
+                          common): workers ∈ {1,2,4} × coalesce on/off;
+                          more workers cut queue-wait, coalescing cuts
+                          re-executed duplicates (``coalesced`` column).
 
 All single-device rows share one engine so jit compiles amortize across
 configurations (the engine's compiled-function cache is keyed per shape,
@@ -70,6 +75,7 @@ def report_row(name: str, rep) -> None:
             f";bw_p99_ms={rep.stage_percentile_ms('batch_wait', 99):.3f}"
             f";qw_p99_ms={rep.stage_percentile_ms('queue_wait', 99):.3f}"
             f";svc_p99_ms={rep.stage_percentile_ms('service', 99):.3f}"
+            f";workers={rep.n_workers};coalesced={rep.coalesced}"
         )
         if rep.slo_ms is not None:
             derived += f";slo={rep.slo_attainment:.3f}"
@@ -149,6 +155,28 @@ def main() -> None:
     server = GeoServer(single, cache=None, batcher=batcher(max_wait_s=8e-3))
     rep = server.run_trace(burst_trace, arrival="bursty", slo_ms=50.0)
     report_row("serving_arrival_bursty_w8", rep)
+
+    # multi-worker dispatch × in-flight coalescing on the Zipf trace (the
+    # duplicate-heavy workload): workers drain the dispatch queue in
+    # parallel, coalescing subscribes in-flight duplicates to their twin
+    # batch.  No cache, so every repeat either re-executes or coalesces —
+    # the `coalesced` column measures the path directly (a cache would
+    # absorb the repeats and leave nothing to gate).
+    worker_sweep = (
+        [(1, False), (2, True)]
+        if smoke
+        else [(w, c) for w in (1, 2, 4) for c in (False, True)]
+    )
+    workers_trace = stamp_arrivals(zipf, "poisson", rate_qps=rate, seed=4)
+    for n_workers, coal in worker_sweep:
+        server = GeoServer(
+            single, cache=None,
+            batcher=batcher(max_wait_s=2e-3),
+            n_workers=n_workers, coalesce=coal,
+        )
+        rep = server.run_trace(workers_trace, arrival="poisson", slo_ms=50.0)
+        tag = "on" if coal else "off"
+        report_row(f"serving_workers_{n_workers}_coalesce_{tag}", rep)
 
     sharded = ShardedExecutor.build(
         corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,

@@ -19,15 +19,19 @@ Replay discipline (``--arrival``):
 * ``poisson`` / ``bursty`` / ``diurnal`` — open-loop replay: queries enter
   at stamped arrival times (``--rate-qps`` mean rate) whether or not the
   server has kept up, batches flush on fill **or** on the oldest query's
-  ``--max-wait-ms`` deadline, and the report decomposes each query's
-  latency into batch-wait / queue-wait / service p50+p99 plus the fraction
-  of queries meeting the ``--slo-ms`` budget.
+  ``--max-wait-ms`` deadline, flushed batches drain through a FIFO
+  dispatch queue onto ``--workers`` parallel executor slots, and the
+  report decomposes each query's latency into batch-wait / queue-wait /
+  service p50+p99 plus the fraction of queries meeting the ``--slo-ms``
+  budget.  ``--coalesce`` lets a duplicate query arriving while its twin
+  is queued or executing subscribe to the in-flight result instead of
+  re-executing (reported in the ``coalesced`` counter).
 
 Examples::
 
     python -m repro.launch.serve --trace zipf --cache landlord --batcher bucketed
     python -m repro.launch.serve --trace zipf --arrival poisson \\
-        --rate-qps 200 --max-wait-ms 5 --slo-ms 50
+        --rate-qps 200 --max-wait-ms 5 --slo-ms 50 --workers 4 --coalesce
 """
 from __future__ import annotations
 
@@ -86,7 +90,11 @@ def build_stack(args, corpus):
             term_buckets=[8], rect_buckets=[4], batch_sizes=[args.batch],
             max_wait_s=max_wait_s,
         )
-    return GeoServer(executor, cache=cache, batcher=batcher), budgets
+    server = GeoServer(
+        executor, cache=cache, batcher=batcher,
+        n_workers=args.workers, coalesce=args.coalesce,
+    )
+    return server, budgets
 
 
 def main() -> None:
@@ -110,11 +118,18 @@ def main() -> None:
                          "(poisson | bursty MMPP on/off | diurnal sinusoid)")
     ap.add_argument("--rate-qps", type=float, default=200.0,
                     help="mean offered load for open-loop arrivals")
-    ap.add_argument("--max-wait-ms", type=float, default=float("inf"),
+    ap.add_argument("--max-wait-ms", type=float, default=None,
                     help="deadline before a non-full bucket flushes anyway "
-                         "(0 = flush every query immediately; inf = count-only)")
+                         "(0 = flush every query immediately; inf = count-only; "
+                         "default: inf closed-loop, 5 ms open-loop)")
     ap.add_argument("--slo-ms", type=float, default=None,
                     help="latency budget; report the fraction of queries under it")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="parallel executor slots draining the dispatch queue "
+                         "(open-loop replay only; 1 = single busy server)")
+    ap.add_argument("--coalesce", action="store_true",
+                    help="subscribe duplicate queries to in-flight twin batches "
+                         "instead of re-executing them")
     ap.add_argument("--shards", type=int, default=1)
     ap.add_argument("--partition", default="geo", choices=["hash", "geo"])
     ap.add_argument("--algorithm", default="k_sweep",
@@ -125,6 +140,14 @@ def main() -> None:
                     help="skip the oracle recall check (slow on big corpora)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.arrival == "closed" and args.workers > 1:
+        # fail before the (minutes-long) corpus + index build does
+        ap.error("--workers > 1 requires an open-loop --arrival "
+                 "(poisson | bursty | diurnal)")
+    if args.max_wait_ms is None:
+        # closed-loop: count-only batching (PR 1); open-loop: a live server
+        # would never hold a half-full bucket for seconds
+        args.max_wait_ms = float("inf") if args.arrival == "closed" else 5.0
 
     print(f"building corpus: {args.n_docs} docs, {args.n_terms} terms …")
     corpus = make_corpus(args.n_docs, args.n_terms, seed=args.seed)
@@ -146,6 +169,7 @@ def main() -> None:
         f"serving {len(trace)} queries: trace={args.trace} arrival={args.arrival} "
         f"rate_qps={args.rate_qps:g} max_wait_ms={args.max_wait_ms:g} "
         f"cache={args.cache} batcher={args.batcher} shards={args.shards} "
+        f"workers={args.workers} coalesce={args.coalesce} "
         f"algo={args.algorithm} …"
     )
     report = server.run_trace(trace, arrival=args.arrival, slo_ms=args.slo_ms)

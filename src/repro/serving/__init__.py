@@ -20,15 +20,20 @@ around the index, not the index alone.  This package is that layer:
   query's ``max_wait_s`` deadline expires.
 * :mod:`repro.serving.executor`    — single-device and doc-sharded
   scatter-gather execution of query batches.
+* :mod:`repro.serving.pending`     — the in-flight pending-result table:
+  a miss whose fingerprint is already queued or executing subscribes to
+  that batch's result instead of re-enqueueing (request coalescing).
 * :mod:`repro.serving.server`      — the serve loop (closed-loop wall-clock
-  replay or event-driven open-loop replay over stamped arrival times) plus
-  QPS / latency-decomposition / hit-rate / padding / SLO metrics.
+  replay or event-driven open-loop replay over stamped arrival times, with
+  ``n_workers`` parallel executor slots draining a FIFO dispatch queue)
+  plus QPS / latency-decomposition / hit-rate / padding / SLO metrics.
 """
 from repro.serving.batcher import BucketShape, DeadlineBatcher, ShapeBucketedBatcher
 from repro.serving.cache import LandlordCache, LRUCache, make_cache
 from repro.serving.executor import MeshExecutor, ShardedExecutor, SingleDeviceExecutor
 from repro.serving.fingerprint import query_fingerprint
-from repro.serving.server import GeoServer, ServeReport
+from repro.serving.pending import PendingEntry, PendingTable
+from repro.serving.server import BatchEvent, GeoServer, ServeReport
 
 __all__ = [
     "BucketShape",
@@ -41,6 +46,9 @@ __all__ = [
     "ShardedExecutor",
     "MeshExecutor",
     "query_fingerprint",
+    "PendingEntry",
+    "PendingTable",
+    "BatchEvent",
     "GeoServer",
     "ServeReport",
 ]

@@ -150,13 +150,35 @@ class MeshExecutor:
     Requires a multi-device runtime (or ``XLA_FLAGS=
     --xla_force_host_platform_device_count=N``); exercised by the
     subprocess tests in ``tests/test_distributed.py``.
+
+    Per-stage byte counters: the jit'd ``shard_map`` step only returns
+    ``(ids, scores)`` — hauling the data-dependent stats arrays through the
+    collectives would put host bookkeeping on the hot path.  Instead
+    ``run`` models the counters host-side from the batch shape and the
+    per-shard capacity budgets (every sweep reads its full
+    ``sweep_budget``, every candidate slot probes), using the same keys as
+    :class:`ShardedExecutor`'s measured stats.  The model is a per-shard
+    *capacity upper bound* of the measured counters — asserted against the
+    other executors in ``tests/test_serving.py``.
     """
 
-    def __init__(self, mesh, serve_fn, sharded_index, top_k: int):
+    def __init__(
+        self,
+        mesh,
+        serve_fn,
+        sharded_index,
+        top_k: int,
+        budgets: alg.QueryBudgets | None = None,
+        algorithm: str = "k_sweep",
+        n_rect_slots: int = 4,
+    ):
         self.mesh = mesh
         self._serve = serve_fn
         self._index = sharded_index
         self.top_k = top_k
+        self.budgets = budgets or alg.QueryBudgets(top_k=top_k)
+        self.algorithm = algorithm
+        self.n_rect_slots = n_rect_slots  # doc footprint slots (R)
 
     @staticmethod
     def build(
@@ -196,9 +218,91 @@ class MeshExecutor:
             doc_axes=doc_axes, query_axis=query_axis,
             algorithm=algorithm, grid=grid, n_terms=n_terms,
         )
-        return MeshExecutor(mesh, serve, sharded, budgets.top_k)
+        return MeshExecutor(
+            mesh, serve, sharded, budgets.top_k,
+            budgets=budgets, algorithm=algorithm,
+            n_rect_slots=doc_rects.shape[1],
+        )
+
+    @property
+    def n_shards(self) -> int:
+        return self._index.n_shards
+
+    @property
+    def n_postings(self) -> int:
+        """Per-shard posting-store length (padded to the largest shard)."""
+        return int(self._index.postings.shape[1])
+
+    def _model_stats(self, batch: alg.QueryBatch) -> dict[str, np.ndarray]:
+        """Host-side per-query byte counters (capacity model, per shard × S).
+
+        Mirrors the stats keys of :mod:`repro.core.algorithms` for the
+        configured algorithm.  Data-dependent quantities (sweeps fetched,
+        unique candidates) are replaced by their budget capacities —
+        ``k_sweeps`` full sweeps, ``max_candidates`` candidate slots —
+        which is what each device's fixed-shape pipeline actually streams
+        through memory; only the real term count per query is measured
+        from the batch itself.  Every query executes against all ``S``
+        doc shards, so the per-shard model is scaled by ``n_shards``.
+        """
+        terms = np.asarray(batch.terms)
+        B = terms.shape[0]
+        n_terms_real = (terms >= 0).sum(axis=-1).astype(np.float64)  # [B]
+        S = float(self.n_shards)
+        bud = self.budgets
+        R = self.n_rect_slots
+        logp = float(np.ceil(np.log2(max(self.n_postings, 2))))
+        if self.algorithm == "k_sweep":
+            sweeps = np.full(B, float(bud.k_sweeps))
+            fetched = sweeps * bud.sweep_budget
+            # early termination caps the candidate set before text probing;
+            # without it every fetched toe print may survive to a probe
+            n_uniq = (
+                np.minimum(fetched, float(bud.max_candidates))
+                if bud.early_termination
+                else fetched
+            )
+            stats = {
+                "candidates": fetched,
+                "sweeps": sweeps,
+                "bytes_spatial": fetched * alg.TP_BYTES,
+                "sweep_slack": np.zeros(B),
+                "bytes_postings": n_uniq * logp * alg.POSTING_BYTES,
+                "seeks": sweeps + n_terms_real,
+                "n_probes": n_uniq * n_terms_real,
+                "bytes_seq": fetched * alg.TP_BYTES,
+                "bytes_random": n_uniq * n_terms_real * 32,
+            }
+        elif self.algorithm == "text_first":
+            n_c = np.full(B, float(bud.max_candidates))
+            n_probes = n_c * np.maximum(n_terms_real - 1, 0.0)
+            stats = {
+                "candidates": n_c,
+                "bytes_spatial": n_c * R * (16 + 4),
+                "bytes_postings": n_c * alg.POSTING_BYTES
+                + bud.max_candidates * alg.POSTING_BYTES,
+                "fetch_runs": n_c,
+                "seeks": n_c + n_terms_real,
+                "n_probes": n_probes,
+                "bytes_seq": np.full(B, float(bud.max_candidates))
+                * alg.POSTING_BYTES,
+                "bytes_random": n_c * R * (16 + 4) + n_probes * 32,
+            }
+        else:  # geo_first
+            n_c = np.full(B, float(bud.max_candidates))
+            stats = {
+                "candidates": n_c,
+                "bytes_spatial": n_c * 4 + n_c * R * (16 + 4),
+                "bytes_postings": n_c * logp * alg.POSTING_BYTES,
+                "seeks": 2 * n_c,
+                "n_probes": n_c * n_terms_real,
+                "bytes_seq": np.zeros(B),
+                "bytes_random": n_c * 4 + n_c * R * (16 + 4)
+                + n_c * n_terms_real * 32,
+            }
+        return {k: v * S for k, v in stats.items()}
 
     def run(self, batch: alg.QueryBatch) -> alg.TopKResult:
         with self.mesh:
             ids, scores = self._serve(self._index, batch)
-        return alg.TopKResult(ids=ids, scores=scores, stats={})
+        return alg.TopKResult(ids=ids, scores=scores, stats=self._model_stats(batch))

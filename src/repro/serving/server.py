@@ -6,12 +6,20 @@ One query's life:
    (:mod:`repro.serving.fingerprint`); near-duplicate searches collide.
 2. **cache lookup** — a hit returns the cached top-k immediately; its
    latency is just the lookup.
-3. **batcher** — misses queue in their (terms, rects) shape bucket; the
-   bucket flushes when it fills *or* when its oldest query's deadline
-   (``max_wait_s``) expires (:class:`~repro.serving.batcher.DeadlineBatcher`).
-4. **executor** — the batch runs on the engine (single device or sharded
-   scatter-gather); per-query rows are scattered back to their submitters.
-5. **cache fill** — each executed query's result is inserted with its
+3. **coalesce check** (optional) — a miss whose fingerprint is already in
+   a queued or executing batch *subscribes* to that batch's pending result
+   (:mod:`repro.serving.pending`) instead of re-enqueueing.
+4. **batcher** — remaining misses queue in their (terms, rects) shape
+   bucket; the bucket flushes when it fills *or* when its oldest query's
+   deadline (``max_wait_s``) expires
+   (:class:`~repro.serving.batcher.DeadlineBatcher`).
+5. **dispatch queue → workers** — flushed batches enter a FIFO dispatch
+   queue; each of ``n_workers`` executor slots picks up the next batch
+   when free, so sharded/mesh executor batches can overlap.
+6. **executor** — the batch runs on the engine (single device or sharded
+   scatter-gather); per-query rows are scattered back to their submitters
+   and to any coalesced subscribers.
+7. **cache fill** — each executed query's result is inserted with its
    *cost* (its share of the batch's measured execution time — the Landlord
    eviction credit) and its *size* (the top-k payload bytes — the Landlord
    byte-budget admission input).
@@ -19,21 +27,28 @@ One query's life:
 ``run_trace`` supports two replay disciplines:
 
 * **closed-loop** (``arrival="closed"``, PR 1 behavior): the next query is
-  released as soon as the previous one is handled; wall-clock timing.
+  released as soon as the previous one is handled; wall-clock timing; the
+  worker pool degenerates to the one real executor (``n_workers`` must be
+  1 — there is only one wall clock).
 * **open-loop** (any other ``arrival`` label): queries are released at the
   ``arrival_s`` stamps on the trace regardless of server progress, as an
-  event-driven simulation over a virtual clock.  Service durations are
-  *measured* on the real executor (or supplied via ``service_time`` for
-  deterministic tests) and charged to a single busy-server timeline, so
-  queueing delay under burst is modeled, not hidden.  Per-query latency is
-  decomposed exactly into **batch-wait** (arrival → bucket flush) +
-  **queue-wait** (flush → executor free) + **service** (batch execution),
-  and the report adds p50/p99 of each plus SLO attainment.
+  event-driven discrete-event simulation over a virtual clock.  Service
+  durations are *measured* on the real executor (or supplied via
+  ``service_time`` for deterministic tests) and charged to the earliest-
+  free of ``n_workers`` parallel worker timelines (``n_workers=1`` is the
+  single-busy-server model of PR 2, bit-identically), so queueing delay
+  under burst is modeled, not hidden.  Per-query latency is decomposed
+  exactly into **batch-wait** (arrival → bucket flush) + **queue-wait**
+  (flush → a worker frees up) + **service** (batch execution); coalesced
+  queries are charged the same three stages against their twin batch's
+  timeline, clamped at their own arrival, so the decomposition still sums
+  exactly to total latency for every query.
 """
 from __future__ import annotations
 
+import heapq
+import itertools
 import time
-from collections import deque
 from dataclasses import dataclass, field
 
 import jax
@@ -49,6 +64,7 @@ from repro.serving.batcher import (
     ShapeBucketedBatcher,
 )
 from repro.serving.fingerprint import query_fingerprint
+from repro.serving.pending import PendingTable
 
 
 @dataclass
@@ -58,13 +74,26 @@ class QueryResult:
 
 
 @dataclass
+class BatchEvent:
+    """One executed batch on the (virtual or wall) timeline."""
+
+    flush_t: float  # batcher emitted the batch (enters dispatch queue)
+    start_t: float  # a worker picked it up
+    done_t: float  # execution finished
+    worker: int  # worker slot that ran it
+    n_real: int  # real (non-padding) queries in the batch
+
+
+@dataclass
 class ServeReport:
     n_queries: int = 0
     wall_s: float = 0.0
     latencies_s: list[float] = field(default_factory=list)
     cache_hits: int = 0
     cache_misses: int = 0
+    coalesced: int = 0  # misses served by subscribing to an in-flight twin
     n_batches: int = 0
+    n_workers: int = 1
     pad_slots: int = 0
     real_slots: int = 0
     element_padding_overhead: float = 0.0
@@ -75,6 +104,10 @@ class ServeReport:
     batch_wait_s: list[float] = field(default_factory=list)
     queue_wait_s: list[float] = field(default_factory=list)
     service_s: list[float] = field(default_factory=list)
+    # dispatch timeline, one entry per executed batch in dispatch order
+    batch_events: list[BatchEvent] = field(default_factory=list)
+    # per-trace-position results (run_trace(collect_results=True) only)
+    results: list | None = None
     arrival: str = "closed"
     slo_ms: float | None = None
 
@@ -137,13 +170,16 @@ class ServeReport:
                 if self.slo_ms is not None
                 else ""
             )
-            lines.append(f"arrival={self.arrival}  {decomp}{slo}")
+            lines.append(
+                f"arrival={self.arrival}  workers={self.n_workers}  "
+                f"coalesced={self.coalesced}  {decomp}{slo}"
+            )
         lines.append("  ".join(f"{k}/q={v:,.0f}" for k, v in per_q.items()))
         return "\n".join(lines)
 
 
 class GeoServer:
-    """Cache → deadline/shape-bucketed batcher → executor, over a query trace."""
+    """Cache → coalesce → deadline batcher → worker pool, over a query trace."""
 
     def __init__(
         self,
@@ -151,18 +187,30 @@ class GeoServer:
         cache=None,
         batcher: ShapeBucketedBatcher | None = None,
         fingerprint_quant: int = 128,
+        n_workers: int = 1,
+        coalesce: bool = False,
     ):
+        if n_workers < 1:
+            raise ValueError("n_workers must be >= 1")
         self.executor = executor
         self.cache = cache
         self.batcher = batcher or DeadlineBatcher()
         self.fingerprint_quant = fingerprint_quant
-        # qid → (fingerprint key, arrival time)
-        self._inflight: dict[int, tuple[tuple, float]] = {}
+        self.n_workers = n_workers
+        self.coalesce = coalesce
+        # qid → (fingerprint key, arrival time, trace position)
+        self._inflight: dict[int, tuple[tuple, float, int]] = {}
         self._next_qid = 0
-        self._free_at = 0.0  # open-loop executor busy-until (virtual seconds)
+        # per-worker busy-until times (virtual seconds, open loop)
+        self._workers: list[float] = [0.0] * n_workers
         # open-loop cache fills deferred to their batch's virtual completion:
-        # (done_time, key, value, cost), completion-ordered
-        self._pending_fills: deque[tuple[float, tuple, QueryResult, float]] = deque()
+        # a (done_time, seq, key, value, cost) min-heap — dispatch order is
+        # NOT completion order once workers overlap, so a fast batch behind
+        # a slow one must still become visible at its own done time
+        self._pending_fills: list[tuple[float, int, tuple, QueryResult, float]] = []
+        self._fill_seq = itertools.count()
+        # fingerprint → in-flight batch subscription (coalescing)
+        self._pending = PendingTable() if coalesce else None
 
     # ------------------------------------------------------------------
     def run_trace(
@@ -172,16 +220,23 @@ class GeoServer:
         arrival: str = "closed",
         slo_ms: float | None = None,
         service_time=None,
+        collect_results: bool = False,
     ) -> ServeReport:
         """Serve a whole trace; returns the metrics report.
 
         ``arrival="closed"`` replays back-to-back on the wall clock (PR 1).
         Any other label replays **open-loop**: queries enter at their
-        ``arrival_s`` stamps on a virtual clock and queue when the server
-        falls behind.  ``service_time`` (optional, ``RawBatch -> seconds``)
-        replaces measured execution time in the virtual timeline, making
-        open-loop replay fully deterministic for tests; cache-hit lookup
-        latency is likewise pinned to zero when it is supplied.
+        ``arrival_s`` stamps on a virtual clock and queue when the worker
+        pool falls behind.  ``service_time`` (optional, ``RawBatch ->
+        seconds``) replaces measured execution time in the virtual
+        timeline, making open-loop replay fully deterministic for tests;
+        cache-hit lookup latency is likewise pinned to zero when it is
+        supplied.
+
+        ``collect_results=True`` additionally stores every query's top-k
+        (:class:`QueryResult`) in ``report.results``, aligned with the
+        input ``trace`` positions — hits get the cached value, executed
+        misses their batch row, coalesced misses their twin's row.
 
         ``warmup=True`` pre-compiles the batch shapes the trace will emit
         (predicted by replaying the cache/batcher decisions host-side)
@@ -191,7 +246,15 @@ class GeoServer:
         open_loop = arrival != "closed"
         if open_loop and not isinstance(self.batcher, DeadlineBatcher):
             raise ValueError("open-loop replay requires a DeadlineBatcher")
+        if not open_loop and self.n_workers != 1:
+            raise ValueError(
+                "closed-loop replay times one real executor on the wall clock; "
+                "n_workers > 1 requires open-loop arrivals"
+            )
         report = ServeReport(arrival=arrival, slo_ms=slo_ms)
+        report.n_workers = self.n_workers
+        if collect_results:
+            report.results = [None] * len(trace)
         if warmup and trace:
             self._warmup(trace, open_loop)
         # snapshot cumulative batcher counters so the report is per-run
@@ -209,20 +272,31 @@ class GeoServer:
         )
         report.n_compiled_shapes = len(report.shapes_used)
         assert not self._inflight, "batcher dropped in-flight queries"
+        if self._pending is not None:
+            n_left = self._pending.unresolved_subscribers()
+            assert n_left == 0, "coalesced queries left unresolved"
         return report
 
     # ------------------------------------------------------------------
     def _lookup(self, q: TraceQuery):
-        if self.cache is None:
-            return None, None  # no cache → fingerprinting is pure overhead
+        if self.cache is None and not self.coalesce:
+            return None, None  # no consumer → fingerprinting is pure overhead
         key = query_fingerprint(q.terms, q.rects, q.amps, quant=self.fingerprint_quant)
-        return key, self.cache.get(key)
+        hit = self.cache.get(key) if self.cache is not None else None
+        return key, hit
+
+    @staticmethod
+    def _set_result(report: ServeReport, idx: int, value) -> None:
+        if report.results is not None:
+            report.results[idx] = value
 
     def _run_closed(self, trace: list[TraceQuery], report: ServeReport) -> None:
         """PR 1 wall-clock loop + deadline flushes discovered between queries."""
         deadline_aware = isinstance(self.batcher, DeadlineBatcher)
+        if self._pending is not None:
+            self._pending.clear()
         t_start = time.perf_counter()
-        for q in trace:
+        for idx, q in enumerate(trace):
             t_arr = time.perf_counter() - t_start
             if deadline_aware:
                 dl = self.batcher.next_deadline()
@@ -234,12 +308,25 @@ class GeoServer:
                 report.cache_hits += 1
                 lookup_s = time.perf_counter() - t_start - t_arr
                 self._record(report, lookup_s, 0.0, 0.0, lookup_s)
+                self._set_result(report, idx, hit)
                 report.n_queries += 1
                 continue
             report.cache_misses += 1
+            # coalesce: the twin is still waiting in a batcher bucket
+            # (closed-loop has no post-flush window — execution is
+            # synchronous with the flush on the wall clock)
+            if self._pending is not None:
+                entry = self._pending.lookup(key, t_arr)
+                if entry is not None:
+                    report.coalesced += 1
+                    entry.subscribers.append((t_arr, idx))
+                    report.n_queries += 1
+                    continue
             qid = self._next_qid
             self._next_qid += 1
-            self._inflight[qid] = (key, t_arr)
+            self._inflight[qid] = (key, t_arr, idx)
+            if self._pending is not None:
+                self._pending.register(key, qid)
             pending = PendingQuery(qid, q.terms, q.rects, q.amps)
             raws = (
                 self.batcher.add(pending, t_arr)
@@ -255,16 +342,25 @@ class GeoServer:
         report.wall_s = time.perf_counter() - t_start
 
     def _run_open(self, trace, report: ServeReport, service_time) -> None:
-        """Event-driven open-loop replay over the trace's arrival stamps."""
+        """Discrete-event open-loop replay over the trace's arrival stamps.
+
+        Flushed batches enter a FIFO dispatch queue; each of ``n_workers``
+        executor slots picks up the next batch the moment it frees up
+        (equivalently: a batch's start time is ``max(flush_t, earliest
+        worker-free time)`` in flush order — work-conserving by
+        construction, property-tested in ``tests/test_multiworker_serving``).
+        """
         b: DeadlineBatcher = self.batcher
-        trace = sorted(trace, key=lambda q: q.arrival_s)  # stable: FIFO on ties
-        self._free_at = 0.0
+        order = sorted(range(len(trace)), key=lambda i: trace[i].arrival_s)
+        self._workers = [0.0] * self.n_workers
         self._pending_fills.clear()
-        t_first = trace[0].arrival_s if trace else 0.0
-        t_last = trace[-1].arrival_s if trace else 0.0
-        for q in trace:
+        if self._pending is not None:
+            self._pending.clear()
+        t_first = trace[order[0]].arrival_s if trace else 0.0
+        t_last = trace[order[-1]].arrival_s if trace else 0.0
+        for idx in order:
+            q = trace[idx]
             now = q.arrival_s
-            self._apply_fills(now)
             # fire every deadline timer that expires before this arrival
             while True:
                 dl = b.next_deadline()
@@ -274,6 +370,12 @@ class GeoServer:
                     self._execute_open(
                         raw, report, flush_t=dl, service_time=service_time
                     )
+            # apply fills AFTER the deadline loop: a deadline batch that
+            # completed before `now` must be visible to this very lookup
+            # (it triggered the lazy flush), as it would be on a live server
+            self._apply_fills(now)
+            if self._pending is not None:
+                self._pending.expire(now)
             t_lk = time.perf_counter()
             key, hit = self._lookup(q)
             if hit is not None:
@@ -284,12 +386,27 @@ class GeoServer:
                     0.0 if service_time is not None else time.perf_counter() - t_lk
                 )
                 self._record(report, lookup_s, 0.0, 0.0, lookup_s)
+                self._set_result(report, idx, hit)
                 report.n_queries += 1
                 continue
             report.cache_misses += 1
+            # coalesce: subscribe to an in-flight twin (queued in a bucket,
+            # waiting for a worker, or executing) instead of re-enqueueing
+            if self._pending is not None:
+                entry = self._pending.lookup(key, now)
+                if entry is not None:
+                    report.coalesced += 1
+                    if entry.dispatched:
+                        self._record_coalesced(report, entry, now, idx)
+                    else:
+                        entry.subscribers.append((now, idx))
+                    report.n_queries += 1
+                    continue
             qid = self._next_qid
             self._next_qid += 1
-            self._inflight[qid] = (key, now)
+            self._inflight[qid] = (key, now, idx)
+            if self._pending is not None:
+                self._pending.register(key, qid)
             for raw in b.add(PendingQuery(qid, q.terms, q.rects, q.amps), now):
                 self._execute_open(raw, report, flush_t=now, service_time=service_time)
             report.n_queries += 1
@@ -302,10 +419,12 @@ class GeoServer:
             for raw in b.due(dl):
                 self._execute_open(raw, report, flush_t=dl, service_time=service_time)
         for raw in b.flush():
-            flush_t = max(t_last, self._free_at)
+            flush_t = max(t_last, min(self._workers))
             self._execute_open(raw, report, flush_t=flush_t, service_time=service_time)
         self._apply_fills(float("inf"))  # a later run_trace sees the full cache
-        report.wall_s = max(self._free_at, t_last) - t_first
+        if self._pending is not None:
+            self._pending.expire(float("inf"))
+        report.wall_s = max(max(self._workers), t_last) - t_first
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -315,6 +434,25 @@ class GeoServer:
         report.queue_wait_s.append(queue_wait)
         report.service_s.append(service)
 
+    def _record_coalesced(self, report, entry, t_arr: float, idx: int) -> None:
+        """Charge a coalesced query against its twin batch's timeline.
+
+        Each stage is clamped at the subscriber's own arrival — it cannot
+        wait for a phase that ended before it arrived — so the three
+        components still sum exactly to ``done - t_arr``:
+
+        * arrived before the flush: full batch-wait tail + queue-wait +
+          service;
+        * arrived while the batch sat in the dispatch queue: queue-wait
+          tail + service;
+        * arrived mid-execution: the remaining service time only.
+        """
+        batch_wait = max(entry.flush_t - t_arr, 0.0)
+        queue_wait = max(entry.start_t - max(t_arr, entry.flush_t), 0.0)
+        service = entry.done_t - max(t_arr, entry.start_t)
+        self._record(report, entry.done_t - t_arr, batch_wait, queue_wait, service)
+        self._set_result(report, idx, entry.value)
+
     def _predict_shapes(self, trace: list[TraceQuery], open_loop: bool) -> set:
         """Replay cache + batcher decisions (no execution) → emitted shapes.
 
@@ -322,10 +460,13 @@ class GeoServer:
         pressure Landlord's cost/size-dependent evictions may diverge, and
         in open-loop mode the real loop fills the cache at *completion*
         time rather than emission time, so a duplicate arriving while its
-        twin is still queued may hit here and miss there.  Closed-loop
-        prediction is time-blind: with a finite ``max_wait_s`` the real
-        loop's wall-clock deadline flushes can emit smaller batch shapes
-        than predicted (open-loop replay is the intended home of finite
+        twin is still queued may hit here and miss there.  Coalescing is
+        approximated the same way: a duplicate of a not-yet-emitted query
+        is skipped (its in-flight window is closed at emission here, at
+        batch completion in the real loop).  Closed-loop prediction is
+        time-blind: with a finite ``max_wait_s`` the real loop's
+        wall-clock deadline flushes can emit smaller batch shapes than
+        predicted (open-loop replay is the intended home of finite
         deadlines).  Either way an unpredicted shape simply compiles
         inside the timed loop.
         """
@@ -333,25 +474,34 @@ class GeoServer:
         batcher = self.batcher.clone_empty()
         deadline_aware = isinstance(batcher, DeadlineBatcher)
         pending: dict[int, tuple] = {}
+        inflight_keys: set = set()  # coalesce window approximation
         shapes: set = set()
 
         def emit(raws):
             for raw in raws:
                 shapes.add(raw.shape)
-                if cache is not None:
-                    for qid in raw.qids:
-                        cache.put(pending.pop(qid), True)
+                for qid in raw.qids:
+                    key = pending.pop(qid)
+                    inflight_keys.discard(key)
+                    if cache is not None:
+                        cache.put(key, True)
 
         qid = 0
 
         def admit(q: TraceQuery, now: float) -> None:
             nonlocal qid
-            key = query_fingerprint(
-                q.terms, q.rects, q.amps, quant=self.fingerprint_quant
-            )
+            if cache is None and not self.coalesce:
+                key = None
+            else:
+                key = query_fingerprint(
+                    q.terms, q.rects, q.amps, quant=self.fingerprint_quant
+                )
             if cache is not None and cache.get(key) is not None:
                 return
+            if self.coalesce and key in inflight_keys:
+                return
             pending[qid] = key
+            inflight_keys.add(key)
             p = PendingQuery(qid, q.terms, q.rects, q.amps)
             emit(batcher.add(p, now) if deadline_aware else batcher.add(p))
             qid += 1
@@ -419,14 +569,6 @@ class GeoServer:
             )
         return ids, scores
 
-    def _fill_cache(self, key, ids, scores, row: int, cost: float) -> None:
-        if self.cache is None:
-            return
-        value = QueryResult(ids[row].copy(), scores[row].copy())
-        self.cache.put(
-            key, value, cost=cost, size=value.ids.nbytes + value.scores.nbytes
-        )
-
     def _execute(
         self, raw: RawBatch, report: ServeReport, flush_t: float, t0: float
     ) -> None:
@@ -443,23 +585,56 @@ class GeoServer:
         # batch cost shared equally by its real queries (Landlord credit)
         service = t_done - t_exec
         cost = service / max(raw.n_real, 1)
+        report.batch_events.append(
+            BatchEvent(flush_t, t_exec, t_done, 0, raw.n_real)
+        )
         for row, qid in enumerate(raw.qids):
-            key, t_arr = self._inflight.pop(qid)
+            key, t_arr, idx = self._inflight.pop(qid)
             self._record(
                 report, t_done - t_arr, flush_t - t_arr, t_exec - flush_t, service
             )
-            self._fill_cache(key, ids, scores, row, cost)
+            need_value = (
+                report.results is not None
+                or self.cache is not None
+                or self._pending is not None
+            )
+            value = (
+                QueryResult(ids[row].copy(), scores[row].copy())
+                if need_value
+                else None
+            )
+            self._set_result(report, idx, value)
+            if self.cache is not None:
+                self.cache.put(
+                    key, value,
+                    cost=cost, size=value.ids.nbytes + value.scores.nbytes,
+                )
+            if self._pending is not None:
+                entry = self._pending.resolve(key, qid)
+                if entry is not None:
+                    for t_sub, sub_idx in entry.subscribers:
+                        self._record(
+                            report,
+                            t_done - t_sub,
+                            flush_t - t_sub,
+                            t_exec - flush_t,
+                            service,
+                        )
+                        self._set_result(report, sub_idx, value)
+                    entry.subscribers.clear()
 
     def _apply_fills(self, now: float) -> None:
         """Insert deferred results whose batch completed by virtual ``now``.
 
         Open-loop cache fills become visible only at their batch's virtual
         completion — a duplicate arriving while its twin is still queued or
-        executing misses, exactly as it would in a live server.
+        executing misses the cache, exactly as it would in a live server
+        (with coalescing on, that duplicate subscribes to the in-flight
+        twin instead).
         """
         fills = self._pending_fills
         while fills and fills[0][0] <= now:
-            _, key, value, cost = fills.popleft()
+            _, _, key, value, cost = heapq.heappop(fills)
             self.cache.put(
                 key, value, cost=cost, size=value.ids.nbytes + value.scores.nbytes
             )
@@ -467,20 +642,53 @@ class GeoServer:
     def _execute_open(
         self, raw: RawBatch, report: ServeReport, flush_t: float, service_time
     ) -> None:
-        """Open-loop execution: charge service time to the virtual timeline."""
+        """Open-loop execution: dispatch to the earliest-free worker slot.
+
+        The batch starts when a worker frees up (``max(flush_t,
+        min(worker-free times))`` — FIFO dispatch, work-conserving) and its
+        measured (or injected) duration is charged to that worker's
+        timeline; with one worker this is exactly the single busy-server
+        recurrence of PR 2.
+        """
         t0 = time.perf_counter()
         ids, scores = self._finish_batch(raw, report)
         if service_time is not None:
             dt = float(service_time(raw))
         else:
             dt = time.perf_counter() - t0
-        start = max(flush_t, self._free_at)
+        w = min(range(self.n_workers), key=lambda i: self._workers[i])
+        start = max(flush_t, self._workers[w])
         done = start + dt
-        self._free_at = done
+        self._workers[w] = done
+        report.batch_events.append(BatchEvent(flush_t, start, done, w, raw.n_real))
         cost = dt / max(raw.n_real, 1)
         for row, qid in enumerate(raw.qids):
-            key, t_arr = self._inflight.pop(qid)
+            key, t_arr, idx = self._inflight.pop(qid)
             self._record(report, done - t_arr, flush_t - t_arr, start - flush_t, dt)
+            need_value = (
+                report.results is not None
+                or self.cache is not None
+                or self._pending is not None
+            )
+            value = (
+                QueryResult(ids[row].copy(), scores[row].copy())
+                if need_value
+                else None
+            )
+            self._set_result(report, idx, value)
             if self.cache is not None:
-                value = QueryResult(ids[row].copy(), scores[row].copy())
-                self._pending_fills.append((done, key, value, cost))
+                heapq.heappush(
+                    self._pending_fills,
+                    (done, next(self._fill_seq), key, value, cost),
+                )
+            if self._pending is not None:
+                entry = self._pending.on_dispatch(
+                    key, qid, flush_t, start, done, value
+                )
+                if entry is not None:
+                    # resolve duplicates that subscribed while this query
+                    # sat in its batcher bucket; later duplicates (arriving
+                    # before `done`) are recorded directly at lookup time
+                    for t_sub, sub_idx in entry.subscribers:
+                        self._record_coalesced(report, entry, t_sub, sub_idx)
+                    entry.subscribers.clear()

@@ -139,6 +139,25 @@ def test_arrivals_are_sorted_and_roughly_at_rate(kind):
     assert 0.5 * 200.0 < achieved < 2.0 * 200.0, achieved
 
 
+@pytest.mark.parametrize("kind", ["poisson", "bursty", "diurnal"])
+def test_arrivals_deterministic_per_seed(kind):
+    """Fixed seed → identical stamps across calls (guards the virtual-clock
+    serving tests against nondeterministic traces); different seed differs."""
+    a = make_arrivals(kind, 500, rate_qps=300.0, seed=42)
+    b = make_arrivals(kind, 500, rate_qps=300.0, seed=42)
+    np.testing.assert_array_equal(a, b)
+    c = make_arrivals(kind, 500, rate_qps=300.0, seed=43)
+    assert not np.array_equal(a, c)
+
+
+def test_stamp_arrivals_deterministic_per_seed():
+    corpus = make_corpus(n_docs=80, n_terms=40, seed=0)
+    trace = make_zipf_trace(corpus, n_queries=40, pool_size=8, seed=1)
+    s1 = stamp_arrivals(trace, "poisson", rate_qps=150.0, seed=9)
+    s2 = stamp_arrivals(trace, "poisson", rate_qps=150.0, seed=9)
+    assert [q.arrival_s for q in s1] == [q.arrival_s for q in s2]
+
+
 def test_arrivals_validation():
     with pytest.raises(ValueError):
         make_arrivals("weibull", 10)

@@ -1,0 +1,396 @@
+"""Property tests for multi-worker open-loop serving + in-flight coalescing.
+
+The open-loop replay is a discrete-event simulation, so every invariant
+here runs on a **virtual clock** with an injected ``service_time`` model —
+no wall-clock or XLA timing leaks in, and every check is deterministic.
+
+hypothesis is not a baked-in dependency of this container, so the
+properties are checked as *seeded loops* over many randomized
+configurations (traces, arrival processes, worker counts, deadlines,
+caches); when hypothesis is installed an extra fuzz variant drives the
+same checker with drawn parameters.
+
+Invariants (ISSUE 3):
+
+(a) batch-wait + queue-wait + service == total latency for every query,
+    under any workers × coalesce × deadline × arrival-process mix;
+(b) ``n_workers=1, coalesce=False`` reproduces PR 2's single-busy-server
+    open-loop timeline bit-identically (recurrence + default-config
+    equality);
+(c) work conservation — no worker idles while the dispatch queue holds a
+    flushed batch;
+(d) coalesced duplicates return the same doc IDs/scores as their executed
+    twin and never increase the executed-batch count.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import algorithms as alg
+from repro.corpus import make_arrivals
+from repro.corpus.synth import TraceQuery
+from repro.serving import DeadlineBatcher, GeoServer, LRUCache
+
+
+class RowExecutor:
+    """Deterministic per-row results, no jax: each output row is a pure
+    function of that row's own (unpadded) query content, so identical
+    queries must produce identical ids/scores however they are batched."""
+
+    top_k = 4
+
+    def run(self, batch):
+        terms = np.asarray(batch.terms)
+        B = terms.shape[0]
+        base = terms.max(axis=1).astype(np.int64)  # padding rows → -1
+        ids = (base[:, None] * 16 + np.arange(self.top_k)).astype(np.int32)
+        tsum = np.where(terms >= 0, terms, 0).sum(axis=1).astype(np.float32)
+        scores = tsum[:, None] - np.arange(self.top_k, dtype=np.float32)
+        return alg.TopKResult(
+            ids=ids, scores=scores, stats={"bytes_seq": np.ones(B)}
+        )
+
+
+def _pool_query(i: int, d: int, r: int) -> TraceQuery:
+    # disjoint term ranges per pool slot → distinct fingerprints
+    terms = np.arange(i * 8, i * 8 + d, dtype=np.int32)
+    lo = np.full((r, 2), 0.1 + 0.01 * (i % 50), np.float32)
+    rects = np.concatenate([lo, lo + 0.05], axis=1)
+    return TraceQuery(terms, rects, np.ones((r,), np.float32))
+
+
+def _random_trace(seed, n=200, pool=24, kind="poisson", rate=400.0):
+    """Duplicate-heavy stamped trace; ``pool=None`` → all queries distinct."""
+    rng = np.random.default_rng(seed)
+    size = n if pool is None else pool
+    pool_qs = [
+        _pool_query(i, int(rng.integers(1, 8)), int(rng.integers(1, 4)))
+        for i in range(size)
+    ]
+    picks = np.arange(n) if pool is None else rng.integers(0, pool, n)
+    times = make_arrivals(kind, n, rate_qps=rate, seed=seed + 1)
+    return [
+        dataclasses.replace(pool_qs[p], arrival_s=float(t))
+        for p, t in zip(picks, times)
+    ]
+
+
+def _service(raw) -> float:
+    """Injected virtual batch duration: deterministic function of the batch."""
+    return (1 + (raw.n_real % 3)) * 1.7e-3
+
+
+def _server(workers=1, coalesce=False, max_wait_s=2e-3, cache=None, max_batch=8):
+    return GeoServer(
+        RowExecutor(),
+        cache=cache,
+        batcher=DeadlineBatcher(
+            max_batch=max_batch, max_terms=8, max_rects=4, max_wait_s=max_wait_s
+        ),
+        n_workers=workers,
+        coalesce=coalesce,
+    )
+
+
+def _check_decomposition(rep, n: int) -> None:
+    assert rep.n_queries == n
+    assert len(rep.latencies_s) == n
+    assert rep.cache_hits + rep.cache_misses == n
+    assert rep.coalesced <= rep.cache_misses
+    total = (
+        np.asarray(rep.batch_wait_s)
+        + np.asarray(rep.queue_wait_s)
+        + np.asarray(rep.service_s)
+    )
+    np.testing.assert_allclose(
+        np.asarray(rep.latencies_s), total, rtol=0, atol=1e-12
+    )
+    # every component is a real delay, never negative
+    assert min(rep.batch_wait_s) >= 0
+    assert min(rep.queue_wait_s) >= 0
+    assert min(rep.service_s) >= 0
+
+
+def _run_and_check(seed, workers, coalesce, wait, kind, with_cache) -> None:
+    trace = _random_trace(seed, kind=kind)
+    cache = LRUCache(64) if with_cache else None
+    srv = _server(workers, coalesce, wait, cache)
+    rep = srv.run_trace(trace, warmup=False, arrival=kind, service_time=_service)
+    _check_decomposition(rep, len(trace))
+
+
+# ---------------------------------------------------------------------------
+# (a) exact latency decomposition under every configuration
+# ---------------------------------------------------------------------------
+
+def test_decomposition_sums_exactly_across_configs():
+    for seed in range(6):
+        kind = ("poisson", "bursty")[seed % 2]
+        with_cache = seed % 3 == 0
+        for workers in (1, 2, 4):
+            for coalesce in (False, True):
+                for wait in (0.0, 2e-3, float("inf")):
+                    _run_and_check(seed, workers, coalesce, wait, kind, with_cache)
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 10_000),
+        workers=st.integers(1, 5),
+        coalesce=st.booleans(),
+        wait=st.sampled_from([0.0, 1e-3, 5e-3, float("inf")]),
+        kind=st.sampled_from(["poisson", "bursty", "diurnal"]),
+        with_cache=st.booleans(),
+    )
+    def test_decomposition_sums_exactly_fuzzed(
+        seed, workers, coalesce, wait, kind, with_cache
+    ):
+        _run_and_check(seed, workers, coalesce, wait, kind, with_cache)
+except ImportError:  # seeded loops above cover the property
+    pass
+
+
+# ---------------------------------------------------------------------------
+# (b) n_workers=1, coalesce=False ≡ PR 2 single-busy-server timeline
+# ---------------------------------------------------------------------------
+
+def test_single_worker_follows_busy_server_recurrence():
+    """PR 2 semantics: one executor timeline — batch j starts at
+    max(flush_j, done_{j-1}), exactly (float-equal, not approximately)."""
+    for seed in range(4):
+        trace = _random_trace(seed, n=300, rate=800.0)
+        srv = _server(workers=1, coalesce=False, cache=LRUCache(64))
+        rep = srv.run_trace(
+            trace, warmup=False, arrival="poisson", service_time=_service
+        )
+        free = 0.0
+        for ev in rep.batch_events:
+            assert ev.worker == 0
+            assert ev.start_t == max(ev.flush_t, free)
+            free = ev.done_t
+        _check_decomposition(rep, len(trace))
+
+
+def test_default_server_is_single_worker_no_coalesce():
+    """A server built without the new knobs reproduces the explicit
+    (n_workers=1, coalesce=False) run bit-identically."""
+    trace = _random_trace(3, n=250)
+    batcher = dict(max_batch=8, max_terms=8, max_rects=4, max_wait_s=2e-3)
+    old_style = GeoServer(
+        RowExecutor(), cache=LRUCache(64), batcher=DeadlineBatcher(**batcher)
+    )
+    explicit = GeoServer(
+        RowExecutor(), cache=LRUCache(64), batcher=DeadlineBatcher(**batcher),
+        n_workers=1, coalesce=False,
+    )
+    reps = [
+        s.run_trace(trace, warmup=False, arrival="poisson", service_time=_service)
+        for s in (old_style, explicit)
+    ]
+    assert reps[0].latencies_s == reps[1].latencies_s
+    assert reps[0].batch_wait_s == reps[1].batch_wait_s
+    assert reps[0].queue_wait_s == reps[1].queue_wait_s
+    assert reps[0].service_s == reps[1].service_s
+    assert reps[0].n_batches == reps[1].n_batches
+    assert reps[0].cache_hits == reps[1].cache_hits
+    assert reps[0].coalesced == reps[1].coalesced == 0
+
+
+# ---------------------------------------------------------------------------
+# (c) work conservation across the worker pool
+# ---------------------------------------------------------------------------
+
+def test_no_worker_idles_while_dispatch_queue_nonempty():
+    """FIFO dispatch: every batch starts the instant both it (flush) and
+    the earliest-free worker are ready, on that earliest-free worker."""
+    for seed in range(4):
+        for workers in (2, 3, 4):
+            trace = _random_trace(seed, n=300, rate=900.0)
+            srv = _server(workers, coalesce=seed % 2 == 1, max_wait_s=1e-3)
+            rep = srv.run_trace(
+                trace, warmup=False, arrival="poisson", service_time=_service
+            )
+            free = [0.0] * workers
+            for ev in rep.batch_events:
+                assert free[ev.worker] == min(free)  # earliest-free slot
+                assert ev.start_t == max(ev.flush_t, min(free))
+                free[ev.worker] = ev.done_t
+            assert len(rep.batch_events) == rep.n_batches
+
+
+def test_more_workers_cut_queue_wait_at_same_load():
+    """Acceptance: at a load that saturates one worker, a pool drains the
+    dispatch queue — p99 queue-wait drops (virtual clock, deterministic)."""
+    trace = _random_trace(0, n=400, pool=None, rate=1000.0)  # all distinct
+    reps = {}
+    for workers in (1, 4):
+        srv = _server(workers, max_wait_s=1e-3)
+        reps[workers] = srv.run_trace(
+            trace, warmup=False, arrival="poisson",
+            service_time=lambda raw: 3e-3,
+        )
+    qw1 = reps[1].stage_percentile_ms("queue_wait", 99)
+    qw4 = reps[4].stage_percentile_ms("queue_wait", 99)
+    assert qw4 < 0.5 * qw1, (qw1, qw4)
+    assert reps[4].percentile_ms(99) < reps[1].percentile_ms(99)
+    # same batches were executed either way — only the timeline changed
+    assert reps[4].n_batches == reps[1].n_batches
+
+
+# ---------------------------------------------------------------------------
+# (d) coalescing: twin results, never more executed batches
+# ---------------------------------------------------------------------------
+
+def test_coalesced_duplicates_return_twin_results():
+    for seed in range(4):
+        # high rate → many duplicates arrive while their twin is in flight
+        trace = _random_trace(seed, n=250, pool=12, rate=2000.0)
+        plain = _server(2, coalesce=False, cache=LRUCache(256))
+        rep0 = plain.run_trace(
+            trace, warmup=False, arrival="poisson",
+            service_time=_service, collect_results=True,
+        )
+        srv = _server(2, coalesce=True, cache=LRUCache(256))
+        rep1 = srv.run_trace(
+            trace, warmup=False, arrival="poisson",
+            service_time=_service, collect_results=True,
+        )
+        assert rep1.coalesced > 0
+        # coalescing removes work; it can never add executed batches
+        assert rep1.n_batches <= rep0.n_batches
+        assert rep1.real_slots + rep1.coalesced + rep1.cache_hits == len(trace)
+        _check_decomposition(rep1, len(trace))
+        # every query got a result, and identical queries — whether
+        # executed, cache-hit, or coalesced — got identical ids/scores
+        assert all(r is not None for r in rep1.results)
+        for rep in (rep0, rep1):
+            by_query = {}
+            for q, res in zip(trace, rep.results):
+                by_query.setdefault(q.terms.tobytes(), []).append(res)
+            for group in by_query.values():
+                for r in group[1:]:
+                    np.testing.assert_array_equal(group[0].ids, r.ids)
+                    np.testing.assert_array_equal(group[0].scores, r.scores)
+        # and the two runs agree query-by-query
+        for r0, r1 in zip(rep0.results, rep1.results):
+            np.testing.assert_array_equal(r0.ids, r1.ids)
+            np.testing.assert_array_equal(r0.scores, r1.scores)
+
+
+def test_coalesce_without_cache_still_dedupes_in_flight():
+    trace = _random_trace(1, n=200, pool=8, rate=2000.0)
+    rep_off = _server(1, coalesce=False).run_trace(
+        trace, warmup=False, arrival="poisson", service_time=_service
+    )
+    rep_on = _server(1, coalesce=True).run_trace(
+        trace, warmup=False, arrival="poisson", service_time=_service
+    )
+    assert rep_on.coalesced > 0
+    assert rep_on.real_slots < rep_off.real_slots  # fewer executed queries
+    assert rep_on.n_batches <= rep_off.n_batches
+    assert rep_on.cache_hits == rep_off.cache_hits == 0
+    _check_decomposition(rep_on, len(trace))
+
+
+# ---------------------------------------------------------------------------
+# cache-fill visibility on the virtual timeline
+# ---------------------------------------------------------------------------
+
+def test_fast_batch_fill_visible_behind_slow_earlier_batch():
+    """With overlapping workers, completion order != dispatch order: a fast
+    batch's cache fill must become visible at its own done time even while
+    an earlier-dispatched slow batch is still running."""
+    slow, fast = _pool_query(0, d=3, r=1), _pool_query(1, d=3, r=1)
+    trace = [
+        dataclasses.replace(slow, arrival_s=0.0),  # service 100ms → done 0.1
+        dataclasses.replace(fast, arrival_s=0.001),  # service 1ms → done ~2ms
+        dataclasses.replace(fast, arrival_s=0.050),  # must HIT the cache
+    ]
+    srv = _server(workers=2, max_wait_s=0.0, cache=LRUCache(16))
+    rep = srv.run_trace(
+        trace, warmup=False, arrival="poisson",
+        service_time=lambda raw: 0.1 if raw.terms[0, 0] == 0 else 1e-3,
+    )
+    assert rep.cache_hits == 1
+    assert rep.n_batches == 2
+    _check_decomposition(rep, len(trace))
+
+
+def test_deadline_batch_fill_visible_to_triggering_arrival():
+    """A duplicate whose arrival lazily fires the twin's deadline flush —
+    with the twin's completion long past — must hit the cache, as on a
+    live server where that batch really finished on the wall clock."""
+    q = _pool_query(2, d=3, r=1)
+    trace = [
+        dataclasses.replace(q, arrival_s=0.0),  # flush at 5ms, done at 7ms
+        dataclasses.replace(q, arrival_s=0.020),  # arrives well after 7ms
+    ]
+    srv = _server(workers=1, max_wait_s=5e-3, cache=LRUCache(16))
+    rep = srv.run_trace(
+        trace, warmup=False, arrival="poisson", service_time=lambda raw: 2e-3
+    )
+    assert rep.cache_hits == 1
+    assert rep.n_batches == 1
+    _check_decomposition(rep, len(trace))
+
+
+# ---------------------------------------------------------------------------
+# closed-loop edges of the new knobs
+# ---------------------------------------------------------------------------
+
+def test_closed_loop_coalesces_within_batcher_window():
+    q = _pool_query(0, d=3, r=1)
+    fillers = [_pool_query(i, d=3, r=1) for i in range(1, 4)]
+    trace = [q, dataclasses.replace(q)] + fillers  # dup while twin batched
+    srv = _server(1, coalesce=True, max_wait_s=float("inf"), max_batch=4)
+    rep = srv.run_trace(trace, warmup=False, collect_results=True)
+    assert rep.coalesced == 1
+    assert rep.real_slots == 4  # the duplicate never re-executed
+    np.testing.assert_array_equal(rep.results[0].ids, rep.results[1].ids)
+    np.testing.assert_array_equal(rep.results[0].scores, rep.results[1].scores)
+    _check_decomposition(rep, len(trace))
+
+
+def test_closed_loop_rejects_worker_pool():
+    srv = _server(workers=2)
+    with pytest.raises(ValueError, match="open-loop"):
+        srv.run_trace([_pool_query(0, 2, 1)], warmup=False, arrival="closed")
+    with pytest.raises(ValueError, match="n_workers"):
+        GeoServer(RowExecutor(), n_workers=0)
+
+
+# ---------------------------------------------------------------------------
+# CI tooling: the baseline gate tolerates new rows (warn, don't fail)
+# ---------------------------------------------------------------------------
+
+def test_compare_baseline_new_rows_warn_not_fail():
+    from benchmarks.compare_baseline import compare
+
+    base = {"a": {"p99_ms": 10.0, "qps": 100.0}}
+    cur = {
+        "a": {"p99_ms": 11.0, "qps": 99.0},
+        "serving_workers_2_coalesce_on": {"p99_ms": 500.0, "qps": 1.0},
+    }
+    failures, warnings = compare(base, cur)
+    assert failures == []
+    assert len(warnings) == 1
+    assert "serving_workers_2_coalesce_on" in warnings[0]
+
+
+def test_compare_baseline_dropped_and_regressed_rows_fail():
+    from benchmarks.compare_baseline import compare
+
+    base = {
+        "a": {"p99_ms": 200.0, "qps": 100.0},
+        "b": {"p99_ms": 10.0, "qps": 100.0},
+    }
+    cur = {"a": {"p99_ms": 2000.0, "qps": 10.0}}
+    failures, warnings = compare(base, cur)
+    assert warnings == []
+    assert len(failures) == 3  # a: p99 blowout, a: qps floor, b: dropped
+    assert any("missing" in f for f in failures)

@@ -9,6 +9,7 @@ from repro.serving import (
     GeoServer,
     LandlordCache,
     LRUCache,
+    MeshExecutor,
     ShapeBucketedBatcher,
     ShardedExecutor,
     SingleDeviceExecutor,
@@ -197,6 +198,75 @@ def test_sharded_executor_matches_single_device(partition):
             np.where(np.isfinite(g_sc[b][go]), g_sc[b][go], 0.0),
             rtol=1e-4, atol=1e-5,
         )
+
+
+# ---------------------------------------------------------------------------
+# executor byte counters (single vs sharded measured, mesh modeled)
+# ---------------------------------------------------------------------------
+
+def test_executor_byte_counters_nonzero_and_consistent():
+    """All three executors report the same per-stage counter keys on the
+    same batch; bytes are non-zero; the sharded(S=1, hash) measurement
+    matches single-device, and the MeshExecutor's host-side capacity model
+    upper-bounds the measured counters (it was an empty dict before)."""
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.corpus import make_query_trace
+
+    corpus = make_corpus(n_docs=192, n_terms=64, seed=11)
+    budgets = QueryBudgets(
+        max_candidates=256, max_tiles=64, k_sweeps=4, sweep_budget=128, top_k=5
+    )
+    eng = GeoSearchEngine.build(
+        corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
+        pagerank=corpus.pagerank, grid=16, budgets=budgets,
+    )
+    single = SingleDeviceExecutor(eng)
+    # hash partition with one shard keeps the doc order identical to the
+    # single-device engine, so measured counters must agree exactly
+    sharded = ShardedExecutor.build(
+        corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
+        pagerank=corpus.pagerank, n_shards=1, partition="hash",
+        grid=16, budgets=budgets,
+    )
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    meshx = MeshExecutor.build(
+        corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
+        pagerank=corpus.pagerank, mesh=mesh, partition="hash",
+        grid=16, budgets=budgets,
+    )
+    batch = make_query_trace(corpus, n_queries=8, seed=12)
+    sums = {}
+    for name, ex in [("single", single), ("sharded", sharded), ("mesh", meshx)]:
+        res = ex.run(batch)
+        assert res.stats, f"{name}: empty stats dict"
+        sums[name] = {
+            k: float(np.asarray(v, np.float64).sum()) for k, v in res.stats.items()
+        }
+    assert set(sums["mesh"]) == set(sums["sharded"]) == set(sums["single"])
+    for name in sums:
+        for k, v in sums[name].items():
+            if k.startswith("bytes_"):
+                assert v > 0, f"{name}: {k} is zero"
+    for k in sums["single"]:
+        np.testing.assert_allclose(
+            sums["sharded"][k], sums["single"][k], rtol=1e-6, err_msg=k
+        )
+        if k != "sweep_slack":  # the capacity model has zero slack
+            assert sums["mesh"][k] >= sums["single"][k] * (1 - 1e-9), k
+    # the counters also flow into a serving report through the server
+    server = GeoServer(
+        meshx, cache=None,
+        batcher=ShapeBucketedBatcher(
+            max_batch=8, max_terms=8, max_rects=4,
+            term_buckets=[8], rect_buckets=[4], batch_sizes=[8],
+        ),
+    )
+    rep = server.run_trace(
+        make_zipf_trace(corpus, n_queries=16, pool_size=8, seed=13)
+    )
+    assert any(k.startswith("bytes_") and v > 0 for k, v in rep.stats.items())
 
 
 # ---------------------------------------------------------------------------
