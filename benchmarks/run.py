@@ -6,6 +6,15 @@ Prints ``name,us_per_call,derived`` CSV rows:
                      proposed K-SWEEP pipeline vs the old/baseline pipeline)
                      measured as wall-clock per query on the CPU-hosted
                      engine, plus recall and modeled I/O bytes.
+* ``core_ksweep_{unpruned,pruned,pruned_fused}`` — block-max pruned
+                     K-SWEEP (sweep→score→select with adaptive threshold
+                     feedback; the ``pruned`` row runs the jnp oracle, the
+                     ``pruned_fused`` row the Pallas kernel — interpret
+                     mode on CPU, so its wall clock is a correctness
+                     smoke, not kernel speed) vs the unpruned reference
+                     on a padded zipf trace: recall, n_probes,
+                     postings/spatial bytes, blocks skipped; the
+                     ``_gain`` row prints the ratios.
 * ``fig_k_sweep``  — sensitivity of fetched volume to k (paper §IV.C).
 * ``fig_scale``    — throughput vs corpus size (the scalability axis the
                      paper's abstract claims).
@@ -108,6 +117,88 @@ def bench_table1(quick: bool) -> None:
         f"hbm_v5e={hbm['text_first']/hbm['k_sweep']:.2f}x;"
         f"wall_cpu={wall['text_first']/wall['k_sweep']:.2f}x;"
         f"paper=1.91x (0.65s->0.34s)",
+    )
+
+
+def bench_block_prune(quick: bool) -> None:
+    """Block-max pruned K-SWEEP vs the unpruned reference (zipf trace).
+
+    The PR 4 acceptance row: pruning must cut ``n_probes`` and
+    ``bytes_postings`` ≥ 2× at recall@10 ≥ 0.95 vs the unpruned path,
+    with ``blocks_skipped > 0``.
+    """
+    from dataclasses import replace
+
+    from repro.core import GeoSearchEngine, QueryBudgets
+    from repro.corpus import make_corpus, make_zipf_trace, pad_trace_batch
+
+    n_docs = 1200 if quick else 12000
+    corpus = make_corpus(n_docs, 400 if quick else 1500, seed=9)
+    budgets = QueryBudgets(
+        max_candidates=1024 if quick else 4096, max_tiles=256, k_sweeps=8,
+        sweep_budget=max(n_docs // 8, 256), top_k=10,
+    )
+    eng = GeoSearchEngine.build(
+        corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
+        pagerank=corpus.pagerank, grid=32 if quick else 64, budgets=budgets,
+    )
+    B = 64
+    trace = pad_trace_batch(
+        make_zipf_trace(corpus, n_queries=B, pool_size=48, seed=10)
+    )
+    dt_u, un = _time(lambda: eng.query(trace, "k_sweep"))
+    rec_u = eng.recall_at_k(trace, "k_sweep")
+    # fresh engine sharing the built index: `prune` is a static budget, and
+    # a new instance gets its own compiled-fn cache (eng.budgets keeps the
+    # sweep-budget clamp GeoSearchEngine.build applied)
+    eng_p = GeoSearchEngine(
+        index=eng.index, budgets=replace(eng.budgets, prune=True),
+        weights=eng.weights,
+    )
+    dt_p, pr = _time(lambda: eng_p.query(trace, "k_sweep"))
+    rec_p = eng_p.recall_at_k(trace, "k_sweep")
+    dt_f, prf = _time(lambda: eng_p.query(trace, "k_sweep", fused=True))
+    fused_same = bool((np.asarray(prf.ids) == np.asarray(pr.ids)).all())
+
+    def mean(r, key):
+        return float(np.asarray(r.stats[key], np.float64).mean())
+
+    # recall of the pruned top-k against the unpruned top-k
+    ai, bi = np.asarray(un.ids), np.asarray(pr.ids)
+    va = ai >= 0
+    found = (
+        (ai[:, :, None] == bi[:, None, :]) & va[:, :, None] & (bi[:, None, :] >= 0)
+    ).any(-1)
+    rec_vs_un = float(found.sum() / max(va.sum(), 1))
+    _row(
+        "core_ksweep_unpruned", dt_u / B * 1e6,
+        f"recall@10={rec_u:.3f};n_probes={mean(un, 'n_probes'):.0f};"
+        f"bytes_postings={mean(un, 'bytes_postings'):.0f};"
+        f"bytes_spatial={mean(un, 'bytes_spatial'):.0f};n_docs={n_docs}",
+    )
+    _row(
+        "core_ksweep_pruned", dt_p / B * 1e6,
+        f"recall@10={rec_p:.3f};n_probes={mean(pr, 'n_probes'):.0f};"
+        f"bytes_postings={mean(pr, 'bytes_postings'):.0f};"
+        f"bytes_spatial={mean(pr, 'bytes_spatial'):.0f};"
+        f"blocks_skipped={mean(pr, 'blocks_skipped'):.1f};"
+        f"blocks_total={mean(pr, 'blocks_total'):.1f};"
+        f"probes_saved={mean(pr, 'probes_saved'):.0f}",
+    )
+    _row(
+        "core_ksweep_pruned_fused", dt_f / B * 1e6,
+        f"ids_match_ref_path={int(fused_same)};"
+        f"blocks_skipped={mean(prf, 'blocks_skipped'):.1f};"
+        f"interpret_mode={int(jax.default_backend() != 'tpu')}",
+    )
+    _row(
+        "core_ksweep_prune_gain", 0.0,
+        f"recall_vs_unpruned={rec_vs_un:.3f};"
+        f"n_probes_x={mean(un, 'n_probes') / max(mean(pr, 'n_probes'), 1):.2f};"
+        f"bytes_postings_x="
+        f"{mean(un, 'bytes_postings') / max(mean(pr, 'bytes_postings'), 1):.2f};"
+        f"bytes_spatial_x="
+        f"{mean(un, 'bytes_spatial') / max(mean(pr, 'bytes_spatial'), 1):.2f}",
     )
 
 
@@ -334,6 +425,7 @@ def main() -> None:
     args = ap.parse_args()
     print("name,us_per_call,derived")
     bench_table1(args.quick)
+    bench_block_prune(args.quick)
     bench_k_sensitivity(args.quick)
     bench_scale(args.quick)
     bench_geo_partition(args.quick)

@@ -8,6 +8,10 @@ but for the serving layer (``repro.serving``):
 * ``serve_batcher_*``   — bucketed vs fixed-shape batching: padding overhead
                           and number of compiled shapes.
 * ``serve_shards_*``    — doc-sharded scatter-gather execution.
+* ``serve_algo_ksweep_pruned`` — the block-max pruned K-SWEEP engine
+                          (``budgets.prune``) behind the same serving
+                          stack: fewer inverted-index probes and streamed
+                          bytes per executed batch.
 * ``serving_arrival_*`` — open-loop replay (Poisson + bursty MMPP arrivals)
                           across ``max_wait_ms`` deadlines: the throughput
                           vs tail-latency tradeoff of deadline-based batch
@@ -136,6 +140,30 @@ def main() -> None:
     for kind in ["bucketed", "fixed"]:
         server = GeoServer(single, cache=None, batcher=batcher(kind))
         report_row(f"serve_batcher_{kind}", server.run_trace(zipf))
+
+    # block-max pruned K-SWEEP behind the same stack (shares the corpus;
+    # its own engine since `prune` is a static budget).  No cache, so every
+    # query actually executes the pruned pipeline.
+    from dataclasses import replace as _replace
+
+    eng_pruned = GeoSearchEngine.build(
+        corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
+        pagerank=corpus.pagerank, grid=32,
+        budgets=_replace(budgets, prune=True),
+    )
+    server = GeoServer(
+        SingleDeviceExecutor(eng_pruned), cache=None, batcher=batcher()
+    )
+    rep = server.run_trace(zipf)
+    probes = rep.stats.get("n_probes", 0)
+    saved = rep.stats.get("probes_saved", 0)
+    skipped = rep.stats.get("blocks_skipped", 0)
+    report_row("serve_algo_ksweep_pruned", rep)
+    _row(
+        "serve_algo_ksweep_pruned_io", 0.0,
+        f"n_probes={probes:.0f};probes_saved={saved:.0f};"
+        f"blocks_skipped={skipped:.0f}",
+    )
 
     # open-loop arrival sweep: deadline (max_wait_ms) trades padding +
     # throughput against tail latency; no cache so every query batches.

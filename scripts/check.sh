@@ -9,8 +9,9 @@ cd "$(dirname "$0")/.."
 if command -v ruff >/dev/null 2>&1; then
   echo "== ruff lint =="
   ruff check .
-  echo "== ruff format check (serving layer) =="
-  ruff format --check src/repro/serving benchmarks/compare_baseline.py
+  echo "== ruff format check (serving + core + kernels) =="
+  ruff format --check src/repro/serving src/repro/core src/repro/kernels \
+    benchmarks/compare_baseline.py
 else
   echo "== ruff not installed; skipping lint (CI runs it) =="
 fi

@@ -44,8 +44,21 @@ class QueryBudgets:
     sweep_budget: int = field(default=2048, metadata=dict(static=True))
     top_k: int = field(default=10, metadata=dict(static=True))
     # geo-score early termination in K-SWEEP (paper future work; lossy —
-    # keeps only the max_candidates strongest toe prints before text probing)
+    # keeps only the max_candidates strongest toe prints before text probing,
+    # but only AFTER paying the full stream + score cost)
     early_termination: bool = field(default=False, metadata=dict(static=True))
+    # block-max pruned K-SWEEP: skip whole sweep blocks whose precomputed
+    # upper bound (SpatialIndex blk_* columns) cannot beat the running
+    # partial top-max_candidates threshold θ — the candidates never get
+    # scored, probed, or sorted, and bytes_spatial counts only the blocks
+    # actually streamed.  Subsumes early_termination (the top-C cut is part
+    # of the pruned select stage).
+    prune: bool = field(default=False, metadata=dict(static=True))
+    # pruned select stage: additionally drop candidates whose partial geo
+    # score is ≤ prune_eps × query_mass (their normalized geo contribution
+    # is below prune_eps).  0 keeps every positive candidate — lossless for
+    # the final top-k whenever max_candidates covers the survivors.
+    prune_eps: float = field(default=0.0, metadata=dict(static=True))
 
 
 @jax.tree_util.register_dataclass
@@ -90,6 +103,14 @@ def _geo_score_docs(spatial, doc_ids, valid, q_rects, q_amps, geo_scorer):
 
 def _default_doc_scorer(rects, amps, q_rects, q_amps):
     return fp.geo_score(rects, amps, q_rects, q_amps)
+
+
+def _count_unique(ids: jax.Array, valid: jax.Array) -> jax.Array:
+    """Number of distinct ids among the valid positions (fixed shape)."""
+    big = jnp.int32(2**31 - 1)
+    s = jnp.sort(jnp.where(valid, ids, big))
+    nxt = jnp.concatenate([s[1:], jnp.full((1,), -2, jnp.int32)])
+    return jnp.sum(((s != nxt) & (s != big)).astype(jnp.int32))
 
 
 def _sorted_run_sums(ids: jax.Array, vals: jax.Array, valid: jax.Array):
@@ -251,6 +272,24 @@ def k_sweep(
     ``tp_scorer(rects [T,4], amps [T], q_rects [Q,4], q_amps [Q]) -> [T]``
     computes per-toe-print partial geo scores; defaults to the pure-jnp
     reference, swappable for the Pallas kernel (kernels/geo_score).
+
+    ``budgets.prune`` switches stage (3+6a) to the block-max pruned
+    sweep → score → select pipeline: per-block upper bounds from the
+    ``SpatialIndex`` blk_* columns are tested against a running partial
+    top-``max_candidates`` threshold θ and whole blocks that cannot beat it
+    are skipped before scoring — only the surviving candidates reach the
+    sort, the inverted-index probes, and the text filter.  ``fused=True``
+    runs it as one Pallas kernel (``kernels/sweep_score``); otherwise the
+    bit-matching pure-jnp oracle is used (``tp_scorer`` is ignored on the
+    pruned path — the scorer is baked into the select pipeline).  The
+    unpruned path is kept bit-identical as the correctness reference.
+
+    Stats report streamed vs. scored traffic separately: ``bytes_spatial``
+    counts bytes actually streamed from the store (whole sweeps, or only
+    unskipped blocks when pruning), ``bytes_scored`` the toe prints that
+    survive to candidate aggregation, plus ``blocks_skipped`` /
+    ``blocks_total`` (metadata-block units) and ``probes_saved`` (index
+    probes avoided vs. probing every fetched candidate).
     """
     if tp_scorer is None:
         tp_scorer = _default_tp_scorer
@@ -263,39 +302,98 @@ def k_sweep(
         s_starts, s_ends = sidx.split_sweeps_to_budget(
             s_starts, s_ends, budgets.k_sweeps, budgets.sweep_budget
         )
-        if fused:
-            # (3+6a) FUSED: the Pallas kernel streams each sweep through
-            # VMEM and scores it in-register (kernels/sweep_score); only the
-            # i32 doc-id column is fetched separately.
-            from repro.kernels.sweep_score.ops import sweep_score as _fused
-
-            part2d, ok2d = _fused(
-                spatial.tp_rects, spatial.tp_amps, s_starts, s_ends,
-                q_rects, q_amps, budgets.sweep_budget,
+        n_sweeps = jnp.sum((s_starts != INVALID).astype(jnp.int32))
+        total = budgets.k_sweeps * budgets.sweep_budget
+        Cmax = min(budgets.max_candidates, total)
+        bs = spatial.block_size
+        if budgets.prune:
+            # (3+6a+5a) PRUNED: block-max upper-bound test + adaptive θ
+            # feedback skip whole blocks before they are scored; the fused
+            # variant runs in-kernel (kernels/sweep_score), the other one
+            # through the bit-matching jnp oracle.  The θ buffer is seeded
+            # with the select stage's own score floor, so a skipped block
+            # provably holds no candidate the selection would keep.
+            if fused:
+                from repro.kernels.sweep_score.ops import sweep_score_pruned as _pr
+            else:
+                from repro.kernels.sweep_score.ref import (
+                    sweep_score_pruned_ref as _pr,
+                )
+            floor = jnp.maximum(
+                jnp.float32(budgets.prune_eps) * fp.query_mass(q_rects, q_amps), 0.0
+            )
+            part2d, ok2d, st2d, blocks_scored, blocks_active = _pr(
+                spatial.tp_rects,
+                spatial.tp_amps,
+                spatial.blk_mbr,
+                spatial.blk_max_amp,
+                spatial.blk_max_mass,
+                s_starts,
+                s_ends,
+                q_rects,
+                q_amps,
+                budgets.sweep_budget,
+                budgets.max_candidates,
+                bs,
+                floor,
             )
             part = part2d.reshape(-1)
             ok = ok2d.reshape(-1)
+            kept = ok & st2d.reshape(-1)
             docs = sidx.fetch_sweep_ids(spatial, s_starts, s_ends, budgets.sweep_budget)
-        else:
-            # (3) bulk contiguous fetch (k dynamic-slice streams)
-            rects, amps, docs, ok = sidx.fetch_sweeps(
-                spatial, s_starts, s_ends, budgets.sweep_budget
-            )
-            # (6a) per-toe-print partial geo scores (the FLOP hot spot)
-            part = tp_scorer(rects, jnp.where(ok, amps, 0.0), q_rects, q_amps)
-        # (5a) geo-score early termination (paper SConclusions future work):
-        # keep only the strongest max_candidates toe prints before the
-        # expensive sort + inverted-index probing. Fetched-but-weak toe
-        # prints cost their stream bytes only; probes drop ~k*budget/Cmax x.
-        total = part.shape[0]
-        Cmax = min(budgets.max_candidates, total)
-        if budgets.early_termination and Cmax < total:
-            val, sel = jax.lax.top_k(jnp.where(ok, part, -1.0), Cmax)
+            # select: partial top-C cut over the pruned survivors, plus the
+            # relative floor prune_eps × query_mass (a candidate below it
+            # contributes < prune_eps to the normalized geo score)
+            val, sel = jax.lax.top_k(jnp.where(kept, part, -1.0), Cmax)
             docs_c = docs[sel]
-            ok_c = ok[sel] & (val > 0)
+            ok_c = kept[sel] & (val > floor)
             part_c = jnp.where(ok_c, val, 0.0)
+            streamed_tp = jnp.sum(st2d.astype(jnp.int32))
+            blocks_total = blocks_active
+            blocks_skipped = blocks_active - blocks_scored
         else:
-            docs_c, ok_c, part_c = docs, ok, part
+            if fused:
+                # (3+6a) FUSED: the Pallas kernel streams each sweep through
+                # VMEM and scores it in-register (kernels/sweep_score); only
+                # the i32 doc-id column is fetched separately.
+                from repro.kernels.sweep_score.ops import sweep_score as _fused
+
+                part2d, ok2d = _fused(
+                    spatial.tp_rects,
+                    spatial.tp_amps,
+                    s_starts,
+                    s_ends,
+                    q_rects,
+                    q_amps,
+                    budgets.sweep_budget,
+                )
+                part = part2d.reshape(-1)
+                ok = ok2d.reshape(-1)
+                docs = sidx.fetch_sweep_ids(
+                    spatial, s_starts, s_ends, budgets.sweep_budget
+                )
+            else:
+                # (3) bulk contiguous fetch (k dynamic-slice streams)
+                rects, amps, docs, ok = sidx.fetch_sweeps(
+                    spatial, s_starts, s_ends, budgets.sweep_budget
+                )
+                # (6a) per-toe-print partial geo scores (the FLOP hot spot)
+                part = tp_scorer(rects, jnp.where(ok, amps, 0.0), q_rects, q_amps)
+            # (5a) geo-score early termination (paper §Conclusions future
+            # work): keep only the strongest max_candidates toe prints
+            # before the expensive sort + inverted-index probing.  Lossy,
+            # and the full stream + score cost has already been paid —
+            # the pruned path above avoids it up front.
+            if budgets.early_termination and Cmax < total:
+                val, sel = jax.lax.top_k(jnp.where(ok, part, -1.0), Cmax)
+                docs_c = docs[sel]
+                ok_c = ok[sel] & (val > 0)
+                part_c = jnp.where(ok_c, val, 0.0)
+            else:
+                docs_c, ok_c, part_c = docs, ok, part
+            streamed_tp = n_sweeps * budgets.sweep_budget
+            blocks_total = n_sweeps * ((budgets.sweep_budget + bs - 1) // bs)
+            blocks_skipped = jnp.int32(0)
         # (4) translate to docIDs, sort, aggregate per doc
         docs_s, g_tot, last = _sorted_run_sums(docs_c, part_c, ok_c)
         dvalid = last
@@ -309,22 +407,34 @@ def k_sweep(
         )
         score = jnp.where(keep, score, -jnp.inf)
         ids, vals = ranking.top_k(score, docs_u, budgets.top_k)
-        n_sweeps = jnp.sum((s_starts != INVALID).astype(jnp.int32))
         fetched = jnp.sum(ok.astype(jnp.int32))
+        n_selected = jnp.sum(ok_c.astype(jnp.int32))
         n_uniq = jnp.sum(dvalid.astype(jnp.int32))
         n_terms_real = jnp.sum((terms >= 0).astype(jnp.int32))
+        if budgets.prune or budgets.early_termination:
+            # probes the select stage avoided vs. probing every fetched doc
+            probes_saved = (_count_unique(docs, ok) - n_uniq) * n_terms_real
+        else:
+            probes_saved = jnp.int32(0)
         stats = {
             "candidates": fetched,
             "sweeps": n_sweeps,
-            # all bytes move in ≤k contiguous streams — the whole point
-            "bytes_spatial": n_sweeps * budgets.sweep_budget * TP_BYTES,
+            # bytes actually streamed: ≤k contiguous streams, minus any
+            # block-max-skipped blocks on the pruned path
+            "bytes_spatial": streamed_tp * TP_BYTES,
             "sweep_slack": n_sweeps * budgets.sweep_budget - fetched,
+            # toe prints surviving to candidate aggregation (≠ streamed
+            # when early termination or pruning drops candidates)
+            "bytes_scored": n_selected * TP_BYTES,
+            "blocks_total": blocks_total,
+            "blocks_skipped": blocks_skipped,
+            "probes_saved": probes_saved,
             "bytes_postings": n_uniq
             * jnp.int32(jnp.ceil(jnp.log2(jnp.maximum(text.n_postings, 2))))
             * POSTING_BYTES,
             "seeks": n_sweeps + n_terms_real,
             "n_probes": n_uniq * n_terms_real,
-            "bytes_seq": n_sweeps * budgets.sweep_budget * TP_BYTES,
+            "bytes_seq": streamed_tp * TP_BYTES,
             "bytes_random": n_uniq * n_terms_real * 32,
         }
         return ids, vals, stats

@@ -63,10 +63,15 @@ class ShardedGeoIndex:
     doc_amps: jax.Array  # f32[S, N, R]
     doc_mbr: jax.Array  # f32[S, N, 4]
     doc_mass: jax.Array  # f32[S, N]
+    # block-max metadata columns (pruned K-SWEEP; see core/spatial_index.py)
+    blk_mbr: jax.Array  # f32[S, NB, 4]
+    blk_max_amp: jax.Array  # f32[S, NB]
+    blk_max_mass: jax.Array  # f32[S, NB]
     pagerank: jax.Array  # f32[S, N]
     doc_offset: jax.Array  # i32[S]  local→global docID base
     grid: int = field(metadata=dict(static=True))
     n_terms: int = field(metadata=dict(static=True))
+    block_size: int = field(default=128, metadata=dict(static=True))
 
     @property
     def n_shards(self) -> int:
@@ -100,6 +105,7 @@ def shard_corpus_np(
     partition: str = "hash",
     grid: int = 64,
     m_intervals: int = 2,
+    block_size: int = 128,
 ) -> ShardedGeoIndex:
     """Partition a corpus and build one index per shard (host side)."""
     n_docs = len(doc_terms)
@@ -120,7 +126,7 @@ def shard_corpus_np(
         # single-index engine would
         text = rescale_impacts_to_global(text, idf_global)
         spatial = build_spatial_index_np(
-            doc_rects[sel], doc_amps[sel], grid, m_intervals
+            doc_rects[sel], doc_amps[sel], grid, m_intervals, block_size=block_size
         )
         shards.append((text, spatial, pagerank[sel], sel))
 
@@ -166,6 +172,15 @@ def shard_corpus_np(
     stacked["doc_amps"] = np.stack([padded(s[1].doc_amps, N_max, 0.0) for s in shards])
     stacked["doc_mbr"] = np.stack([padded(s[1].doc_mbr, N_max, 0.0) for s in shards])
     stacked["doc_mass"] = np.stack([padded(s[1].doc_mass, N_max, 0.0) for s in shards])
+    # block-max columns: zero-padded blocks have ub == 0 → always skipped
+    NB_max = max(s[1].blk_mbr.shape[0] for s in shards)
+    stacked["blk_mbr"] = np.stack([padded(s[1].blk_mbr, NB_max, 0.0) for s in shards])
+    stacked["blk_max_amp"] = np.stack(
+        [padded(s[1].blk_max_amp, NB_max, 0.0) for s in shards]
+    )
+    stacked["blk_max_mass"] = np.stack(
+        [padded(s[1].blk_max_mass, NB_max, 0.0) for s in shards]
+    )
     stacked["pagerank"] = np.stack([padded(s[2], N_max, 0.0) for s in shards])
     # local→global docID translation table
     gid = np.stack([padded(s[3].astype(np.int32), N_max, -1) for s in shards])
@@ -184,15 +199,19 @@ def shard_corpus_np(
         doc_amps=jnp.asarray(stacked["doc_amps"]),
         doc_mbr=jnp.asarray(stacked["doc_mbr"]),
         doc_mass=jnp.asarray(stacked["doc_mass"]),
+        blk_mbr=jnp.asarray(stacked["blk_mbr"]),
+        blk_max_amp=jnp.asarray(stacked["blk_max_amp"]),
+        blk_max_mass=jnp.asarray(stacked["blk_max_mass"]),
         pagerank=jnp.asarray(stacked["pagerank"]),
         doc_offset=jnp.asarray(gid),
         grid=grid,
         n_terms=n_terms,
+        block_size=shards[0][1].block_size,
     )
 
 
 def sharded_index_specs(
-    doc_axes: tuple[str, ...], grid: int, n_terms: int
+    doc_axes: tuple[str, ...], grid: int, n_terms: int, block_size: int = 128
 ) -> ShardedGeoIndex:
     """PartitionSpecs for every field (leading dim over the doc axes)."""
     lead = P(doc_axes)
@@ -201,8 +220,9 @@ def sharded_index_specs(
         tp_rects=lead, tp_amps=lead, tp_doc_ids=lead,
         tile_starts=lead, tile_ends=lead,
         doc_rects=lead, doc_amps=lead, doc_mbr=lead, doc_mass=lead,
+        blk_mbr=lead, blk_max_amp=lead, blk_max_mass=lead,
         pagerank=lead, doc_offset=lead,
-        grid=grid, n_terms=n_terms,
+        grid=grid, n_terms=n_terms, block_size=block_size,
     )
 
 
@@ -215,14 +235,22 @@ def make_serve_fn(
     algorithm: str = "k_sweep",
     grid: int = 64,
     n_terms: int = 0,
+    fused: bool = False,
+    block_size: int = 128,
 ):
     """Build the jit'd distributed serve step for a mesh.
 
     Returns ``serve(index: ShardedGeoIndex, query: QueryBatch)
     -> (ids i32[B, k], scores f32[B, k])`` with global docIDs.
+    ``fused=True`` routes k_sweep through the Pallas fused (and, with
+    ``budgets.prune``, block-max pruned) sweep kernel on every shard.
     """
     fn = alg.ALGORITHMS[algorithm]
-    idx_specs = sharded_index_specs(doc_axes, grid, n_terms)
+    if algorithm == "k_sweep" and fused:
+        from functools import partial as _partial
+
+        fn = _partial(fn, fused=True)
+    idx_specs = sharded_index_specs(doc_axes, grid, n_terms, block_size)
     q_spec = alg.QueryBatch(
         terms=P(query_axis), rects=P(query_axis), amps=P(query_axis)
     )
@@ -241,9 +269,13 @@ def make_serve_fn(
             tile_starts=idx.tile_starts[0], tile_ends=idx.tile_ends[0],
             doc_rects=idx.doc_rects[0], doc_amps=idx.doc_amps[0],
             doc_mbr=idx.doc_mbr[0], doc_mass=idx.doc_mass[0],
+            blk_mbr=idx.blk_mbr[0], blk_max_amp=idx.blk_max_amp[0],
+            blk_max_mass=idx.blk_max_mass[0],
             grid=idx.grid, n_docs=idx.doc_rects.shape[1],
+            block_size=idx.block_size,
         )
-        return GeoIndex(text=text, spatial=spatial, pagerank=idx.pagerank[0]), idx.doc_offset[0]
+        local = GeoIndex(text=text, spatial=spatial, pagerank=idx.pagerank[0])
+        return local, idx.doc_offset[0]
 
     def shard_body(idx: ShardedGeoIndex, query: alg.QueryBatch):
         local, gid_map = local_index(idx)

@@ -58,10 +58,12 @@ class GeoSearchEngine:
         budgets: alg.QueryBudgets | None = None,
         weights: ranking.RankWeights | None = None,
         compress: bool = False,
+        block_size: int = 128,
     ) -> "GeoSearchEngine":
         text = build_text_index_np(doc_terms, n_terms, n_bitmap_terms)
         spatial = build_spatial_index_np(
-            doc_rects, doc_amps, grid, m_intervals, compress=compress
+            doc_rects, doc_amps, grid, m_intervals, compress=compress,
+            block_size=block_size,
         )
         if compress:
             from repro.core.text_index import quantize_impacts
@@ -127,11 +129,16 @@ class GeoSearchEngine:
     # evaluation
     # ------------------------------------------------------------------
     def recall_at_k(
-        self, batch: alg.QueryBatch, algorithm: str = "k_sweep", k: int | None = None
+        self,
+        batch: alg.QueryBatch,
+        algorithm: str = "k_sweep",
+        k: int | None = None,
+        **kw,
     ) -> float:
-        """Recall@k of an algorithm vs the exact oracle."""
+        """Recall@k of an algorithm vs the exact oracle (``kw`` forwarded
+        to the algorithm, e.g. ``fused=True``)."""
         k = k or self.budgets.top_k
-        got = self.query(batch, algorithm)
+        got = self.query(batch, algorithm, **kw)
         want = self.oracle(batch, k)
         got_ids = np.asarray(got.ids)
         want_ids = np.asarray(want.ids)

@@ -17,6 +17,32 @@ Also holds the doc-major footprint mirror (``doc_rects``/``doc_amps``) used
 by the TEXT-FIRST / GEO-FIRST baselines (the "footprints sorted by docID on
 disk" file), and per-doc MBRs for the GEO-FIRST in-memory filter (the
 R*-tree stand-in: a memory-resident MBR table probed via the same tile grid).
+
+Block-max metadata (the SEAL-style pruning substrate)
+-----------------------------------------------------
+
+The Morton-ordered store is additionally cut into fixed ``block_size``-
+toe-print *blocks* (block ``b`` covers toe-print IDs ``[b*block_size,
+(b+1)*block_size)``), and three per-block columns are precomputed at build:
+
+* ``blk_mbr     f32[NB, 4]`` — MBR of the block's toe-print rects,
+* ``blk_max_amp f32[NB]``    — max amplitude in the block,
+* ``blk_max_mass f32[NB]``   — max per-toe-print ``amp * area``.
+
+Together they give a cheap, *safe* upper bound on any toe print's partial
+geo score against a query footprint::
+
+    score_t <= min(blk_max_amp * sum_q area(blk_mbr ∩ q) * amp_q,
+                   blk_max_mass * sum_q amp_q)
+
+which is what the pruned K-SWEEP path (``budgets.prune``; see
+``kernels/sweep_score``) tests against its running threshold θ to skip
+scoring whole sweep blocks.  Like the tile grid, the block columns are a
+small memory-resident auxiliary structure (``~T/block_size`` rows).  They
+are always stored in f32 — computed from the (possibly f16-compressed)
+store values actually scored at query time, so the bound stays safe under
+lossy compression.  ``block_size`` must divide the Pallas streaming tile
+(1024 toe prints) so a VMEM tile always covers whole blocks.
 """
 from __future__ import annotations
 
@@ -47,12 +73,21 @@ class SpatialIndex:
     doc_amps: jax.Array  # f32[N, R]
     doc_mbr: jax.Array  # f32[N, 4]
     doc_mass: jax.Array  # f32[N]  (Σ area·amp, for score upper bounds)
+    # --- block-max metadata over the toe-print store (pruned K-SWEEP) ---
+    blk_mbr: jax.Array  # f32[NB, 4]
+    blk_max_amp: jax.Array  # f32[NB]
+    blk_max_mass: jax.Array  # f32[NB]  (max amp·area per block)
     grid: int = field(metadata=dict(static=True))
     n_docs: int = field(metadata=dict(static=True))
+    block_size: int = field(default=128, metadata=dict(static=True))
 
     @property
     def n_toeprints(self) -> int:
         return self.tp_rects.shape[0]
+
+    @property
+    def n_blocks(self) -> int:
+        return self.blk_mbr.shape[0]
 
     @property
     def m_intervals(self) -> int:
@@ -65,6 +100,7 @@ def build_spatial_index_np(
     grid: int = 64,
     m_intervals: int = 2,
     compress: bool = False,  # f16 footprint data (paper: lossy compression)
+    block_size: int = 128,  # toe prints per block-max metadata block
 ) -> SpatialIndex:
     """Host-side index build (the paper's offline preprocessing)."""
     N, R, _ = doc_rects.shape
@@ -116,6 +152,13 @@ def build_spatial_index_np(
     mass = (area * doc_amps).sum(axis=1).astype(np.float32)
 
     ft = np.float16 if compress else np.float32
+    # block-max metadata is computed from the values the query path will
+    # actually score (post-cast), so the bounds stay safe under compression
+    blk_mbr, blk_max_amp, blk_max_mass = block_metadata_np(
+        rects.astype(ft).astype(np.float32),
+        amps.astype(ft).astype(np.float32),
+        block_size,
+    )
     return SpatialIndex(
         tp_rects=jnp.asarray(rects.astype(ft)),
         tp_amps=jnp.asarray(amps.astype(ft)),
@@ -126,8 +169,59 @@ def build_spatial_index_np(
         doc_amps=jnp.asarray(doc_amps.astype(ft)),
         doc_mbr=jnp.asarray(mbr.astype(ft)),
         doc_mass=jnp.asarray(mass.astype(ft)),
+        blk_mbr=jnp.asarray(blk_mbr),
+        blk_max_amp=jnp.asarray(blk_max_amp),
+        blk_max_mass=jnp.asarray(blk_max_mass),
         grid=grid,
         n_docs=N,
+        block_size=block_size,
+    )
+
+
+def block_metadata_np(
+    rects: np.ndarray,  # f32[T, 4] Morton-ordered toe-print rects
+    amps: np.ndarray,  # f32[T]
+    block_size: int,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-block (MBR, max amp, max amp·area) over the Morton-ordered store.
+
+    Block ``b`` covers toe prints ``[b*block_size, (b+1)*block_size)``; the
+    tail block may be short.  Returns arrays of length ``ceil(T/bs)`` (at
+    least 1; a degenerate all-empty block when the store is empty).
+    """
+    if block_size not in (128, 256, 512, 1024):
+        # must divide the kernel's 1024-toe-print VMEM tile into whole
+        # 128-lane rows, so a tile's per-block skip masks are row-aligned
+        raise ValueError(f"block_size {block_size} must be 128/256/512/1024")
+    T = rects.shape[0]
+    nb = max((T + block_size - 1) // block_size, 1)
+    pad = nb * block_size - T
+    # pad with empty rects / zero amps: they cannot raise any block max
+    big = np.float32(np.inf)
+    r = np.concatenate(
+        [rects, np.tile([big, big, -big, -big], (pad, 1)).astype(np.float32)]
+    ).reshape(nb, block_size, 4)
+    a = np.concatenate([amps, np.zeros((pad,), np.float32)]).reshape(nb, block_size)
+    mbr = np.stack(
+        [
+            r[:, :, 0].min(axis=1),
+            r[:, :, 1].min(axis=1),
+            r[:, :, 2].max(axis=1),
+            r[:, :, 3].max(axis=1),
+        ],
+        axis=1,
+    ).astype(np.float32)
+    # fully-padded blocks: make the MBR a plain empty rect (finite)
+    empty = ~np.isfinite(mbr).all(axis=1)
+    mbr[empty] = geometry.EMPTY_RECT
+    area = np.maximum(r[:, :, 2] - r[:, :, 0], 0) * np.maximum(
+        r[:, :, 3] - r[:, :, 1], 0
+    )
+    area = np.where(np.isfinite(area), area, 0.0)
+    return (
+        mbr,
+        a.max(axis=1).astype(np.float32),
+        (a * area).max(axis=1).astype(np.float32),
     )
 
 
@@ -213,7 +307,9 @@ def coalesce_k_sweeps(
     gap = gap.at[0].set(jnp.where(valid[0], 0, -1))
     # first valid interval must always open a sweep; force its gap huge
     first_valid = jnp.argmax(valid)  # 0 if none valid
-    gap = gap.at[first_valid].set(jnp.where(valid.any(), jnp.int32(2**30), gap[first_valid]))
+    gap = gap.at[first_valid].set(
+        jnp.where(valid.any(), jnp.int32(2**30), gap[first_valid])
+    )
     gap = jnp.where(jnp.arange(I) == first_valid, gap, jnp.where(gap > 0, gap, -1))
 
     # choose k cut positions = k largest positive gaps (first_valid included)
@@ -252,7 +348,9 @@ def split_sweeps_to_budget(
     """
     lens = jnp.where(sweep_starts != INVALID, sweep_ends - sweep_starts, 0)
     chunks = (lens + budget - 1) // budget  # per-run chunk count
-    cum = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(chunks).astype(jnp.int32)])
+    cum = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(chunks).astype(jnp.int32)]
+    )
     j = jnp.arange(k, dtype=jnp.int32)
     run = jnp.clip(jnp.searchsorted(cum, j, side="right") - 1, 0, k - 1)
     within = j - cum[run]
@@ -316,7 +414,9 @@ def fetch_sweep_ids(
         pos = start + jnp.arange(sweep_budget, dtype=jnp.int32)
         # re-window to [s, s+budget) convention used by the fused kernel
         shift = jnp.where(s == INVALID, 0, s) - start
-        idx = jnp.clip(shift + jnp.arange(sweep_budget, dtype=jnp.int32), 0, sweep_budget - 1)
+        idx = jnp.clip(
+            shift + jnp.arange(sweep_budget, dtype=jnp.int32), 0, sweep_budget - 1
+        )
         return d[idx]
 
     docs = jax.vmap(fetch_one)(sweep_starts, sweep_ends)
@@ -342,7 +442,9 @@ def tile_candidate_toeprints(
     starts, ends = gather_query_intervals(index, query_rects, max_tiles)
     s, e = coalesce_k_sweeps(starts, ends, max_runs)  # disjoint runs
     lens = jnp.where(s != INVALID, e - s, 0)
-    offs = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(lens).astype(jnp.int32)])
+    offs = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(lens).astype(jnp.int32)]
+    )
     j = jnp.arange(max_candidates, dtype=jnp.int32)
     run = jnp.clip(jnp.searchsorted(offs, j, side="right") - 1, 0, max_runs - 1)
     ok = j < offs[-1]

@@ -188,11 +188,14 @@ def probe_term(
     pos = _searchsorted_slice(index.postings, lo, n, doc_ids)
     found_id = index.postings[jnp.clip(pos, 0, index.n_postings - 1)]
     member = (pos < lo + n) & (found_id == doc_ids) & (n > 0)
-    impact = jnp.where(member, index.impacts[jnp.clip(pos, 0, index.n_postings - 1)].astype(jnp.float32), 0.0)
+    safe_pos = jnp.clip(pos, 0, index.n_postings - 1)
+    impact = jnp.where(member, index.impacts[safe_pos].astype(jnp.float32), 0.0)
     return member, impact
 
 
-def _searchsorted_slice(arr: jax.Array, lo: jax.Array, n: jax.Array, keys: jax.Array) -> jax.Array:
+def _searchsorted_slice(
+    arr: jax.Array, lo: jax.Array, n: jax.Array, keys: jax.Array
+) -> jax.Array:
     """Branchless binary search of ``keys`` in ``arr[lo:lo+n)`` (left).
 
     Works for traced (dynamic) lo/n: a fixed ``ceil(log2(P))+1``-step bisection.
@@ -249,7 +252,9 @@ def conjunction_candidates(
     cand = index.postings[jnp.clip(pos, 0, index.n_postings - 1)]
     cand = jnp.where(valid, cand, jnp.int32(2**31 - 1))
     score = jnp.where(
-        valid, index.impacts[jnp.clip(pos, 0, index.n_postings - 1)].astype(jnp.float32), 0.0
+        valid,
+        index.impacts[jnp.clip(pos, 0, index.n_postings - 1)].astype(jnp.float32),
+        0.0,
     )
 
     def probe_one(i, carry):

@@ -7,6 +7,7 @@ from repro.corpus.synth import (
     make_query_trace,
     make_uniform_trace,
     make_zipf_trace,
+    pad_trace_batch,
     stamp_arrivals,
 )
 
@@ -19,5 +20,6 @@ __all__ = [
     "make_query_trace",
     "make_uniform_trace",
     "make_zipf_trace",
+    "pad_trace_batch",
     "stamp_arrivals",
 ]

@@ -333,3 +333,30 @@ def make_uniform_trace(
         _one_query(rng, corpus, int(rng.integers(0, len(corpus.cities))), d_terms, q_rects)
         for _ in range(n_queries)
     ]
+
+
+def pad_trace_batch(
+    trace: list[TraceQuery],
+    max_terms: int = 8,
+    max_rects: int = 4,
+) -> QueryBatch:
+    """Pad a serving trace into one fixed-shape :class:`QueryBatch`.
+
+    The core-algorithm analogue of the serving batcher's padding — lets
+    benchmarks and tests drive ``GeoSearchEngine.query`` directly with the
+    same zipf/uniform traces the serving layer replays."""
+    B = len(trace)
+    terms = np.full((B, max_terms), -1, dtype=np.int32)
+    rects = np.tile(
+        np.array([1.0, 1.0, 0.0, 0.0], np.float32), (B, max_rects, 1)
+    )
+    amps = np.zeros((B, max_rects), dtype=np.float32)
+    for i, q in enumerate(trace):
+        t = q.terms[:max_terms]
+        terms[i, : len(t)] = t
+        r = q.rects[:max_rects]
+        rects[i, : len(r)] = r
+        amps[i, : len(r)] = q.amps[: len(r)]
+    return QueryBatch(
+        terms=jnp.asarray(terms), rects=jnp.asarray(rects), amps=jnp.asarray(amps)
+    )

@@ -4,7 +4,10 @@ geo_score      -- per-toe-print rectangle-intersection scoring (precise geo scor
 bitmap_filter  -- block-bitmap conjunction: u32 AND + SWAR popcount
 sweep_score    -- FUSED k-sweep fetch + scoring: scalar-prefetch-driven
                   BlockSpecs stream each sweep through VMEM and score
-                  in-register (the K-SWEEP hot path as one kernel)
+                  in-register (the K-SWEEP hot path as one kernel); the
+                  pruned variant adds block-max upper-bound skip tests
+                  against a running top-C threshold held in VMEM scratch
+                  (sweep -> score -> select, WAND-style)
 
 Each package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrappers),
 ref.py (pure-jnp oracle).

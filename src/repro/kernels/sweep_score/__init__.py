@@ -1,1 +1,4 @@
-from repro.kernels.sweep_score.ops import sweep_score  # noqa: F401
+from repro.kernels.sweep_score.ops import (  # noqa: F401
+    sweep_score,
+    sweep_score_pruned,
+)

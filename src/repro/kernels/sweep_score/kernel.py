@@ -1,19 +1,40 @@
-"""Pallas TPU kernel: fused k-sweep fetch + geo scoring.
+"""Pallas TPU kernels: fused k-sweep fetch + geo scoring (+ block-max prune).
 
 The K-SWEEP hot path does two HBM passes in the reference implementation:
 (1) ``dynamic_slice`` the toe-print store for each sweep, (2) score the
-fetched toe prints against the query footprint.  This kernel FUSES them:
-the grid walks ``(sweep, block-within-sweep)`` and the input BlockSpec
-index_map is driven by the **scalar-prefetched sweep starts** — each grid
-step DMAs the next VMEM tile of the Morton-ordered store directly from the
-sweep's dynamic offset and scores it in-register.  The fetched toe prints
-never round-trip through HBM.
+fetched toe prints against the query footprint.  ``sweep_score_planar``
+FUSES them: the grid walks ``(sweep, block-within-sweep)`` and the input
+BlockSpec index_map is driven by the **scalar-prefetched sweep starts** —
+each grid step DMAs the next VMEM tile of the Morton-ordered store directly
+from the sweep's dynamic offset and scores it in-register.  The fetched toe
+prints never round-trip through HBM.
+
+``sweep_score_pruned_planar`` extends the fused pipeline into
+sweep → score → *select*: each VMEM tile is divided into its metadata
+blocks (``core/spatial_index.py``; 128–1024 toe prints, i.e. whole lane
+rows), and every block's precomputed upper bound (block MBR ∩ query ×
+max amp) is tested against a running threshold θ — blocks that cannot
+beat θ are masked out of scoring and flagged skipped, WAND-style adaptive
+feedback.  θ is maintained in a persistent VMEM scratch buffer
+approximating the partial top-``max_candidates`` heap: the buffer holds
+``C`` slots, every tile folds its surviving masked scores elementwise-max
+into a cyclically-assigned slice, and θ = min(buffer).  Each slot is then
+the max of a disjoint subset of the candidate scores seen so far, so min
+over the ``C`` slots never exceeds the true C-th largest candidate score —
+pruning against it is *safe*: a skipped block cannot contain a top-C
+candidate.  The buffer is *seeded* with the select stage's score floor
+(``prune_eps`` × query mass), so blocks below the floor are skipped even
+before C candidates have streamed — provably without changing the final
+selection.  Per-block ``scored`` flags are emitted so the caller can
+count skipped blocks and charge only the bytes actually streamed.
 
 Layout mirrors kernels/geo_score: planar coordinate arrays with the lane
 dimension along toe prints ([rows, 128] f32 tiles), query rects unrolled
 from VMEM scalars.  Sweep starts are block-aligned by ops.py (rounded down
 to the 1024-element tile); masking against the true [start, end) range
-happens in ops.py where absolute positions are known.
+happens in ops.py for the unpruned kernel, and in-kernel (positions derived
+from the prefetched starts) for the pruned one, whose θ updates must see
+only genuine candidates.
 """
 from __future__ import annotations
 
@@ -30,7 +51,9 @@ TILE = BLOCK_ROWS * LANES  # toe prints per grid step
 Q_MAX = 8
 
 
-def _kernel(starts_ref, qr_ref, qa_ref, x0_ref, y0_ref, x1_ref, y1_ref, amp_ref, out_ref):
+def _kernel(
+    starts_ref, qr_ref, qa_ref, x0_ref, y0_ref, x1_ref, y1_ref, amp_ref, out_ref
+):
     # starts_ref is scalar-prefetch (used only by the index maps)
     x0 = x0_ref[...]
     y0 = y0_ref[...]
@@ -100,3 +123,160 @@ def sweep_score_planar(
         interpret=interpret,
     )(block_starts, q_rects, q_amps, x0, y0, x1, y1, amp)
     return out
+
+
+def _pruned_kernel(
+    starts_ref,  # scalar prefetch: i32[k] sweep starts in TILE units
+    bounds_ref,  # SMEM i32[k, 2]: exact [start, end) element offsets
+    floor_ref,  # SMEM f32[1]: select-stage score floor (prune_eps × mass)
+    ub_ref,  # SMEM f32[k, n_tiles*bpt]: per-metadata-block upper bounds
+    qr_ref,
+    qa_ref,
+    x0_ref,
+    y0_ref,
+    x1_ref,
+    y1_ref,
+    amp_ref,
+    out_ref,  # VMEM f32[BLOCK_ROWS, LANES] tile of the score output
+    scored_ref,  # SMEM i32[1, bpt] per-metadata-block scored flags
+    buf_ref,  # VMEM scratch f32[cb*BLOCK_ROWS, LANES]: partial top-C heap
+    *,
+    n_tiles: int,
+    cb: int,
+    bpt: int,  # metadata blocks per tile
+):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        # seed every slot with the selection floor: θ never drops below it,
+        # so blocks whose bound cannot clear the floor are skipped — their
+        # candidates would be dropped by the select stage regardless
+        buf_ref[...] = jnp.full_like(buf_ref, floor_ref[0])
+
+    theta = jnp.min(buf_ref[...])
+    rows_per_block = (BLOCK_ROWS + bpt - 1) // bpt  # bpt divides BLOCK_ROWS
+    rows = jax.lax.broadcasted_iota(jnp.int32, (BLOCK_ROWS, LANES), 0)
+    # per-row scored mask assembled from the bpt per-block decisions
+    mask = jnp.zeros((BLOCK_ROWS, LANES), dtype=bool)
+    any_scored = False
+    for b in range(bpt):  # static unroll over the tile's metadata blocks
+        sb = ub_ref[i, j * bpt + b] > theta
+        scored_ref[0, b] = sb.astype(jnp.int32)
+        mask = mask | (sb & (rows // rows_per_block == b))
+        any_scored = sb | any_scored
+
+    @pl.when(any_scored)
+    def _score():
+        x0 = x0_ref[...]
+        y0 = y0_ref[...]
+        x1 = x1_ref[...]
+        y1 = y1_ref[...]
+        acc = jnp.zeros_like(x0)
+        for q in range(Q_MAX):  # static unroll over query rects
+            qx0 = qr_ref[q, 0]
+            qy0 = qr_ref[q, 1]
+            qx1 = qr_ref[q, 2]
+            qy1 = qr_ref[q, 3]
+            w = jnp.maximum(jnp.minimum(x1, qx1) - jnp.maximum(x0, qx0), 0.0)
+            h = jnp.maximum(jnp.minimum(y1, qy1) - jnp.maximum(y0, qy0), 0.0)
+            acc = acc + (w * h) * qa_ref[q]
+        sc = jnp.where(mask, acc * amp_ref[...], 0.0)
+        out_ref[...] = sc
+        # absolute toe-print positions of this tile, for the validity mask —
+        # only genuine [start, end) candidates may feed the θ buffer
+        cols = jax.lax.broadcasted_iota(jnp.int32, sc.shape, 1)
+        pos = (starts_ref[i] + j) * TILE + rows * LANES + cols
+        okm = (pos >= bounds_ref[i, 0]) & (pos < bounds_ref[i, 1])
+        masked = jnp.where(okm, sc, 0.0)
+        # cyclic top-C approximation: fold this tile into its buffer slice
+        r0 = ((i * n_tiles + j) % cb) * BLOCK_ROWS
+        sl = buf_ref[pl.ds(r0, BLOCK_ROWS), :]
+        buf_ref[pl.ds(r0, BLOCK_ROWS), :] = jnp.maximum(sl, masked)
+
+    @pl.when(jnp.logical_not(any_scored))
+    def _skip():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_sweeps", "budget", "max_candidates", "bpt", "interpret"),
+)
+def sweep_score_pruned_planar(
+    block_starts: jax.Array,  # i32[k] sweep starts in TILE units
+    bounds: jax.Array,  # i32[k, 2] exact [start, end) element offsets
+    floor: jax.Array,  # f32[1] select-stage score floor
+    block_ub: jax.Array,  # f32[k, (budget // TILE) * bpt] per-block bounds
+    q_rects: jax.Array,  # f32[Q_MAX, 4]
+    q_amps: jax.Array,  # f32[Q_MAX]
+    x0: jax.Array,  # f32[rows, 128] — the ENTIRE toe-print store, planar
+    y0: jax.Array,
+    x1: jax.Array,
+    y1: jax.Array,
+    amp: jax.Array,
+    n_sweeps: int,
+    budget: int,  # toe prints fetched per sweep; multiple of TILE
+    max_candidates: int,  # C of the partial top-C threshold buffer
+    bpt: int,  # metadata blocks per TILE (1, 2, 4 or 8)
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Pruned fused sweep: (scores f32[k, budget//LANES, 128],
+    scored i32[k, (budget//TILE)*bpt] per-metadata-block flags).
+
+    Grid = (k, budget/TILE), walked sequentially, so the θ scratch carries
+    across all tiles of all sweeps of one query; under ``vmap`` the batch
+    axis becomes the outermost grid dimension and the (0, 0) re-init gives
+    every query a fresh threshold.
+    """
+    assert budget % TILE == 0
+    assert BLOCK_ROWS % bpt == 0
+    n_tiles = budget // TILE
+    # C rounded up to whole tiles: a larger buffer only lowers θ (safer)
+    cb = max(1, -(-max_candidates // TILE))
+
+    def in_map(i, j, starts):
+        return (starts[i] + j, 0)
+
+    plane = pl.BlockSpec((BLOCK_ROWS, LANES), in_map)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_sweeps, n_tiles),
+        in_specs=[
+            pl.BlockSpec(
+                (n_sweeps, 2), lambda i, j, s: (0, 0), memory_space=pltpu.SMEM
+            ),
+            pl.BlockSpec((1,), lambda i, j, s: (0,), memory_space=pltpu.SMEM),
+            pl.BlockSpec(
+                (n_sweeps, n_tiles * bpt),
+                lambda i, j, s: (0, 0),
+                memory_space=pltpu.SMEM,
+            ),
+            pl.BlockSpec((Q_MAX, 4), lambda i, j, s: (0, 0)),
+            pl.BlockSpec((Q_MAX,), lambda i, j, s: (0,)),
+            plane,
+            plane,
+            plane,
+            plane,
+            plane,
+        ],
+        out_specs=[
+            pl.BlockSpec((1, BLOCK_ROWS, LANES), lambda i, j, s: (i, j, 0)),
+            pl.BlockSpec((1, bpt), lambda i, j, s: (i, j), memory_space=pltpu.SMEM),
+        ],
+        scratch_shapes=[pltpu.VMEM((cb * BLOCK_ROWS, LANES), jnp.float32)],
+    )
+    kernel = functools.partial(_pruned_kernel, n_tiles=n_tiles, cb=cb, bpt=bpt)
+    scores, scored = pl.pallas_call(
+        lambda s_ref, bd, fl, ub, qr, qa, a, b, c, d, e, o, f, buf: kernel(
+            s_ref, bd, fl, ub, qr, qa, a, b, c, d, e, o.at[0], f, buf
+        ),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_sweeps, budget // LANES, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((n_sweeps, n_tiles * bpt), jnp.int32),
+        ],
+        interpret=interpret,
+    )(block_starts, bounds, floor, block_ub, q_rects, q_amps, x0, y0, x1, y1, amp)
+    return scores, scored

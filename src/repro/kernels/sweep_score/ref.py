@@ -1,5 +1,15 @@
-"""Pure-jnp oracle for the fused sweep_score kernel."""
+"""Pure-jnp oracles for the fused sweep_score kernels.
+
+``sweep_score_pruned_ref`` mirrors ``ops.sweep_score_pruned`` operation for
+operation — same TILE-aligned windows, same per-tile upper bounds, same
+cyclic partial top-C buffer and θ = min(buffer) skip rule, same sequential
+accumulation order over query rects — so the skip *decisions* agree with
+the Pallas kernel exactly, not just approximately.  It is both the kernel's
+test oracle and the scorer behind ``k_sweep(prune=True, fused=False)``.
+"""
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -35,3 +45,119 @@ def sweep_score_ref(
         return jnp.where(ok, sc, 0.0), ok
 
     return jax.vmap(one)(sweep_starts, sweep_ends)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("budget", "max_candidates", "block_size")
+)
+def sweep_score_pruned_ref(
+    tp_rects: jax.Array,  # [T, 4] toe-print store (any float dtype)
+    tp_amps: jax.Array,  # [T]
+    blk_mbr: jax.Array,  # f32[NB, 4] block-max metadata columns
+    blk_max_amp: jax.Array,  # f32[NB]
+    blk_max_mass: jax.Array,  # f32[NB]
+    sweep_starts: jax.Array,  # i32[k] element offsets (INVALID padded)
+    sweep_ends: jax.Array,  # i32[k]
+    q_rects: jax.Array,  # [Q, 4]
+    q_amps: jax.Array,  # [Q]
+    budget: int,
+    max_candidates: int,
+    block_size: int,
+    floor: jax.Array | float = 0.0,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Block-max pruned sweep oracle; same contract as
+    ``ops.sweep_score_pruned`` (scores, valid, streamed, blocks_scored,
+    blocks_active)."""
+    from repro.kernels.sweep_score.kernel import Q_MAX, TILE
+    from repro.kernels.sweep_score.ops import (
+        block_upper_bounds,
+        rewindow_outputs,
+        sweep_window_offsets,
+        window_block_bounds,
+    )
+
+    T = tp_rects.shape[0]
+    k = sweep_starts.shape[0]
+    Q = q_rects.shape[0]
+    bpt = TILE // block_size
+    pad_budget = (budget + TILE - 1) // TILE * TILE + TILE
+    n_tiles = pad_budget // TILE
+    cb = max(1, -(-max_candidates // TILE))
+
+    safe, aligned, block_starts, bounds = sweep_window_offsets(
+        sweep_starts, sweep_ends, T
+    )
+    ub_blocks = block_upper_bounds(blk_mbr, blk_max_amp, blk_max_mass, q_rects, q_amps)
+    win_ub, overlap = window_block_bounds(
+        ub_blocks, block_starts, bounds, n_tiles, block_size
+    )
+
+    # all window scores, kernel accumulation order (sequential over Q_MAX
+    # slots; missing slots contribute exactly 0), on the kernel's padded
+    # position lattice
+    pos = (
+        aligned[:, None, None]
+        + (jnp.arange(n_tiles, dtype=jnp.int32) * TILE)[None, :, None]
+        + jnp.arange(TILE, dtype=jnp.int32)[None, None, :]
+    )  # [k, n_tiles, TILE]
+    gp = jnp.clip(pos, 0, max(T - 1, 0))
+    in_store = pos < T
+    r = tp_rects[gp].astype(jnp.float32)
+    # out-of-store positions see the kernel's empty-rect/zero-amp padding
+    x0 = jnp.where(in_store, r[..., 0], 1.0)
+    y0 = jnp.where(in_store, r[..., 1], 1.0)
+    x1 = jnp.where(in_store, r[..., 2], 0.0)
+    y1 = jnp.where(in_store, r[..., 3], 0.0)
+    a = jnp.where(in_store, tp_amps[gp].astype(jnp.float32), 0.0)
+    qr = q_rects.astype(jnp.float32)
+    qa = q_amps.astype(jnp.float32)
+    acc = jnp.zeros_like(x0)
+    for q in range(Q_MAX):
+        if q >= Q:
+            break
+        w = jnp.maximum(jnp.minimum(x1, qr[q, 2]) - jnp.maximum(x0, qr[q, 0]), 0.0)
+        h = jnp.maximum(jnp.minimum(y1, qr[q, 3]) - jnp.maximum(y0, qr[q, 1]), 0.0)
+        acc = acc + (w * h) * qa[q]
+    sc_all = acc * a  # [k, n_tiles, TILE]
+    okm_all = (pos >= bounds[:, None, None, 0]) & (pos < bounds[:, None, None, 1])
+
+    # sequential tile walk: per-metadata-block skip decisions against the
+    # cyclic partial top-C threshold buffer (seeded with the select floor)
+    flat_ub = win_ub.reshape(k * n_tiles, bpt)
+    flat_sc = sc_all.reshape(k * n_tiles, bpt, block_size)
+    flat_ok = okm_all.reshape(k * n_tiles, bpt, block_size)
+    slots = jnp.arange(k * n_tiles, dtype=jnp.int32) % cb
+    theta0 = jnp.maximum(jnp.asarray(floor, jnp.float32).reshape(()), 0.0)
+
+    def step(buf, xs):
+        ub, sc, okm, slot = xs
+        theta = jnp.min(buf)
+        scored = ub > theta  # [bpt]
+        masked = jnp.where(scored[:, None] & okm, sc, 0.0).reshape(TILE)
+        buf = buf.at[slot].set(jnp.maximum(buf[slot], masked))
+        return buf, scored
+
+    _, scored = jax.lax.scan(
+        step,
+        jnp.full((cb, TILE), theta0, jnp.float32),
+        (flat_ub, flat_sc, flat_ok, slots),
+    )
+    scored = scored.reshape(k, n_tiles * bpt)
+
+    flat = jnp.where(
+        scored.reshape(k, n_tiles, bpt, 1),
+        sc_all.reshape(k, n_tiles, bpt, block_size),
+        0.0,
+    ).reshape(k, pad_budget)
+    scores, valid, streamed = rewindow_outputs(
+        flat, scored, safe, aligned, sweep_starts, sweep_ends, T, budget, block_size
+    )
+    blocks_scored = jnp.sum(scored & overlap)
+    blocks_active = jnp.sum(overlap)
+    return (
+        scores,
+        valid,
+        streamed,
+        blocks_scored.astype(jnp.int32),
+        blocks_active.astype(jnp.int32),
+    )

@@ -27,11 +27,19 @@ Replay discipline (``--arrival``):
   is queued or executing subscribe to the in-flight result instead of
   re-executing (reported in the ``coalesced`` counter).
 
+``--algo-prune`` switches the K-SWEEP engine to the block-max pruned
+sweep→score→select pipeline (``--fused`` runs it as the Pallas kernel;
+interpret mode on CPU): whole sweep blocks whose precomputed upper bound
+cannot beat the running top-C threshold are skipped before scoring, which
+shrinks the inverted-index probes and the streamed spatial bytes in the
+reported counters.
+
 Examples::
 
     python -m repro.launch.serve --trace zipf --cache landlord --batcher bucketed
     python -m repro.launch.serve --trace zipf --arrival poisson \\
         --rate-qps 200 --max-wait-ms 5 --slo-ms 50 --workers 4 --coalesce
+    python -m repro.launch.serve --trace zipf --algo-prune --fused --cache none
 """
 from __future__ import annotations
 
@@ -58,12 +66,15 @@ def build_stack(args, corpus):
     budgets = QueryBudgets(
         max_candidates=2048, max_tiles=256, k_sweeps=8,
         sweep_budget=max(args.n_docs // 8, 256), top_k=args.top_k,
+        prune=args.algo_prune,
     )
     kw = {}
     if args.use_pallas and args.algorithm == "k_sweep":
         from repro.kernels.geo_score.ops import geo_score_toeprints
 
         kw = {"tp_scorer": geo_score_toeprints}
+    if args.fused and args.algorithm == "k_sweep":
+        kw["fused"] = True
     if args.shards > 1:
         executor = ShardedExecutor.build(
             corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
@@ -136,6 +147,14 @@ def main() -> None:
                     choices=["text_first", "geo_first", "k_sweep"])
     ap.add_argument("--use-pallas", action="store_true",
                     help="score with the Pallas geo_score kernel (interpret on CPU)")
+    ap.add_argument("--algo-prune", action="store_true",
+                    help="block-max pruned K-SWEEP: skip sweep blocks whose "
+                         "upper bound cannot beat the running top-C threshold "
+                         "(fewer index probes + bytes streamed)")
+    ap.add_argument("--fused", action="store_true",
+                    help="run K-SWEEP through the fused Pallas sweep kernel "
+                         "(with --algo-prune: in-kernel sweep→score→select; "
+                         "interpret mode on CPU)")
     ap.add_argument("--no-recall", action="store_true",
                     help="skip the oracle recall check (slow on big corpora)")
     ap.add_argument("--seed", type=int, default=0)
@@ -170,7 +189,7 @@ def main() -> None:
         f"rate_qps={args.rate_qps:g} max_wait_ms={args.max_wait_ms:g} "
         f"cache={args.cache} batcher={args.batcher} shards={args.shards} "
         f"workers={args.workers} coalesce={args.coalesce} "
-        f"algo={args.algorithm} …"
+        f"algo={args.algorithm} prune={args.algo_prune} fused={args.fused} …"
     )
     report = server.run_trace(trace, arrival=args.arrival, slo_ms=args.slo_ms)
     print(report.summary())
@@ -188,7 +207,8 @@ def main() -> None:
         )
         probe = make_query_trace(corpus, n_queries=min(64, args.queries),
                                  seed=args.seed + 2)
-        rec = eng.recall_at_k(probe, args.algorithm)
+        kw = {"fused": True} if args.fused and args.algorithm == "k_sweep" else {}
+        rec = eng.recall_at_k(probe, args.algorithm, **kw)
         print(f"recall@{budgets.top_k} vs oracle = {rec:.3f}")
 
 

@@ -433,6 +433,9 @@ def build_geoweb_cell(spec: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
         return _sds(shape_, dtype, mesh, logical)
 
     ft = jnp.float16 if getattr(cfg, "compress", False) else jnp.float32
+    # block-max metadata columns (always f32; see core/spatial_index.py)
+    block_size = getattr(cfg, "block_size", 128)
+    NB = max((Tt + block_size - 1) // block_size, 1)
     lead = ("docs",)  # leading shard dim over doc axes
     idx = ShardedGeoIndex(
         postings=sh((S, Pp), jnp.int32, lead + (None,)),
@@ -447,10 +450,14 @@ def build_geoweb_cell(spec: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
         doc_amps=sh((S, N, R), ft, lead + (None, None)),
         doc_mbr=sh((S, N, 4), ft, lead + (None, None)),
         doc_mass=sh((S, N), ft, lead + (None,)),
+        blk_mbr=sh((S, NB, 4), jnp.float32, lead + (None, None)),
+        blk_max_amp=sh((S, NB), jnp.float32, lead + (None,)),
+        blk_max_mass=sh((S, NB), jnp.float32, lead + (None,)),
         pagerank=sh((S, N), jnp.float32, lead + (None,)),
         doc_offset=sh((S, N), jnp.int32, lead + (None,)),
         grid=cfg.grid,
         n_terms=M,
+        block_size=block_size,
     )
     B, d, Qr = cfg.query_batch, cfg.d_terms, cfg.q_rects
     query = alg.QueryBatch(

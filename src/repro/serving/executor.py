@@ -171,6 +171,7 @@ class MeshExecutor:
         budgets: alg.QueryBudgets | None = None,
         algorithm: str = "k_sweep",
         n_rect_slots: int = 4,
+        block_size: int = 128,
     ):
         self.mesh = mesh
         self._serve = serve_fn
@@ -179,6 +180,7 @@ class MeshExecutor:
         self.budgets = budgets or alg.QueryBudgets(top_k=top_k)
         self.algorithm = algorithm
         self.n_rect_slots = n_rect_slots  # doc footprint slots (R)
+        self.block_size = block_size  # block-max metadata granularity
 
     @staticmethod
     def build(
@@ -193,6 +195,7 @@ class MeshExecutor:
         budgets: alg.QueryBudgets | None = None,
         weights: ranking.RankWeights | None = None,
         algorithm: str = "k_sweep",
+        fused: bool = False,
     ) -> "MeshExecutor":
         from repro.core.distributed import make_serve_fn, shard_corpus_np
         from repro.sharding.specs import DEFAULT_RULES
@@ -217,11 +220,13 @@ class MeshExecutor:
             mesh, budgets, weights or ranking.RankWeights(),
             doc_axes=doc_axes, query_axis=query_axis,
             algorithm=algorithm, grid=grid, n_terms=n_terms,
+            fused=fused, block_size=sharded.block_size,
         )
         return MeshExecutor(
             mesh, serve, sharded, budgets.top_k,
             budgets=budgets, algorithm=algorithm,
             n_rect_slots=doc_rects.shape[1],
+            block_size=sharded.block_size,
         )
 
     @property
@@ -255,18 +260,30 @@ class MeshExecutor:
         if self.algorithm == "k_sweep":
             sweeps = np.full(B, float(bud.k_sweeps))
             fetched = sweeps * bud.sweep_budget
-            # early termination caps the candidate set before text probing;
-            # without it every fetched toe print may survive to a probe
+            # early termination / pruning cap the candidate set before text
+            # probing; without them every fetched toe print may probe
+            select = bud.early_termination or bud.prune
             n_uniq = (
                 np.minimum(fetched, float(bud.max_candidates))
-                if bud.early_termination
+                if select
                 else fetched
             )
+            # streamed-block capacity: whole TILE-aligned windows (+1 tile
+            # of alignment slop on the pruned/fused path), in metadata-block
+            # units; data-dependent skips are modeled as zero savings
+            from repro.kernels.sweep_score.kernel import TILE as tile
+
+            pad_budget = -(-bud.sweep_budget // tile) * tile + tile
+            blocks_total = float(bud.k_sweeps * (pad_budget // self.block_size))
             stats = {
                 "candidates": fetched,
                 "sweeps": sweeps,
                 "bytes_spatial": fetched * alg.TP_BYTES,
                 "sweep_slack": np.zeros(B),
+                "bytes_scored": n_uniq * alg.TP_BYTES,
+                "blocks_total": np.full(B, blocks_total),
+                "blocks_skipped": np.zeros(B),
+                "probes_saved": np.zeros(B),
                 "bytes_postings": n_uniq * logp * alg.POSTING_BYTES,
                 "seeks": sweeps + n_terms_real,
                 "n_probes": n_uniq * n_terms_real,

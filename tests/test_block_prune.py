@@ -1,0 +1,414 @@
+"""Block-max pruned K-SWEEP: kernel/oracle equality, safety vs the
+unpruned reference path, recall floors across the prune × fused grid,
+streamed-vs-scored byte accounting, and the serving-layer threading."""
+from dataclasses import replace
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import GeoSearchEngine, QueryBudgets
+from repro.core.spatial_index import block_metadata_np
+from repro.corpus import make_corpus, make_uniform_trace, make_zipf_trace, pad_trace_batch
+from repro.kernels.sweep_score.ops import sweep_score, sweep_score_pruned
+from repro.kernels.sweep_score.ref import sweep_score_pruned_ref
+
+INVALID = 2**31 - 1
+
+
+def _store(rng, T):
+    lo = rng.uniform(0, 0.9, (T, 2)).astype(np.float32)
+    wh = rng.uniform(0.01, 0.08, (T, 2)).astype(np.float32)
+    rects = np.concatenate([lo, lo + wh], axis=1).astype(np.float32)
+    amps = rng.uniform(0, 1, T).astype(np.float32)
+    return rects, amps
+
+
+def _sweeps(rng, T, budget, k):
+    ss = np.sort(rng.integers(0, T, k)).astype(np.int32)
+    ee = np.minimum(ss + rng.integers(1, budget + 500, k), T).astype(np.int32)
+    if k > 1:
+        ss[k // 2] = INVALID
+        ee[k // 2] = INVALID
+    return ss, ee
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("T,budget,k,C,bs,floor", [
+    (1024, 1024, 1, 256, 128, 0.0),
+    (5000, 2048, 4, 1024, 256, 0.0),
+    (5000, 2048, 4, 1024, 128, 0.05),
+    (33000, 1024, 8, 4096, 512, 0.0),
+    (2048, 2048, 3, 512, 1024, 0.01),
+])
+def test_pruned_kernel_matches_ref(T, budget, k, C, bs, floor):
+    """The Pallas pruned kernel and the jnp oracle agree on scores AND on
+    every per-block skip decision (same θ trajectory)."""
+    rng = np.random.default_rng(T + budget + k + bs)
+    rects, amps = _store(rng, T)
+    bm, ba, bmass = block_metadata_np(rects, amps, bs)
+    qr = jnp.asarray(
+        np.array([[0.2, 0.2, 0.6, 0.6], [0.5, 0.5, 0.9, 0.9]], np.float32)
+    )
+    qa = jnp.ones((2,))
+    ss, ee = _sweeps(rng, T, budget, k)
+    args = (
+        jnp.asarray(rects), jnp.asarray(amps),
+        jnp.asarray(bm), jnp.asarray(ba), jnp.asarray(bmass),
+        jnp.asarray(ss), jnp.asarray(ee), qr, qa,
+    )
+    got = sweep_score_pruned(*args, budget, C, bs, floor)
+    want = sweep_score_pruned_ref(*args, budget, C, bs, floor)
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))  # valid
+    np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(want[2]))  # streamed
+    assert int(got[3]) == int(want[3]) and int(got[4]) == int(want[4])
+    np.testing.assert_allclose(
+        np.asarray(got[0]), np.asarray(want[0]), rtol=1e-6, atol=1e-7
+    )
+
+
+def test_pruned_kernel_safety_property():
+    """θ never overshoots: every candidate the exact top-C_eff selection
+    would keep survives pruning with its unpruned score."""
+    rng = np.random.default_rng(42)
+    T, budget, k, C, bs = 8000, 2048, 6, 512, 128
+    rects, amps = _store(rng, T)
+    bm, ba, bmass = block_metadata_np(rects, amps, bs)
+    qr = jnp.asarray(np.array([[0.3, 0.3, 0.7, 0.7]], np.float32))
+    qa = jnp.ones((1,))
+    for trial in range(5):
+        ss, ee = _sweeps(np.random.default_rng(trial), T, budget, k)
+        ps, pv, streamed, b_scored, b_active = sweep_score_pruned(
+            jnp.asarray(rects), jnp.asarray(amps),
+            jnp.asarray(bm), jnp.asarray(ba), jnp.asarray(bmass),
+            jnp.asarray(ss), jnp.asarray(ee), qr, qa, budget, C, bs,
+        )
+        us, uv = sweep_score(
+            jnp.asarray(rects), jnp.asarray(amps),
+            jnp.asarray(ss), jnp.asarray(ee), qr, qa, budget,
+        )
+        us, uv = np.asarray(us).ravel(), np.asarray(uv).ravel()
+        kept = (np.asarray(pv) & np.asarray(streamed)).ravel()
+        c_eff = max(1, -(-C // 1024)) * 1024
+        pos_scores = np.sort(us[uv & (us > 0)])[::-1]
+        theta_cap = pos_scores[c_eff - 1] if len(pos_scores) >= c_eff else 0.0
+        must_keep = uv & (us > theta_cap)
+        assert (kept[must_keep]).all(), "pruning dropped a top-C candidate"
+        # kept scores are the unpruned scores
+        np.testing.assert_allclose(
+            np.asarray(ps).ravel()[kept], us[kept], rtol=1e-6, atol=1e-7
+        )
+        assert int(b_scored) <= int(b_active)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end safety + recall (prune × fused grid)
+# ---------------------------------------------------------------------------
+
+def _engine(corpus, C, sweep_budget, grid=32, **bud_kw):
+    budgets = QueryBudgets(
+        max_candidates=C, max_tiles=256, k_sweeps=8,
+        sweep_budget=sweep_budget, top_k=10, **bud_kw,
+    )
+    return GeoSearchEngine.build(
+        corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
+        pagerank=corpus.pagerank, grid=grid, budgets=budgets,
+    )
+
+
+def _with_budgets(eng, **kw):
+    """Fresh engine sharing the built index (its own compiled-fn cache)."""
+    return GeoSearchEngine(
+        index=eng.index, budgets=replace(eng.budgets, **kw), weights=eng.weights
+    )
+
+
+def _recall_vs(a, b):
+    ai, bi = np.asarray(a.ids), np.asarray(b.ids)
+    va = ai >= 0
+    found = (
+        (ai[:, :, None] == bi[:, None, :]) & va[:, :, None] & (bi[:, None, :] >= 0)
+    ).any(-1)
+    return found.sum() / max(va.sum(), 1)
+
+
+@pytest.mark.parametrize("trace_kind", ["zipf", "uniform"])
+def test_prune_safety_same_topk_as_unpruned(trace_kind):
+    """With exact block bounds and the candidate buffer strictly larger
+    than the whole window (C > k·budget, so θ provably stays 0 and only
+    zero-bound blocks are skipped), pruned K-SWEEP returns the same top-k
+    as the unpruned path on seeded zipf + uniform corpora.
+
+    One allowed divergence: the unpruned path's run-sum aggregation is a
+    cumsum-prefix difference, and XLA's associative scan leaves ~1e-10
+    residue — a doc with exactly zero footprint overlap can leak through
+    the require-geo filter on text score alone.  The pruned path drops
+    such docs up front (the paper's semantics demand overlap > 0), so any
+    doc the pruned top-k is "missing" must have exactly zero true overlap
+    with the query footprint."""
+    from repro.core import footprint as fp
+
+    corpus = make_corpus(n_docs=900, n_terms=300, seed=17)
+    if trace_kind == "zipf":
+        trace = pad_trace_batch(
+            make_zipf_trace(corpus, n_queries=48, pool_size=32, seed=18)
+        )
+    else:
+        trace = pad_trace_batch(make_uniform_trace(corpus, n_queries=48, seed=18))
+    eng = _engine(corpus, C=2 * 8 * 256, sweep_budget=256)
+    un = eng.query(trace, "k_sweep")
+    eng_p = _with_budgets(eng, prune=True)
+    pr = eng_p.query(trace, "k_sweep")
+    prf = eng_p.query(trace, "k_sweep", fused=True)
+    np.testing.assert_array_equal(np.asarray(pr.ids), np.asarray(prf.ids))
+
+    un_ids, pr_ids = np.asarray(un.ids), np.asarray(pr.ids)
+    un_sc, pr_sc = np.asarray(un.scores), np.asarray(pr.scores)
+    spatial = eng.index.spatial
+    for q in range(un_ids.shape[0]):
+        for rank, d in enumerate(un_ids[q]):
+            if d < 0 or d in pr_ids[q]:
+                continue
+            # missing from the pruned top-k: must be a zero-overlap doc
+            # that leaked through require-geo on cumsum residue
+            g = float(
+                fp.geo_score(
+                    spatial.doc_rects[d], spatial.doc_amps[d],
+                    trace.rects[q], trace.amps[q],
+                )
+            )
+            assert g == 0.0, f"query {q}: pruned lost doc {d} with overlap {g}"
+        # docs present in both rank with (allclose-)identical scores
+        common = [
+            (i, int(np.nonzero(pr_ids[q] == d)[0][0]))
+            for i, d in enumerate(un_ids[q])
+            if d >= 0 and d in pr_ids[q]
+        ]
+        for i, j in common:
+            np.testing.assert_allclose(un_sc[q, i], pr_sc[q, j], rtol=1e-5)
+
+
+@pytest.mark.parametrize("prune", [False, True])
+@pytest.mark.parametrize("fused", [False, True])
+def test_prune_recall_floor_vs_oracle(prune, fused):
+    """recall@10 ≥ 0.95 vs the exact oracle across the prune × fused grid."""
+    corpus = make_corpus(n_docs=600, n_terms=150, seed=3)
+    eng = _engine(corpus, C=1024, sweep_budget=512, prune=prune)
+    trace = pad_trace_batch(make_zipf_trace(corpus, n_queries=32, pool_size=32, seed=4))
+    rec = eng.recall_at_k(trace, "k_sweep", fused=fused)
+    assert rec >= 0.95, f"prune={prune} fused={fused} recall {rec}"
+
+
+def test_prune_budget_degradation_graceful():
+    """Tiny budgets with pruning must not crash or return invalid docs."""
+    corpus = make_corpus(n_docs=300, n_terms=80, seed=5)
+    budgets = QueryBudgets(
+        max_candidates=16, max_tiles=8, k_sweeps=1, sweep_budget=32, top_k=5,
+        prune=True, prune_eps=1e-3,
+    )
+    eng = GeoSearchEngine.build(
+        corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
+        pagerank=corpus.pagerank, grid=16, budgets=budgets,
+    )
+    trace = pad_trace_batch(make_zipf_trace(corpus, n_queries=8, pool_size=8, seed=2))
+    for fused in [False, True]:
+        ids = np.asarray(eng.query(trace, "k_sweep", fused=fused).ids)
+        assert ((ids >= -1) & (ids < 300)).all()
+
+
+# ---------------------------------------------------------------------------
+# stats: streamed vs scored accounting, probe savings (acceptance numbers)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def smoke_engine_and_trace():
+    corpus = make_corpus(n_docs=1200, n_terms=400, seed=9)
+    trace = pad_trace_batch(make_zipf_trace(corpus, n_queries=64, pool_size=48, seed=10))
+    return corpus, trace
+
+
+def test_pruned_stats_reduce_probes_and_bytes(smoke_engine_and_trace):
+    """The acceptance bar: on the zipf smoke trace, pruning cuts n_probes
+    and bytes_postings ≥ 2× at recall@10 ≥ 0.95 vs the unpruned path, with
+    blocks actually skipped and bytes_spatial counting only streamed blocks."""
+    corpus, trace = smoke_engine_and_trace
+    eng = _engine(corpus, C=1024, sweep_budget=256)
+    un = eng.query(trace, "k_sweep")
+    pr = _with_budgets(eng, prune=True).query(trace, "k_sweep")
+
+    def tot(r, k):
+        return float(np.asarray(r.stats[k], np.float64).sum())
+
+    assert _recall_vs(un, pr) >= 0.95
+    assert tot(un, "n_probes") >= 2.0 * tot(pr, "n_probes")
+    assert tot(un, "bytes_postings") >= 2.0 * tot(pr, "bytes_postings")
+    assert tot(pr, "blocks_skipped") > 0
+    assert tot(pr, "bytes_spatial") < tot(un, "bytes_spatial")
+    assert tot(pr, "probes_saved") > 0
+    # unpruned path reports no skips and charges the full streams
+    assert tot(un, "blocks_skipped") == 0
+    assert tot(un, "probes_saved") == 0
+
+
+def test_early_termination_reports_streamed_vs_scored(smoke_engine_and_trace):
+    """The lossy early-termination path still streams the full sweep budget
+    (bytes_spatial unchanged) but now reports the scored subset and the
+    probes it saved separately."""
+    corpus, trace = smoke_engine_and_trace
+    eng = _engine(corpus, C=256, sweep_budget=256)
+    un = eng.query(trace, "k_sweep")
+    et = _with_budgets(eng, early_termination=True).query(trace, "k_sweep")
+
+    def tot(r, k):
+        return float(np.asarray(r.stats[k], np.float64).sum())
+
+    # ET pays the full stream...
+    assert tot(et, "bytes_spatial") == tot(un, "bytes_spatial")
+    # ...but aggregates (and probes) only the selected subset
+    assert tot(et, "bytes_scored") < tot(un, "bytes_scored")
+    assert tot(et, "bytes_scored") < tot(et, "bytes_spatial")
+    assert tot(et, "probes_saved") > 0
+    assert tot(et, "n_probes") < tot(un, "n_probes")
+    # the unpruned reference aggregates everything it fetched
+    assert tot(un, "bytes_scored") == float(
+        np.asarray(un.stats["candidates"], np.float64).sum() * 24
+    )
+
+
+def test_prune_eps_floor_monotone(smoke_engine_and_trace):
+    """Raising prune_eps only increases savings (probes monotone down)."""
+    corpus, trace = smoke_engine_and_trace
+    probes = []
+    for eps in [0.0, 3e-3, 3e-2]:
+        eng = _engine(corpus, C=1024, sweep_budget=256, prune=True, prune_eps=eps)
+        res = eng.query(trace, "k_sweep")
+        probes.append(float(np.asarray(res.stats["n_probes"], np.float64).sum()))
+    assert probes[0] >= probes[1] >= probes[2]
+
+
+# ---------------------------------------------------------------------------
+# serving-layer threading
+# ---------------------------------------------------------------------------
+
+def test_sharded_executor_prune_matches_single():
+    """A pruned ShardedExecutor(S=1, hash) reproduces the single-device
+    pruned engine and reports the new counter keys."""
+    from repro.serving import ShardedExecutor, SingleDeviceExecutor
+
+    corpus = make_corpus(n_docs=400, n_terms=100, seed=11)
+    budgets = QueryBudgets(
+        max_candidates=512, max_tiles=64, k_sweeps=4, sweep_budget=128,
+        top_k=5, prune=True,
+    )
+    eng = GeoSearchEngine.build(
+        corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
+        pagerank=corpus.pagerank, grid=16, budgets=budgets,
+    )
+    single = SingleDeviceExecutor(eng, fused=True)
+    sharded = ShardedExecutor.build(
+        corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
+        pagerank=corpus.pagerank, n_shards=1, partition="hash",
+        grid=16, budgets=budgets, fused=True,
+    )
+    trace = pad_trace_batch(make_zipf_trace(corpus, n_queries=16, pool_size=8, seed=12))
+    a = single.run(trace)
+    b = sharded.run(trace)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    for key in ["blocks_skipped", "blocks_total", "probes_saved", "bytes_scored"]:
+        np.testing.assert_allclose(
+            float(np.asarray(a.stats[key], np.float64).sum()),
+            float(np.asarray(b.stats[key], np.float64).sum()),
+            rtol=1e-6, err_msg=key,
+        )
+
+
+def test_mesh_executor_prune_fused_matches_single():
+    """The SPMD mesh executor runs the pruned fused kernel inside its
+    shard_map step and agrees with the single-device engine; its host-side
+    capacity model keeps the same stat keys."""
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.serving import MeshExecutor, SingleDeviceExecutor
+
+    corpus = make_corpus(n_docs=256, n_terms=64, seed=11)
+    budgets = QueryBudgets(
+        max_candidates=256, max_tiles=64, k_sweeps=4, sweep_budget=128,
+        top_k=5, prune=True,
+    )
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    meshx = MeshExecutor.build(
+        corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
+        pagerank=corpus.pagerank, mesh=mesh, partition="hash", grid=16,
+        budgets=budgets, fused=True,
+    )
+    eng = GeoSearchEngine.build(
+        corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
+        pagerank=corpus.pagerank, grid=16, budgets=budgets,
+    )
+    single = SingleDeviceExecutor(eng, fused=True)
+    batch = pad_trace_batch(make_zipf_trace(corpus, n_queries=8, pool_size=8, seed=12))
+    a = single.run(batch)
+    b = meshx.run(batch)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    assert set(b.stats) == set(a.stats)
+    # the capacity model upper-bounds every measured counter except the
+    # data-dependent savings it deliberately models as zero
+    for key in a.stats:
+        if key in ("sweep_slack", "blocks_skipped", "probes_saved"):
+            continue
+        assert float(np.asarray(b.stats[key], np.float64).sum()) >= float(
+            np.asarray(a.stats[key], np.float64).sum()
+        ) * (1 - 1e-9), key
+
+
+# ---------------------------------------------------------------------------
+# optional hypothesis fuzz
+# ---------------------------------------------------------------------------
+
+def test_pruned_safety_fuzz():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        seed=st.integers(0, 2**16),
+        bs=st.sampled_from([128, 256, 512]),
+        C=st.sampled_from([128, 700, 2048]),
+        floor=st.floats(0.0, 0.05),
+    )
+    def prop(seed, bs, C, floor):
+        rng = np.random.default_rng(seed)
+        T = int(rng.integers(1200, 6000))
+        budget = int(rng.choice([512, 1024, 2000]))
+        k = int(rng.integers(1, 5))
+        rects, amps = _store(rng, T)
+        bm, ba, bmass = block_metadata_np(rects, amps, bs)
+        ss, ee = _sweeps(rng, T, budget, k)
+        qr = jnp.asarray(rng.uniform(0, 0.7, (2, 2)).astype(np.float32))
+        qr = jnp.concatenate([qr, qr + 0.3], axis=1)
+        qa = jnp.ones((2,))
+        ps, pv, streamed, _, _ = sweep_score_pruned(
+            jnp.asarray(rects), jnp.asarray(amps),
+            jnp.asarray(bm), jnp.asarray(ba), jnp.asarray(bmass),
+            jnp.asarray(ss), jnp.asarray(ee), qr, qa, budget, C, bs, floor,
+        )
+        us, uv = sweep_score(
+            jnp.asarray(rects), jnp.asarray(amps),
+            jnp.asarray(ss), jnp.asarray(ee), qr, qa, budget,
+        )
+        us, uv = np.asarray(us).ravel(), np.asarray(uv).ravel()
+        kept = (np.asarray(pv) & np.asarray(streamed)).ravel()
+        c_eff = max(1, -(-C // 1024)) * 1024
+        pos = np.sort(us[uv & (us > 0)])[::-1]
+        theta_cap = max(pos[c_eff - 1] if len(pos) >= c_eff else 0.0, floor)
+        must_keep = uv & (us > theta_cap)
+        assert kept[must_keep].all()
+        np.testing.assert_allclose(
+            np.asarray(ps).ravel()[kept], us[kept], rtol=1e-6, atol=1e-7
+        )
+
+    prop()
