@@ -15,6 +15,13 @@ Prints ``name,us_per_call,derived`` CSV rows:
                      on a padded zipf trace: recall, n_probes,
                      postings/spatial bytes, blocks skipped; the
                      ``_gain`` row prints the ratios.
+* ``planner_mixture_{auto,text_first,geo_first,ksweep}`` — the cost-based
+                     per-query planner (``core/planner.py``) against every
+                     fixed algorithm on the bimodal term-selectivity ×
+                     footprint-area mixture trace; the ``_gain`` row prints
+                     the probes+posting-bytes ratio vs the best fixed
+                     algorithm and the per-plan mix (acceptance: ≥ 1.3× at
+                     recall@10 ≥ 0.95).
 * ``fig_k_sweep``  — sensitivity of fetched volume to k (paper §IV.C).
 * ``fig_scale``    — throughput vs corpus size (the scalability axis the
                      paper's abstract claims).
@@ -164,12 +171,9 @@ def bench_block_prune(quick: bool) -> None:
         return float(np.asarray(r.stats[key], np.float64).mean())
 
     # recall of the pruned top-k against the unpruned top-k
-    ai, bi = np.asarray(un.ids), np.asarray(pr.ids)
-    va = ai >= 0
-    found = (
-        (ai[:, :, None] == bi[:, None, :]) & va[:, :, None] & (bi[:, None, :] >= 0)
-    ).any(-1)
-    rec_vs_un = float(found.sum() / max(va.sum(), 1))
+    from repro.core.ranking import topk_recall_np
+
+    rec_vs_un = topk_recall_np(un.ids, pr.ids)
     _row(
         "core_ksweep_unpruned", dt_u / B * 1e6,
         f"recall@10={rec_u:.3f};n_probes={mean(un, 'n_probes'):.0f};"
@@ -199,6 +203,63 @@ def bench_block_prune(quick: bool) -> None:
         f"{mean(un, 'bytes_postings') / max(mean(pr, 'bytes_postings'), 1):.2f};"
         f"bytes_spatial_x="
         f"{mean(un, 'bytes_spatial') / max(mean(pr, 'bytes_spatial'), 1):.2f}",
+    )
+
+
+def bench_planner(quick: bool) -> None:
+    """Cost-based planner vs every fixed algorithm on the mixture trace.
+
+    The ISSUE 5 acceptance rows: on the bimodal term-selectivity ×
+    footprint-area workload, ``--algo auto`` must spend ≥ 1.3× fewer
+    probes + posting bytes than the best single fixed algorithm at
+    recall@10 ≥ 0.95 vs the exact oracle (``meets_1p3x`` column).
+    """
+    from repro.core import GeoSearchEngine, QueryBudgets
+    from repro.corpus import make_corpus, make_mixture_trace, pad_trace_batch
+
+    n_docs = 2500 if quick else 8000
+    corpus = make_corpus(n_docs, 1000 if quick else 1500, seed=9)
+    budgets = QueryBudgets(
+        max_candidates=2048, max_tiles=1024, k_sweeps=8,
+        sweep_budget=max(n_docs // 8, 256), top_k=10,
+    )
+    eng = GeoSearchEngine.build(
+        corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
+        pagerank=corpus.pagerank, grid=128, m_intervals=8, budgets=budgets,
+    )
+    B = 96 if quick else 192
+    batch = pad_trace_batch(make_mixture_trace(corpus, n_queries=B, seed=10))
+
+    def mean(res, key):
+        return float(np.asarray(res.stats[key], np.float64).mean())
+
+    # one exact-oracle run serves all four recall columns
+    from repro.core.ranking import topk_recall_np
+
+    want_ids = np.asarray(eng.oracle(batch).ids)
+    costs, recalls = {}, {}
+    for algo in ["text_first", "geo_first", "k_sweep", "auto"]:
+        dt, res = _time(lambda a=algo: eng.query(batch, a))
+        costs[algo] = mean(res, "n_probes") + mean(res, "bytes_postings")
+        recalls[algo] = topk_recall_np(want_ids, res.ids)
+        tag = "ksweep" if algo == "k_sweep" else algo
+        _row(
+            f"planner_mixture_{tag}", dt / B * 1e6,
+            f"recall@10={recalls[algo]:.3f};"
+            f"probes_plus_postbytes={costs[algo]:.0f};"
+            f"n_probes={mean(res, 'n_probes'):.0f};"
+            f"bytes_postings={mean(res, 'bytes_postings'):.0f};n_docs={n_docs}",
+        )
+    mix = {}
+    for p in eng.planner.plan_rows(batch):
+        mix[p.label] = mix.get(p.label, 0) + 1
+    best_fixed = min(costs[a] for a in ["text_first", "geo_first", "k_sweep"])
+    gain = best_fixed / max(costs["auto"], 1e-9)
+    _row(
+        "planner_mixture_gain", 0.0,
+        f"gain_vs_best_fixed={gain:.2f}x;"
+        f"meets_1p3x={int(gain >= 1.3 and recalls['auto'] >= 0.95)};"
+        f"plan_mix={'/'.join(f'{k}:{v}' for k, v in sorted(mix.items()))}",
     )
 
 
@@ -426,6 +487,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     bench_table1(args.quick)
     bench_block_prune(args.quick)
+    bench_planner(args.quick)
     bench_k_sensitivity(args.quick)
     bench_scale(args.quick)
     bench_geo_partition(args.quick)

@@ -12,6 +12,10 @@ but for the serving layer (``repro.serving``):
                           (``budgets.prune``) behind the same serving
                           stack: fewer inverted-index probes and streamed
                           bytes per executed batch.
+* ``serve_algo_auto``   — the cost-based per-query planner (``--algo
+                          auto``) on the bimodal mixture trace: plan-
+                          homogeneous buckets, one compile per plan×shape;
+                          the ``_plans`` row prints the per-plan query mix.
 * ``serving_arrival_*`` — open-loop replay (Poisson + bursty MMPP arrivals)
                           across ``max_wait_ms`` deadlines: the throughput
                           vs tail-latency tradeoff of deadline-based batch
@@ -163,6 +167,31 @@ def main() -> None:
         "serve_algo_ksweep_pruned_io", 0.0,
         f"n_probes={probes:.0f};probes_saved={saved:.0f};"
         f"blocks_skipped={skipped:.0f}",
+    )
+
+    # cost-based planner behind the same stack on the bimodal mixture
+    # trace: per-query plan selection, plan-homogeneous buckets, per-plan
+    # report attribution.  No cache, so every query exercises its plan.
+    from repro.corpus import make_mixture_trace
+
+    eng_auto = GeoSearchEngine.build(
+        corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
+        pagerank=corpus.pagerank, grid=64, m_intervals=8, budgets=budgets,
+    )
+    mixture = make_mixture_trace(
+        corpus, n_queries=n_q // 4 if smoke else n_q // 2, seed=5
+    )
+    server = GeoServer(
+        SingleDeviceExecutor(eng_auto, "auto"), cache=None, batcher=batcher()
+    )
+    rep = server.run_trace(mixture)
+    report_row("serve_algo_auto", rep)
+    _row(
+        "serve_algo_auto_plans", 0.0,
+        ";".join(
+            f"{label}={n}" for label, n in sorted(rep.plan_queries.items())
+        )
+        + f";n_plans={len(rep.plan_queries)}",
     )
 
     # open-loop arrival sweep: deadline (max_wait_ms) trades padding +

@@ -9,9 +9,9 @@ cd "$(dirname "$0")/.."
 if command -v ruff >/dev/null 2>&1; then
   echo "== ruff lint =="
   ruff check .
-  echo "== ruff format check (serving + core + kernels) =="
+  echo "== ruff format check (serving + core + kernels + launch + corpus) =="
   ruff format --check src/repro/serving src/repro/core src/repro/kernels \
-    benchmarks/compare_baseline.py
+    src/repro/launch src/repro/corpus benchmarks/compare_baseline.py
 else
   echo "== ruff not installed; skipping lint (CI runs it) =="
 fi

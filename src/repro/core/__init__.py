@@ -7,14 +7,24 @@ Modules:
   spatial_index  Morton toe-print store + tile-interval grid
   ranking        combined text/geo/pagerank ranking
   algorithms     TEXT-FIRST / GEO-FIRST / K-SWEEP batched pipelines
+  planner        cost-based per-query plan selection (QueryPlan / Planner)
   engine         GeoSearchEngine facade
   distributed    doc-sharded serving over a device mesh
 """
 from repro.core.engine import GeoIndex, GeoSearchEngine
-from repro.core.algorithms import QueryBatch, QueryBudgets, TopKResult, ALGORITHMS
+from repro.core.algorithms import (
+    ALGORITHMS,
+    QueryBatch,
+    QueryBudgets,
+    TopKResult,
+    get_algorithm,
+    register_algorithm,
+)
+from repro.core.planner import CostModel, Planner, QueryPlan
 from repro.core.ranking import RankWeights
 
 __all__ = [
     "GeoIndex", "GeoSearchEngine", "QueryBatch", "QueryBudgets",
-    "TopKResult", "ALGORITHMS", "RankWeights",
+    "TopKResult", "ALGORITHMS", "get_algorithm", "register_algorithm",
+    "CostModel", "Planner", "QueryPlan", "RankWeights",
 ]

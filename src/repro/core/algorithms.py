@@ -32,6 +32,39 @@ from repro.core.spatial_index import INVALID
 TP_BYTES = 4 * 4 + 4 + 4  # rect + amp + docid per toe print
 POSTING_BYTES = 4 + 4  # docid + impact
 
+# ---------------------------------------------------------------------------
+# algorithm registry
+# ---------------------------------------------------------------------------
+# One uniform dispatch surface instead of ad-hoc string→fn maps scattered
+# through the engine / distributed / executor layers.  Every registered fn
+# shares the module-docstring signature; callers resolve by name via
+# ``get_algorithm`` (which raises with the valid menu on a typo) and the
+# planner enumerates ``ALGORITHMS`` to build its candidate plans.
+
+ALGORITHMS: dict[str, "object"] = {}
+
+
+def register_algorithm(name: str):
+    """Class-of-service decorator: add a query algorithm to the registry."""
+
+    def deco(fn):
+        ALGORITHMS[name] = fn
+        return fn
+
+    return deco
+
+
+def get_algorithm(name: str):
+    """Resolve a registered algorithm by name (clear error on a typo)."""
+    try:
+        return ALGORITHMS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown algorithm {name!r}; registered: {sorted(ALGORITHMS)} "
+            "(plus 'auto' at the engine/serving layer, which routes through "
+            "the cost-based planner)"
+        ) from None
+
 
 @jax.tree_util.register_dataclass
 @dataclass(frozen=True)
@@ -139,6 +172,7 @@ def _sorted_run_sums(ids: jax.Array, vals: jax.Array, valid: jax.Array):
 # TEXT-FIRST (paper §IV.A)
 # ---------------------------------------------------------------------------
 
+@register_algorithm("text_first")
 def text_first(
     text: tidx.TextIndex,
     spatial: sidx.SpatialIndex,
@@ -193,6 +227,7 @@ def text_first(
 # GEO-FIRST (paper §IV.B)
 # ---------------------------------------------------------------------------
 
+@register_algorithm("geo_first")
 def geo_first(
     text: tidx.TextIndex,
     spatial: sidx.SpatialIndex,
@@ -256,6 +291,7 @@ def geo_first(
 # K-SWEEP (paper §IV.C — the main algorithm)
 # ---------------------------------------------------------------------------
 
+@register_algorithm("k_sweep")
 def k_sweep(
     text: tidx.TextIndex,
     spatial: sidx.SpatialIndex,
@@ -483,10 +519,3 @@ def oracle(
 
     ids, vals = jax.vmap(one)(query.terms, query.rects, query.amps)
     return TopKResult(ids, vals, {})
-
-
-ALGORITHMS = {
-    "text_first": text_first,
-    "geo_first": geo_first,
-    "k_sweep": k_sweep,
-}

@@ -237,6 +237,7 @@ def make_serve_fn(
     n_terms: int = 0,
     fused: bool = False,
     block_size: int = 128,
+    with_stats: bool = False,
 ):
     """Build the jit'd distributed serve step for a mesh.
 
@@ -244,8 +245,14 @@ def make_serve_fn(
     -> (ids i32[B, k], scores f32[B, k])`` with global docIDs.
     ``fused=True`` routes k_sweep through the Pallas fused (and, with
     ``budgets.prune``, block-max pruned) sweep kernel on every shard.
+
+    ``with_stats=True`` additionally returns the per-query byte-counter
+    dict *measured inside the step*: each shard's per-stage counters are
+    summed over the doc axes with ``psum`` (k·S-independent — one scalar
+    vector per query rides the existing collective phase), so serving
+    reports see exact mesh traffic instead of a host-side capacity model.
     """
-    fn = alg.ALGORITHMS[algorithm]
+    fn = alg.get_algorithm(algorithm)
     if algorithm == "k_sweep" and fused:
         from functools import partial as _partial
 
@@ -254,7 +261,12 @@ def make_serve_fn(
     q_spec = alg.QueryBatch(
         terms=P(query_axis), rects=P(query_axis), amps=P(query_axis)
     )
-    out_spec = (P(query_axis), P(query_axis))
+    # tree-prefix specs: the trailing P broadcasts over the stats dict
+    out_spec = (
+        (P(query_axis), P(query_axis), P(query_axis))
+        if with_stats
+        else (P(query_axis), P(query_axis))
+    )
 
     def local_index(idx: ShardedGeoIndex) -> tuple[GeoIndex, jax.Array]:
         text = TextIndex(
@@ -296,6 +308,13 @@ def make_serve_fn(
             )
             scores, sel = jax.lax.top_k(g_scores, k)
             gids = jnp.take_along_axis(g_ids, sel, axis=-1)
+        if with_stats:
+            # exact per-query counters: sum each shard's measured stats
+            # over the doc axes (every query executed on every shard)
+            stats = {
+                key: jax.lax.psum(v, doc_axes) for key, v in res.stats.items()
+            }
+            return gids, scores, stats
         return gids, scores
 
     mapped = shard_map(

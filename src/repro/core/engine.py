@@ -10,6 +10,14 @@ This is the public API of the paper's system.  It owns
 
 and exposes ``query(batch, algorithm=...)`` — a jit-compiled, batched query
 pipeline — plus ``oracle`` for exact evaluation.
+
+Execution is *plan-driven*: every call resolves to a
+:class:`~repro.core.planner.QueryPlan` (algorithm + budgets + kernel knobs)
+and the compiled-function cache is keyed by plan, so callers can hold
+several pipeline variants against one index without recompiling or mutating
+engine state.  ``algorithm="auto"`` routes through the engine's cost-based
+:class:`~repro.core.planner.Planner`, which picks the cheapest plan per
+query from posting-list lengths and footprint coverage estimates.
 """
 from __future__ import annotations
 
@@ -22,6 +30,7 @@ import numpy as np
 
 from repro.core import algorithms as alg
 from repro.core import ranking
+from repro.core.planner import Planner, QueryPlan
 from repro.core.spatial_index import SpatialIndex, build_spatial_index_np
 from repro.core.text_index import TextIndex, build_text_index_np
 
@@ -90,10 +99,80 @@ class GeoSearchEngine:
         self,
         batch: alg.QueryBatch,
         algorithm: str = "k_sweep",
+        plan: QueryPlan | None = None,
         **kw,
     ) -> alg.TopKResult:
-        fn = self._compiled(algorithm, tuple(sorted(kw.items())))
+        """Run one batch under a plan.
+
+        ``plan=None`` builds the default plan for ``algorithm`` from the
+        engine's own budgets (bit-identical to the pre-plan API).
+        ``algorithm="auto"`` asks the engine's planner for a per-query plan
+        and gathers each row's result from its assigned plan's run.
+        """
+        if plan is None:
+            if algorithm == "auto":
+                return self._query_auto(batch, **kw)
+            plan = QueryPlan(
+                algorithm, self.budgets, fused=bool(kw.pop("fused", False))
+            )
+        else:
+            kw.pop("fused", None)  # the plan owns the fused flag
+        fn = self._compiled(plan, tuple(sorted(kw.items())))
         return fn(self.index, batch)
+
+    @property
+    def planner(self) -> Planner:
+        """Lazily-built cost-based planner over this engine's index."""
+        p = self.__dict__.get("_planner")
+        if p is None:
+            p = Planner.from_engine(self)
+            self.__dict__["_planner"] = p
+        return p
+
+    def _query_auto(self, batch: alg.QueryBatch, **kw) -> alg.TopKResult:
+        """Per-query plan dispatch at the engine level.
+
+        The serving layer dispatches plan-homogeneous batches (one compile
+        and one execution per plan × shape); here, against a single padded
+        batch, we emulate that: each *distinct* chosen plan runs on the
+        whole batch and every row's ids/scores/stats are gathered from its
+        assigned plan's run — so the per-query counters are exactly what
+        per-query dispatch would have measured, at the price of executing
+        each selected pipeline over the full batch.
+        """
+        fused = bool(kw.pop("fused", False))
+        plans = self.planner.plan_rows(batch)
+        if fused:  # route K-SWEEP rows through the fused Pallas kernel
+            plans = [
+                replace(p, fused=True) if p.algorithm == "k_sweep" else p
+                for p in plans
+            ]
+        uniq: list[QueryPlan] = []
+        for p in plans:
+            if p not in uniq:
+                uniq.append(p)
+        if len(uniq) == 1:
+            return self.query(batch, plan=uniq[0], **kw)
+        results = {p: self.query(batch, plan=p, **kw) for p in uniq}
+        rows = [np.asarray([plan == p for plan in plans]) for p in uniq]
+        ids = np.zeros_like(np.asarray(results[uniq[0]].ids))
+        scores = np.zeros_like(np.asarray(results[uniq[0]].scores))
+        keys = sorted({k for r in results.values() for k in r.stats})
+        B = batch.batch
+        stats = {k: np.zeros((B,), np.float64) for k in keys}
+        for p, sel in zip(uniq, rows):
+            res = results[p]
+            ids[sel] = np.asarray(res.ids)[sel]
+            scores[sel] = np.asarray(res.scores)[sel]
+            for k in keys:  # absent counters contribute 0 for this plan
+                if k in res.stats:
+                    v = np.asarray(res.stats[k], np.float64)
+                    stats[k][sel] = v[sel] if v.ndim else v
+        return alg.TopKResult(
+            ids=jnp.asarray(ids),
+            scores=jnp.asarray(scores),
+            stats={k: jnp.asarray(v) for k, v in stats.items()},
+        )
 
     def oracle(self, batch: alg.QueryBatch, k: int | None = None) -> alg.TopKResult:
         k = k or self.budgets.top_k
@@ -103,12 +182,21 @@ class GeoSearchEngine:
             )
         )(self.index, batch)
 
-    def _compiled(self, algorithm: str, kw_key) -> Callable:
+    def _compiled(self, plan: QueryPlan, kw_key) -> Callable:
+        """Plan-keyed compiled-function cache (one jit program per plan)."""
         cache = self.__dict__.setdefault("_fn_cache", {})
-        key = (algorithm, kw_key)
+        key = (plan, kw_key)
         if key not in cache:
-            fn = alg.ALGORITHMS[algorithm]
-            kw = dict(kw_key)
+            fn = alg.get_algorithm(plan.algorithm)
+            kw = {**plan.engine_kw(), **dict(kw_key)}
+            # a plan's budgets may come from another shard's engine: sweeps
+            # can never exceed THIS index's toe-print store
+            budgets = replace(
+                plan.budgets,
+                sweep_budget=min(
+                    plan.budgets.sweep_budget, self.index.spatial.n_toeprints
+                ),
+            )
 
             @jax.jit
             def run(index: GeoIndex, batch: alg.QueryBatch):
@@ -117,7 +205,7 @@ class GeoSearchEngine:
                     index.spatial,
                     index.pagerank,
                     batch,
-                    self.budgets,
+                    budgets,
                     self.weights,
                     **kw,
                 )
@@ -140,17 +228,4 @@ class GeoSearchEngine:
         k = k or self.budgets.top_k
         got = self.query(batch, algorithm, **kw)
         want = self.oracle(batch, k)
-        got_ids = np.asarray(got.ids)
-        want_ids = np.asarray(want.ids)
-        # vectorized membership: want[b, i] found anywhere in got[b, :]
-        want_valid = want_ids >= 0
-        got_valid = got_ids >= 0
-        found = (
-            (want_ids[:, :, None] == got_ids[:, None, :])
-            & want_valid[:, :, None]
-            & got_valid[:, None, :]
-        ).any(axis=-1)
-        total = int(want_valid.sum())
-        if total == 0:
-            return 1.0  # vacuous: no query has any valid result
-        return float(found.sum()) / total
+        return ranking.topk_recall_np(want.ids, got.ids)

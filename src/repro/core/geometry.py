@@ -125,6 +125,22 @@ def rect_to_cell_range(r: jax.Array, grid: int):
     return ix0, iy0, ix1, iy1
 
 
+def rect_cell_bounds_np(rects: np.ndarray, grid: int):
+    """Integer cell bounds ``(ix0, iy0, ix1, iy1)`` covered by rects, numpy.
+
+    The host-side twin of :func:`rect_to_cell_range` (same upper-edge eps),
+    shared by the index build and the query planner so their rect→tile
+    bucketing can never drift apart.  Empty rects yield inverted bounds.
+    """
+    g = float(grid)
+    eps = 0.5 / grid * 1e-3
+    ix0 = np.clip(np.floor(rects[..., 0] * g).astype(np.int64), 0, grid - 1)
+    iy0 = np.clip(np.floor(rects[..., 1] * g).astype(np.int64), 0, grid - 1)
+    ix1 = np.clip(np.floor((rects[..., 2] - eps) * g).astype(np.int64), 0, grid - 1)
+    iy1 = np.clip(np.floor((rects[..., 3] - eps) * g).astype(np.int64), 0, grid - 1)
+    return ix0, iy0, ix1, iy1
+
+
 def enumerate_rect_tiles(r: jax.Array, grid: int, max_tiles: int):
     """Tile ids (row-major ``iy*grid+ix``) intersecting rect ``r[4]``.
 

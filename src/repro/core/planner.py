@@ -1,0 +1,475 @@
+"""Cost-based per-query planner: pick text-first / geo-first / K-SWEEP per query.
+
+The paper's central claim is that a geo search engine needs *several* query
+processing algorithms because no single text/spatial evaluation order wins
+across query shapes: a rare term with a country-sized footprint wants the
+inverted index to drive (TEXT-FIRST), a hot term with a city-block footprint
+wants the spatial structure to drive (GEO-FIRST), and the broad middle is
+K-SWEEP territory.  This module makes that choice *per query* from cheap
+host-side features instead of a static ``--algo`` flag.
+
+Plan abstraction
+----------------
+A :class:`QueryPlan` is (algorithm, budgets, fused flag) — everything the
+engine needs to compile and run one pipeline variant.  Plans are frozen and
+hashable: they key the engine's compiled-function cache, the serving
+batcher's buckets (a flushed batch compiles once per plan × shape), and the
+``ServeReport`` per-plan attribution.
+
+Cost-model features (all O(d + NB) numpy per query, no device work)
+-------------------------------------------------------------------
+* ``df_min`` / ``df_sum`` — posting-list lengths of the query terms from the
+  :class:`~repro.core.text_index.TextIndex` CSR offsets (the df table is
+  precomputed once at planner build).  ``df_min`` is the TEXT-FIRST driver
+  list length — the dominant term of its cost.
+* ``tp_est`` — toe prints the query's *tile intervals* cover: per-tile
+  interval lengths (what GEO-FIRST / K-SWEEP actually enumerate, coalescing
+  slack included) are precomputed into a summed-area table at planner
+  build, so each query rect's covered-cell sum is O(1).  This is "query
+  footprint area × corpus toe-print density", localized to the tile grid
+  the candidate streams really fetch from.
+* ``tp_span`` — Morton-store span from the spatial index's *block-max
+  metadata* (``blk_mbr`` + per-block occupancy): every block whose MBR
+  touches the footprint lies inside the span K-SWEEP's coalesced streams
+  must cover, which sizes its streamed volume and its sweep-capacity
+  truncation risk.
+
+Per-algorithm cost estimates mirror the stats formulas the executors
+measure (:mod:`repro.core.algorithms`): predicted ``n_probes``,
+``bytes_postings`` and ``bytes_spatial`` per query.  The planner objective
+is ``w_probes·n_probes + w_postings·bytes_postings + w_spatial·
+bytes_spatial`` (defaults weight the paper's probe + posting traffic, with
+a light spatial-stream term to break ties).
+
+Calibration
+-----------
+The estimates are capacity-shaped upper bounds; real workloads have
+conjunction selectivity and sweep slack the closed forms cannot see.
+:meth:`CostModel.calibrate` runs each candidate algorithm once on a probe
+batch through the real engine, compares the *measured* per-stage counters
+(the same ``stats`` dict the executors report) against the predictions, and
+stores one multiplicative scale per (algorithm, counter).  Scales are
+clipped to [1/16, 16] so a degenerate probe batch cannot invert a
+decision's sign.  Calibration is optional — uncalibrated scales are 1.0 and
+the feature split alone separates the regimes above.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import algorithms as alg
+from repro.core import geometry
+from repro.core.spatial_index import INVALID
+
+# objective keys: the per-stage counters every algorithm reports
+COST_KEYS = ("n_probes", "bytes_postings", "bytes_spatial")
+_SCALE_CLIP = 16.0
+
+
+@dataclass(frozen=True)
+class QueryPlan:
+    """One executable pipeline choice: algorithm + budgets + kernel knobs.
+
+    Frozen and hashable — used as a compiled-function cache key, a batcher
+    bucket-key component, and a serving-report attribution label.
+    """
+
+    algorithm: str
+    budgets: alg.QueryBudgets
+    fused: bool = False
+
+    @property
+    def label(self) -> str:
+        """Human-readable plan name for reports (``k_sweep+prune+fused``)."""
+        out = self.algorithm
+        if self.algorithm == "k_sweep" and self.budgets.prune:
+            out += "+prune"
+        if self.algorithm == "k_sweep" and self.fused:
+            out += "+fused"
+        return out
+
+    def engine_kw(self) -> dict:
+        """Extra keyword args the engine forwards to the algorithm fn."""
+        if self.algorithm == "k_sweep" and self.fused:
+            return {"fused": True}
+        return {}
+
+
+@dataclass(frozen=True)
+class QueryFeatures:
+    """Cheap per-query features the cost model consumes."""
+
+    n_terms: int
+    df_min: float  # shortest posting list among the query terms
+    df_sum: float  # total posting volume of the query terms
+    tp_est: float  # estimated toe prints the tile intervals cover
+    tp_span: float  # estimated Morton-store span (block metadata hits)
+    area: float  # total query footprint area
+
+
+@dataclass
+class CostModel:
+    """Per-algorithm per-stage cost estimates from per-query features.
+
+    Feature tables are plain numpy copies of the index's auxiliary
+    structures (df table, block metadata) — the model never touches device
+    arrays at plan time.
+    """
+
+    df: np.ndarray  # f64[M] posting-list length per term
+    blk_mbr: np.ndarray  # f32[NB, 4] block MBRs (Morton store)
+    blk_count: np.ndarray  # f64[NB] toe prints per block
+    tile_sat: np.ndarray  # f64[G+1, G+1] summed-area table of per-tile
+    #                       interval coverage (Σ interval lengths per tile)
+    grid: int
+    n_postings: int
+    n_toeprints: int
+    n_docs: int
+    rect_slots: int  # R of the doc-major footprint mirror
+    budgets: alg.QueryBudgets
+    # (algorithm, counter) -> multiplicative calibration scale
+    scales: dict = field(default_factory=dict)
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+    @staticmethod
+    def from_geo_index(index, budgets: alg.QueryBudgets) -> "CostModel":
+        """Build feature tables from a single :class:`GeoIndex`."""
+        text, spatial = index.text, index.spatial
+        df = np.diff(np.asarray(text.offsets)).astype(np.float64)
+        blk_mbr = np.asarray(spatial.blk_mbr)
+        blk_count = _block_counts(spatial.n_toeprints, spatial.block_size, blk_mbr)
+        return CostModel(
+            df=df,
+            blk_mbr=blk_mbr,
+            blk_count=blk_count,
+            tile_sat=_tile_sat(
+                np.asarray(spatial.tile_starts),
+                np.asarray(spatial.tile_ends),
+                spatial.grid,
+            ),
+            grid=int(spatial.grid),
+            n_postings=int(text.n_postings),
+            n_toeprints=int(spatial.n_toeprints),
+            n_docs=int(spatial.n_docs),
+            rect_slots=int(spatial.doc_rects.shape[1]),
+            budgets=budgets,
+        )
+
+    @staticmethod
+    def from_shards(indexes, budgets: alg.QueryBudgets) -> "CostModel":
+        """Aggregate feature tables over per-shard :class:`GeoIndex` es.
+
+        df and tile coverage sum across shards (every shard sees every
+        query); block metadata concatenates, so the features count the
+        whole corpus.
+        """
+        parts = [CostModel.from_geo_index(ix, budgets) for ix in indexes]
+        return CostModel(
+            df=np.sum([p.df for p in parts], axis=0),
+            blk_mbr=np.concatenate([p.blk_mbr for p in parts], axis=0),
+            blk_count=np.concatenate([p.blk_count for p in parts], axis=0),
+            tile_sat=np.sum([p.tile_sat for p in parts], axis=0),
+            grid=parts[0].grid,
+            n_postings=sum(p.n_postings for p in parts),
+            n_toeprints=sum(p.n_toeprints for p in parts),
+            n_docs=sum(p.n_docs for p in parts),
+            rect_slots=parts[0].rect_slots,
+            budgets=budgets,
+        )
+
+    @staticmethod
+    def from_sharded_index(sharded, budgets: alg.QueryBudgets) -> "CostModel":
+        """Build from a stacked :class:`ShardedGeoIndex` (mesh executor)."""
+        offsets = np.asarray(sharded.offsets, np.int64)  # [S, M+1]
+        df = np.diff(offsets, axis=1).sum(axis=0).astype(np.float64)
+        blk_mbr = np.asarray(sharded.blk_mbr).reshape(-1, 4)
+        amps = np.asarray(sharded.tp_amps)
+        n_tp = int((amps > 0).sum())
+        # padded blocks carry zero max-amp → zero occupancy
+        blk_amp = np.asarray(sharded.blk_max_amp).reshape(-1)
+        bs = int(sharded.block_size)
+        blk_count = np.where(blk_amp > 0, float(bs), 0.0)
+        n_docs = int((np.asarray(sharded.doc_offset) >= 0).sum())
+        grid = int(sharded.grid)
+        sat = np.sum(
+            [
+                _tile_sat(
+                    np.asarray(sharded.tile_starts[s]),
+                    np.asarray(sharded.tile_ends[s]),
+                    grid,
+                )
+                for s in range(sharded.n_shards)
+            ],
+            axis=0,
+        )
+        return CostModel(
+            df=df,
+            blk_mbr=blk_mbr,
+            blk_count=blk_count,
+            tile_sat=sat,
+            grid=grid,
+            n_postings=int(df.sum()),
+            n_toeprints=n_tp,
+            n_docs=n_docs,
+            rect_slots=int(sharded.doc_rects.shape[2]),
+            budgets=budgets,
+        )
+
+    # ------------------------------------------------------------------
+    # features
+    # ------------------------------------------------------------------
+    def features(self, terms, rects, amps) -> QueryFeatures:
+        t = np.unique(np.asarray(terms, np.int64).reshape(-1))
+        t = t[(t >= 0) & (t < len(self.df))]
+        dfs = self.df[t] if len(t) else np.zeros((0,))
+        r = np.asarray(rects, np.float64).reshape(-1, 4)
+        a = np.asarray(amps, np.float64).reshape(-1)
+        valid = (r[:, 2] > r[:, 0]) & (r[:, 3] > r[:, 1]) & (a > 0)
+        r = r[valid]
+        area = float(
+            np.sum((r[:, 2] - r[:, 0]) * (r[:, 3] - r[:, 1])) if len(r) else 0.0
+        )
+        tp_est, tp_span = 0.0, 0.0
+        if len(r):
+            # tile-interval coverage: what GEO-FIRST / K-SWEEP actually
+            # enumerate is the tile grid's per-tile intervals (with their
+            # coalescing slack), so tp_est sums the precomputed per-tile
+            # interval lengths over the touched cell range — O(1) per rect
+            # via the summed-area table.  rect_cell_bounds_np is the same
+            # bucketing the index build used, so coverage cannot drift.
+            x0, y0, x1, y1 = geometry.rect_cell_bounds_np(r, self.grid)
+            s = self.tile_sat
+            covered = (
+                s[y1 + 1, x1 + 1] - s[y0, x1 + 1] - s[y1 + 1, x0] + s[y0, x0]
+            )
+            tp_est = float(np.minimum(covered.sum(), self.n_toeprints))
+        if len(r) and len(self.blk_mbr):
+            # Morton-span estimate for K-SWEEP's contiguous streams: every
+            # metadata block whose MBR touches the footprint lies inside
+            # the span the coalesced sweeps must cover
+            m = self.blk_mbr.astype(np.float64)
+            hit = (
+                (np.minimum(m[None, :, 2], r[:, None, 2])
+                 >= np.maximum(m[None, :, 0], r[:, None, 0]))
+                & (np.minimum(m[None, :, 3], r[:, None, 3])
+                   >= np.maximum(m[None, :, 1], r[:, None, 1]))
+            ).any(axis=0)
+            tp_span = float(
+                np.minimum((hit * self.blk_count).sum(), self.n_toeprints)
+            )
+        return QueryFeatures(
+            n_terms=int(len(t)),
+            df_min=float(dfs.min()) if len(dfs) else 0.0,
+            df_sum=float(dfs.sum()),
+            tp_est=tp_est,
+            tp_span=max(tp_span, tp_est),
+            area=area,
+        )
+
+    # ------------------------------------------------------------------
+    # per-algorithm estimates
+    # ------------------------------------------------------------------
+    def estimate(self, plan: QueryPlan, f: QueryFeatures) -> dict[str, float]:
+        """Predicted per-query counters for ``plan`` (COST_KEYS)."""
+        bud = plan.budgets
+        d = max(f.n_terms, 1)
+        mc = bud.max_candidates
+        logp = float(np.ceil(np.log2(max(self.n_postings, 2))))
+        pb, tpb = alg.POSTING_BYTES, alg.TP_BYTES
+        R = self.rect_slots
+        tp_per_doc = max(self.n_toeprints / max(self.n_docs, 1), 1.0)
+        if plan.algorithm == "text_first":
+            n_c = min(f.df_min, mc)  # driver-list bound on survivors
+            est = {
+                "n_probes": n_c * max(d - 1, 0),
+                "bytes_postings": n_c * pb + mc * pb,
+                "bytes_spatial": n_c * R * (16 + 4),
+            }
+        elif plan.algorithm == "geo_first":
+            n_cand = min(f.tp_est, mc)
+            n_uniq = n_cand / tp_per_doc
+            keep = n_uniq * min(f.df_min / max(self.n_docs, 1), 1.0)
+            est = {
+                "n_probes": n_uniq * d,
+                "bytes_postings": n_uniq * logp * pb,
+                "bytes_spatial": n_cand * 4 + keep * R * (16 + 4),
+            }
+        elif plan.algorithm == "k_sweep":
+            # sweeps stream whole sweep_budget chunks over the Morton span
+            # the footprint's blocks cover
+            n_sweeps = (
+                min(-(-f.tp_span // bud.sweep_budget), bud.k_sweeps)
+                if f.tp_span > 0
+                else 1
+            )
+            streamed = n_sweeps * bud.sweep_budget
+            n_valid = min(f.tp_est, streamed)
+            if bud.prune or bud.early_termination:
+                n_valid = min(n_valid, mc)
+            n_uniq = n_valid / tp_per_doc
+            est = {
+                "n_probes": n_uniq * d,
+                "bytes_postings": n_uniq * logp * pb,
+                # pruning is modeled as zero skips (a safe upper bound);
+                # calibration learns the workload's actual skip rate
+                "bytes_spatial": streamed * tpb,
+            }
+        else:
+            raise ValueError(f"cost model has no estimator for {plan.algorithm!r}")
+        key = plan.algorithm
+        return {k: v * self.scales.get((key, k), 1.0) for k, v in est.items()}
+
+    def truncation(self, plan: QueryPlan, f: QueryFeatures) -> float:
+        """Estimated candidates a plan's budgets would *drop* for this query.
+
+        Each algorithm is exact until a static budget truncates its
+        candidate stream (TEXT-FIRST: the driver posting list vs
+        ``max_candidates``; GEO-FIRST: footprint toe prints vs
+        ``max_candidates``; K-SWEEP: footprint toe prints vs the total
+        sweep capacity).  The planner charges dropped candidates far above
+        their byte cost — recall, not traffic, is what truncation loses —
+        so a plan that covers the query beats a nominally cheaper plan
+        that cannot.
+        """
+        bud = plan.budgets
+        if plan.algorithm == "text_first":
+            return max(0.0, f.df_min - bud.max_candidates)
+        if plan.algorithm == "geo_first":
+            return max(0.0, f.tp_est - bud.max_candidates)
+        if plan.algorithm == "k_sweep":
+            return max(0.0, f.tp_span - bud.k_sweeps * bud.sweep_budget)
+        return 0.0
+
+    # ------------------------------------------------------------------
+    # calibration
+    # ------------------------------------------------------------------
+    def calibrate(self, engine, batch, plans) -> None:
+        """Fit per-(algorithm, counter) scales against measured counters.
+
+        Runs each plan once on ``batch`` through ``engine`` and sets
+        ``scales[(algorithm, key)] = mean(measured) / mean(predicted)``,
+        clipped to [1/16, 16].  Idempotent: predictions are re-derived from
+        the unscaled closed forms each call.
+        """
+        terms = np.asarray(batch.terms)
+        rects = np.asarray(batch.rects)
+        amps = np.asarray(batch.amps)
+        feats = [
+            self.features(terms[b], rects[b], amps[b])
+            for b in range(terms.shape[0])
+        ]
+        for plan in plans:
+            res = engine.query(batch, plan=plan)
+            for k in COST_KEYS:  # predict unscaled
+                self.scales.pop((plan.algorithm, k), None)
+            pred = {k: 0.0 for k in COST_KEYS}
+            for f in feats:
+                for k, v in self.estimate(plan, f).items():
+                    pred[k] += v
+            for k in COST_KEYS:
+                meas = float(np.asarray(res.stats[k], np.float64).sum())
+                if pred[k] > 0 and meas > 0:
+                    self.scales[(plan.algorithm, k)] = float(
+                        np.clip(meas / pred[k], 1.0 / _SCALE_CLIP, _SCALE_CLIP)
+                    )
+
+
+@dataclass
+class Planner:
+    """Chooses the cheapest :class:`QueryPlan` per query.
+
+    ``candidates`` is the plan menu (one per registered algorithm by
+    default; the K-SWEEP entry inherits the engine budgets' ``prune`` /
+    ``fused`` configuration).  The objective weights mirror the paper's
+    probe + posting-byte traffic, with a light spatial-stream tiebreaker.
+    """
+
+    model: CostModel
+    candidates: tuple[QueryPlan, ...]
+    w_probes: float = 1.0
+    w_postings: float = 1.0
+    w_spatial: float = 0.1
+    # bytes charged per candidate a plan's budget would drop (recall risk:
+    # dominates the traffic terms so coverage wins over nominal cheapness)
+    w_truncation: float = 2048.0
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def make_candidates(
+        budgets: alg.QueryBudgets, fused: bool = False
+    ) -> tuple[QueryPlan, ...]:
+        return (
+            QueryPlan("text_first", budgets),
+            QueryPlan("geo_first", budgets),
+            QueryPlan("k_sweep", budgets, fused=fused),
+        )
+
+    @staticmethod
+    def from_engine(engine, fused: bool = False, calibrate_with=None) -> "Planner":
+        model = CostModel.from_geo_index(engine.index, engine.budgets)
+        planner = Planner(
+            model=model,
+            candidates=Planner.make_candidates(engine.budgets, fused=fused),
+        )
+        if calibrate_with is not None:
+            model.calibrate(engine, calibrate_with, planner.candidates)
+        return planner
+
+    # ------------------------------------------------------------------
+    def cost(self, plan: QueryPlan, f: QueryFeatures) -> float:
+        est = self.model.estimate(plan, f)
+        return (
+            self.w_probes * est["n_probes"]
+            + self.w_postings * est["bytes_postings"]
+            + self.w_spatial * est["bytes_spatial"]
+            + self.w_truncation * self.model.truncation(plan, f)
+        )
+
+    def plan_query(self, terms, rects, amps) -> QueryPlan:
+        """Cheapest plan for one (un-padded or padded) query."""
+        f = self.model.features(terms, rects, amps)
+        best, best_cost = None, float("inf")
+        for plan in self.candidates:  # stable order breaks exact ties
+            c = self.cost(plan, f)
+            if c < best_cost:
+                best, best_cost = plan, c
+        return best
+
+    def plan_rows(self, batch: alg.QueryBatch) -> list[QueryPlan]:
+        """One plan per row of a padded :class:`QueryBatch`."""
+        terms = np.asarray(batch.terms)
+        rects = np.asarray(batch.rects)
+        amps = np.asarray(batch.amps)
+        return [
+            self.plan_query(terms[b], rects[b], amps[b])
+            for b in range(terms.shape[0])
+        ]
+
+
+def _block_counts(n_toeprints: int, block_size: int, blk_mbr: np.ndarray):
+    """Toe prints per metadata block (tail block is short)."""
+    nb = blk_mbr.shape[0]
+    counts = np.full((nb,), float(block_size))
+    if nb:
+        counts[-1] = max(n_toeprints - (nb - 1) * block_size, 0)
+    return counts
+
+
+def _tile_sat(tile_starts, tile_ends, grid: int) -> np.ndarray:
+    """Summed-area table of per-tile interval coverage, f64[G+1, G+1].
+
+    ``coverage[iy, ix]`` = Σ interval lengths of tile ``iy·G + ix`` — the
+    toe prints (including coalescing slack) a query touching that tile
+    enumerates.  The SAT makes any cell-range sum O(1) per query rect.
+    """
+    starts = np.asarray(tile_starts, np.int64)  # [G*G, m]
+    ends = np.asarray(tile_ends, np.int64)
+    valid = starts != np.int64(INVALID)
+    cover = np.where(valid, ends - starts, 0).sum(axis=1).astype(np.float64)
+    sat = np.zeros((grid + 1, grid + 1))
+    sat[1:, 1:] = cover.reshape(grid, grid).cumsum(axis=0).cumsum(axis=1)
+    return sat

@@ -11,6 +11,7 @@ from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @jax.tree_util.register_dataclass
@@ -51,3 +52,23 @@ def top_k(scores: jax.Array, doc_ids: jax.Array, k: int):
     ids = jnp.take_along_axis(doc_ids, idx, axis=-1)
     ids = jnp.where(jnp.isfinite(vals), ids, -1)
     return ids, vals
+
+
+def topk_recall_np(want_ids, got_ids) -> float:
+    """Fraction of valid reference ids found in the candidate top-k lists.
+
+    ``want_ids``/``got_ids`` are ``[B, k]`` id arrays with −1 padding — the
+    one definition of recall@k shared by ``GeoSearchEngine.recall_at_k``
+    and the benchmark acceptance gates.  Vacuously 1.0 when the reference
+    has no valid ids.
+    """
+    want = np.asarray(want_ids)
+    got = np.asarray(got_ids)
+    want_valid = want >= 0
+    found = (
+        (want[:, :, None] == got[:, None, :])
+        & want_valid[:, :, None]
+        & (got[:, None, :] >= 0)
+    ).any(axis=-1)
+    total = int(want_valid.sum())
+    return float(found.sum()) / total if total else 1.0

@@ -125,12 +125,7 @@ def build_spatial_index_np(
     tile_ends = np.full((grid * grid, m_intervals), INVALID, dtype=np.int32)
 
     # enumerate (tile, toeprint) pairs
-    g = float(grid)
-    eps = 0.5 / grid * 1e-3
-    x0 = np.clip(np.floor(rects[:, 0] * g).astype(np.int64), 0, grid - 1)
-    y0 = np.clip(np.floor(rects[:, 1] * g).astype(np.int64), 0, grid - 1)
-    x1 = np.clip(np.floor((rects[:, 2] - eps) * g).astype(np.int64), 0, grid - 1)
-    y1 = np.clip(np.floor((rects[:, 3] - eps) * g).astype(np.int64), 0, grid - 1)
+    x0, y0, x1, y1 = geometry.rect_cell_bounds_np(rects, grid)
     tile_lists: dict[int, list[int]] = {}
     for t in range(T):
         for ty in range(y0[t], y1[t] + 1):

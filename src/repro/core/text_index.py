@@ -209,7 +209,10 @@ def _searchsorted_slice(
     def body(_, lh):
         l, h = lh
         active = l < h
-        mid = (l + h) // 2
+        # overflow-safe midpoint: l + h wraps int32 once the posting store
+        # passes 2^30 entries (production-scale shards); l + (h-l)//2 is
+        # value-identical for 0 <= l <= h and never overflows
+        mid = l + (h - l) // 2
         v = arr[jnp.clip(mid, 0, P - 1)]
         go_right = v < keys
         l = jnp.where(active & go_right, mid + 1, l)

@@ -4,11 +4,13 @@ from repro.corpus.synth import (
     TraceQuery,
     make_arrivals,
     make_corpus,
+    make_mixture_trace,
     make_query_trace,
     make_uniform_trace,
     make_zipf_trace,
     pad_trace_batch,
     stamp_arrivals,
+    term_document_frequencies,
 )
 
 __all__ = [
@@ -17,9 +19,11 @@ __all__ = [
     "TraceQuery",
     "make_arrivals",
     "make_corpus",
+    "make_mixture_trace",
     "make_query_trace",
     "make_uniform_trace",
     "make_zipf_trace",
     "pad_trace_batch",
     "stamp_arrivals",
+    "term_document_frequencies",
 ]

@@ -320,6 +320,130 @@ def stamp_arrivals(
     return [replace(q, arrival_s=float(t)) for q, t in zip(trace, times)]
 
 
+def term_document_frequencies(corpus: SynthCorpus) -> np.ndarray:
+    """Per-term document frequency (docs containing the term), f64[n_terms]."""
+    df = np.zeros((corpus.n_terms,), dtype=np.float64)
+    for terms in corpus.doc_terms:
+        np.add.at(df, np.unique(terms), 1.0)
+    return df
+
+
+def make_mixture_trace(
+    corpus: SynthCorpus,
+    n_queries: int = 2048,
+    rare_frac: float = 0.5,
+    rare_df_max: int = 4,
+    hot_quantile: float = 0.92,
+    seed: int = 1,
+) -> list[TraceQuery]:
+    """Bimodal term-selectivity × footprint-area workload (planner stressor).
+
+    Two query populations, mixed ``rare_frac`` / ``1 - rare_frac``:
+
+    * **rare + huge** — one very rare term (df ≤ ``rare_df_max``) over a
+      country-sized footprint.  The inverted index pins the answer set to a
+      handful of docs while the spatial structures see almost the whole
+      toe-print store: TEXT-FIRST territory, and catastrophic for GEO-FIRST
+      / K-SWEEP (they stream/enumerate nearly everything).
+    * **hot + tiny** — 2–3 of the collection's hottest terms (df above the
+      ``hot_quantile``) over a city-block footprint centered on a real
+      document's footprint (so the conjunction has a co-located match).
+      Anchor documents are drawn from the *sparse* tail of the geographic
+      density distribution — where the tile grid's intervals are tight —
+      so the spatial index pins the candidates to a few toe prints while
+      every posting list is huge: GEO-FIRST territory, and wasteful for
+      TEXT-FIRST (its driver list is long regardless of the footprint).
+
+    No single fixed algorithm is close to per-query selection on this
+    workload — the cost-based planner's acceptance trace
+    (``benchmarks/run.py::planner_mixture_*``).
+    """
+    rng = np.random.default_rng(seed)
+    df = term_document_frequencies(corpus)
+    rare_terms = np.nonzero((df >= 1) & (df <= rare_df_max))[0]
+    if len(rare_terms) == 0:  # tiny corpora: fall back to the rarest decile
+        order = np.argsort(df + np.where(df < 1, np.inf, 0.0))
+        rare_terms = order[: max(corpus.n_terms // 10, 1)]
+    hot_cut = np.quantile(df[df > 0], hot_quantile)
+    hot_set = set(np.nonzero(df >= max(hot_cut, 2))[0].tolist())
+    # geographic crowding per cell: how many footprint rects INTERSECT each
+    # cell of a coarse grid (2D difference trick + cumsum = integral image).
+    # Hot+tiny queries anchor on doc rects in the emptiest cells — exactly
+    # where the tile grid's intervals are tight and a spatial-first plan
+    # touches a handful of toe prints.
+    G = 64
+    N, R, _ = corpus.doc_rects.shape
+    rects_flat = corpus.doc_rects.reshape(-1, 4)
+    valid_flat = rects_flat[:, 2] > rects_flat[:, 0]
+    vx0 = np.clip((rects_flat[:, 0] * G).astype(np.int64), 0, G - 1)
+    vy0 = np.clip((rects_flat[:, 1] * G).astype(np.int64), 0, G - 1)
+    vx1 = np.clip((rects_flat[:, 2] * G).astype(np.int64), 0, G - 1)
+    vy1 = np.clip((rects_flat[:, 3] * G).astype(np.int64), 0, G - 1)
+    diff = np.zeros((G + 1, G + 1))
+    w = valid_flat.astype(np.float64)
+    np.add.at(diff, (vy0, vx0), w)
+    np.add.at(diff, (vy1 + 1, vx0), -w)
+    np.add.at(diff, (vy0, vx1 + 1), -w)
+    np.add.at(diff, (vy1 + 1, vx1 + 1), w)
+    crowd = diff.cumsum(axis=0).cumsum(axis=1)[:G, :G]  # [iy, ix]
+    # per doc: its least-crowded valid rect (anchor) and that crowding
+    cx = ((rects_flat[:, 0] + rects_flat[:, 2]) * 0.5 * G).astype(np.int64)
+    cy = ((rects_flat[:, 1] + rects_flat[:, 3]) * 0.5 * G).astype(np.int64)
+    rect_crowd = np.where(
+        valid_flat,
+        crowd[np.clip(cy, 0, G - 1), np.clip(cx, 0, G - 1)],
+        np.inf,
+    ).reshape(N, R)
+    anchor_rect = rect_crowd.argmin(axis=1)
+    anchor_crowd = rect_crowd.min(axis=1)
+    finite = np.isfinite(anchor_crowd)
+    cut = np.quantile(anchor_crowd[finite], 0.15) if finite.any() else np.inf
+    quiet_docs = np.nonzero(finite & (anchor_crowd <= cut))[0]
+    if len(quiet_docs) == 0:
+        quiet_docs = np.nonzero(finite)[0]
+    out = []
+    for _ in range(n_queries):
+        if rng.random() < rare_frac:
+            # rare + huge: one rare term, near-domain-wide footprint
+            t = np.array([rare_terms[rng.integers(0, len(rare_terms))]], np.int32)
+            w = rng.uniform(0.25, 0.45)
+            qx, qy = rng.uniform(0.35, 0.65, 2)
+            rect = (
+                max(qx - w, 0.0), max(qy - w, 0.0),
+                min(qx + w, 1.0), min(qy + w, 1.0),
+            )
+        else:
+            # hot + tiny: the doc's hottest terms, city-block footprint at
+            # the doc's least-crowded footprint rect (guaranteed overlap,
+            # tight tile intervals)
+            while True:
+                d_i = int(quiet_docs[rng.integers(0, len(quiet_docs))])
+                cand = np.unique(corpus.doc_terms[d_i])
+                hot = cand[np.isin(cand, list(hot_set))] if hot_set else cand
+                if len(hot) == 0:  # fall back to the doc's highest-df terms
+                    hot = cand[np.argsort(-df[cand])][:3]
+                if len(hot):
+                    break
+            nt = int(rng.integers(2, 4))
+            t = np.sort(rng.choice(hot, size=min(nt, len(hot)), replace=False))
+            r0 = corpus.doc_rects[d_i, anchor_rect[d_i]]
+            qx = float((r0[0] + r0[2]) * 0.5)
+            qy = float((r0[1] + r0[3]) * 0.5)
+            w = rng.uniform(0.002, 0.006)
+            rect = (
+                max(qx - w, 0.0), max(qy - w, 0.0),
+                min(qx + w, 1.0), min(qy + w, 1.0),
+            )
+        out.append(
+            TraceQuery(
+                terms=t.astype(np.int32),
+                rects=np.asarray([rect], dtype=np.float32),
+                amps=np.ones((1,), dtype=np.float32),
+            )
+        )
+    return out
+
+
 def make_uniform_trace(
     corpus: SynthCorpus,
     n_queries: int = 2048,
@@ -330,7 +454,9 @@ def make_uniform_trace(
     """Adversarial trace for the cache: every query distinct, no locality."""
     rng = np.random.default_rng(seed)
     return [
-        _one_query(rng, corpus, int(rng.integers(0, len(corpus.cities))), d_terms, q_rects)
+        _one_query(
+            rng, corpus, int(rng.integers(0, len(corpus.cities))), d_terms, q_rects
+        )
         for _ in range(n_queries)
     ]
 

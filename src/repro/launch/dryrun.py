@@ -149,8 +149,11 @@ def main() -> None:
                     if key in done:
                         continue
                     if shape.skip:
-                        print(f"SKIP  {spec.name} × {shape.name} × {mesh_name}: {shape.skip}",
-                              flush=True)
+                        print(
+                            f"SKIP  {spec.name} × {shape.name} × {mesh_name}: "
+                            f"{shape.skip}",
+                            flush=True,
+                        )
                         out.write(json.dumps({
                             "arch": spec.name, "shape": shape.name,
                             "mesh": mesh_name, "skipped": shape.skip,

@@ -20,7 +20,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     )
 
 
-def make_host_mesh(shape: tuple[int, ...] | None = None, axes: tuple[str, ...] | None = None):
+def make_host_mesh(
+    shape: tuple[int, ...] | None = None, axes: tuple[str, ...] | None = None
+):
     """Small mesh over whatever devices exist (tests / examples)."""
     n = len(jax.devices())
     if shape is None:

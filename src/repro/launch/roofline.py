@@ -150,8 +150,16 @@ class Roofline:
         }
 
 
-def analyze(compiled, *, arch: str, shape: str, mesh_name: str, n_devices: int,
-            model_flops: float, note: str = "") -> Roofline:
+def analyze(
+    compiled,
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    n_devices: int,
+    model_flops: float,
+    note: str = "",
+) -> Roofline:
     ca = compiled.cost_analysis() or {}
     ma = compiled.memory_analysis()
     hlo = compiled.as_text()

@@ -34,12 +34,24 @@ cannot beat the running top-C threshold are skipped before scoring, which
 shrinks the inverted-index probes and the streamed spatial bytes in the
 reported counters.
 
+``--algorithm auto`` turns on the cost-based planner
+(:mod:`repro.core.planner`): every miss is routed to the cheapest of
+text-first / geo-first / K-SWEEP from its posting-list lengths and
+footprint coverage, batcher buckets become plan-homogeneous (one compile
+per plan × shape), and the report breaks query counts, latency
+percentiles and byte counters down per plan.  ``--trace mixture``
+generates the bimodal workload (rare terms × huge footprints alongside
+hot terms × tiny footprints) where no fixed algorithm competes with
+per-query selection.
+
 Examples::
 
     python -m repro.launch.serve --trace zipf --cache landlord --batcher bucketed
     python -m repro.launch.serve --trace zipf --arrival poisson \\
         --rate-qps 200 --max-wait-ms 5 --slo-ms 50 --workers 4 --coalesce
     python -m repro.launch.serve --trace zipf --algo-prune --fused --cache none
+    python -m repro.launch.serve --trace mixture --algorithm auto \\
+        --grid 128 --m-intervals 8 --cache none
 """
 from __future__ import annotations
 
@@ -49,6 +61,7 @@ from repro.core import GeoSearchEngine, QueryBudgets
 from repro.corpus import (
     ARRIVAL_KINDS,
     make_corpus,
+    make_mixture_trace,
     make_uniform_trace,
     make_zipf_trace,
     stamp_arrivals,
@@ -64,7 +77,7 @@ from repro.serving import (
 
 def build_stack(args, corpus):
     budgets = QueryBudgets(
-        max_candidates=2048, max_tiles=256, k_sweeps=8,
+        max_candidates=2048, max_tiles=args.max_tiles, k_sweeps=8,
         sweep_budget=max(args.n_docs // 8, 256), top_k=args.top_k,
         prune=args.algo_prune,
     )
@@ -73,7 +86,7 @@ def build_stack(args, corpus):
         from repro.kernels.geo_score.ops import geo_score_toeprints
 
         kw = {"tp_scorer": geo_score_toeprints}
-    if args.fused and args.algorithm == "k_sweep":
+    if args.fused and args.algorithm in ("k_sweep", "auto"):
         kw["fused"] = True
     if args.shards > 1:
         executor = ShardedExecutor.build(
@@ -85,7 +98,8 @@ def build_stack(args, corpus):
     else:
         eng = GeoSearchEngine.build(
             corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
-            pagerank=corpus.pagerank, grid=args.grid, budgets=budgets,
+            pagerank=corpus.pagerank, grid=args.grid,
+            m_intervals=args.m_intervals, budgets=budgets,
         )
         executor = SingleDeviceExecutor(eng, args.algorithm, **kw)
 
@@ -113,56 +127,95 @@ def main() -> None:
     ap.add_argument("--n-docs", type=int, default=20000)
     ap.add_argument("--n-terms", type=int, default=2000)
     ap.add_argument("--grid", type=int, default=64)
+    ap.add_argument(
+        "--m-intervals", type=int, default=2,
+        help="toe-print intervals per tile (higher = tighter "
+        "spatial candidate streams; single-device only)",
+    )
+    ap.add_argument(
+        "--max-tiles", type=int, default=256,
+        help="per-rect tile enumeration budget",
+    )
     ap.add_argument("--queries", type=int, default=2048)
     ap.add_argument("--batch", type=int, default=32, help="max micro-batch size")
     ap.add_argument("--top-k", type=int, default=10)
-    ap.add_argument("--trace", default="zipf", choices=["zipf", "uniform"])
-    ap.add_argument("--pool-size", type=int, default=256,
-                    help="distinct queries in the zipf trace pool")
+    ap.add_argument("--trace", default="zipf", choices=["zipf", "uniform", "mixture"])
+    ap.add_argument(
+        "--pool-size", type=int, default=256,
+        help="distinct queries in the zipf trace pool",
+    )
     ap.add_argument("--cache", default="landlord", choices=["none", "lru", "landlord"])
     ap.add_argument("--cache-capacity", type=int, default=512)
-    ap.add_argument("--cache-max-bytes", type=float, default=None,
-                    help="landlord result-payload byte budget (size-aware admission)")
+    ap.add_argument(
+        "--cache-max-bytes", type=float, default=None,
+        help="landlord result-payload byte budget (size-aware admission)",
+    )
     ap.add_argument("--batcher", default="bucketed", choices=["bucketed", "fixed"])
-    ap.add_argument("--arrival", default="closed", choices=list(ARRIVAL_KINDS),
-                    help="closed-loop replay, or an open-loop arrival process "
-                         "(poisson | bursty MMPP on/off | diurnal sinusoid)")
-    ap.add_argument("--rate-qps", type=float, default=200.0,
-                    help="mean offered load for open-loop arrivals")
-    ap.add_argument("--max-wait-ms", type=float, default=None,
-                    help="deadline before a non-full bucket flushes anyway "
-                         "(0 = flush every query immediately; inf = count-only; "
-                         "default: inf closed-loop, 5 ms open-loop)")
-    ap.add_argument("--slo-ms", type=float, default=None,
-                    help="latency budget; report the fraction of queries under it")
-    ap.add_argument("--workers", type=int, default=1,
-                    help="parallel executor slots draining the dispatch queue "
-                         "(open-loop replay only; 1 = single busy server)")
-    ap.add_argument("--coalesce", action="store_true",
-                    help="subscribe duplicate queries to in-flight twin batches "
-                         "instead of re-executing them")
+    ap.add_argument(
+        "--arrival", default="closed", choices=list(ARRIVAL_KINDS),
+        help="closed-loop replay, or an open-loop arrival process "
+        "(poisson | bursty MMPP on/off | diurnal sinusoid)",
+    )
+    ap.add_argument(
+        "--rate-qps", type=float, default=200.0,
+        help="mean offered load for open-loop arrivals",
+    )
+    ap.add_argument(
+        "--max-wait-ms", type=float, default=None,
+        help="deadline before a non-full bucket flushes anyway "
+        "(0 = flush every query immediately; inf = count-only; "
+        "default: inf closed-loop, 5 ms open-loop)",
+    )
+    ap.add_argument(
+        "--slo-ms", type=float, default=None,
+        help="latency budget; report the fraction of queries under it",
+    )
+    ap.add_argument(
+        "--workers", type=int, default=1,
+        help="parallel executor slots draining the dispatch queue "
+        "(open-loop replay only; 1 = single busy server)",
+    )
+    ap.add_argument(
+        "--coalesce", action="store_true",
+        help="subscribe duplicate queries to in-flight twin batches "
+        "instead of re-executing them",
+    )
     ap.add_argument("--shards", type=int, default=1)
     ap.add_argument("--partition", default="geo", choices=["hash", "geo"])
-    ap.add_argument("--algorithm", default="k_sweep",
-                    choices=["text_first", "geo_first", "k_sweep"])
-    ap.add_argument("--use-pallas", action="store_true",
-                    help="score with the Pallas geo_score kernel (interpret on CPU)")
-    ap.add_argument("--algo-prune", action="store_true",
-                    help="block-max pruned K-SWEEP: skip sweep blocks whose "
-                         "upper bound cannot beat the running top-C threshold "
-                         "(fewer index probes + bytes streamed)")
-    ap.add_argument("--fused", action="store_true",
-                    help="run K-SWEEP through the fused Pallas sweep kernel "
-                         "(with --algo-prune: in-kernel sweep→score→select; "
-                         "interpret mode on CPU)")
-    ap.add_argument("--no-recall", action="store_true",
-                    help="skip the oracle recall check (slow on big corpora)")
+    ap.add_argument(
+        "--algorithm", default="k_sweep",
+        choices=["text_first", "geo_first", "k_sweep", "auto"],
+        help="fixed query algorithm, or 'auto' for per-query "
+        "cost-based plan selection",
+    )
+    ap.add_argument(
+        "--use-pallas", action="store_true",
+        help="score with the Pallas geo_score kernel (interpret on CPU)",
+    )
+    ap.add_argument(
+        "--algo-prune", action="store_true",
+        help="block-max pruned K-SWEEP: skip sweep blocks whose "
+        "upper bound cannot beat the running top-C threshold "
+        "(fewer index probes + bytes streamed)",
+    )
+    ap.add_argument(
+        "--fused", action="store_true",
+        help="run K-SWEEP through the fused Pallas sweep kernel "
+        "(with --algo-prune: in-kernel sweep→score→select; "
+        "interpret mode on CPU)",
+    )
+    ap.add_argument(
+        "--no-recall", action="store_true",
+        help="skip the oracle recall check (slow on big corpora)",
+    )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.arrival == "closed" and args.workers > 1:
         # fail before the (minutes-long) corpus + index build does
-        ap.error("--workers > 1 requires an open-loop --arrival "
-                 "(poisson | bursty | diurnal)")
+        ap.error(
+            "--workers > 1 requires an open-loop --arrival "
+            "(poisson | bursty | diurnal)"
+        )
     if args.max_wait_ms is None:
         # closed-loop: count-only batching (PR 1); open-loop: a live server
         # would never hold a half-full bucket for seconds
@@ -177,6 +230,8 @@ def main() -> None:
             corpus, n_queries=args.queries, pool_size=args.pool_size,
             seed=args.seed + 1,
         )
+    elif args.trace == "mixture":
+        trace = make_mixture_trace(corpus, n_queries=args.queries, seed=args.seed + 1)
     else:
         trace = make_uniform_trace(corpus, n_queries=args.queries, seed=args.seed + 1)
     if args.arrival != "closed":
@@ -202,12 +257,23 @@ def main() -> None:
             if isinstance(server.executor, SingleDeviceExecutor)
             else GeoSearchEngine.build(
                 corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
-                pagerank=corpus.pagerank, grid=args.grid, budgets=budgets,
+                pagerank=corpus.pagerank, grid=args.grid,
+                m_intervals=args.m_intervals, budgets=budgets,
             )
         )
-        probe = make_query_trace(corpus, n_queries=min(64, args.queries),
-                                 seed=args.seed + 2)
-        kw = {"fused": True} if args.fused and args.algorithm == "k_sweep" else {}
+        if args.trace == "mixture":
+            from repro.corpus import pad_trace_batch
+
+            probe = pad_trace_batch(trace[: min(64, len(trace))])
+        else:
+            probe = make_query_trace(
+                corpus, n_queries=min(64, args.queries), seed=args.seed + 2
+            )
+        kw = (
+            {"fused": True}
+            if args.fused and args.algorithm in ("k_sweep", "auto")
+            else {}
+        )
         rec = eng.recall_at_k(probe, args.algorithm, **kw)
         print(f"recall@{budgets.top_k} vs oracle = {rec:.3f}")
 

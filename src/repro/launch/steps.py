@@ -267,10 +267,14 @@ def _recsys_batch_specs(cfg, B: int, mesh) -> dict:
     if name == "TwoTowerConfig":
         return {
             "user_id": _sds((B,), jnp.int32, mesh, ("batch",)),
-            "user_fields": _sds((B, cfg.n_user_fields), jnp.int32, mesh, ("batch", None)),
+            "user_fields": _sds(
+                (B, cfg.n_user_fields), jnp.int32, mesh, ("batch", None)
+            ),
             "history": _sds((B, cfg.hist_len), jnp.int32, mesh, ("batch", None)),
             "target": _sds((B,), jnp.int32, mesh, ("batch",)),
-            "item_fields": _sds((B, cfg.n_item_fields), jnp.int32, mesh, ("batch", None)),
+            "item_fields": _sds(
+                (B, cfg.n_item_fields), jnp.int32, mesh, ("batch", None)
+            ),
             "logq": _sds((B,), jnp.float32, mesh, ("batch",)),
         }
     raise ValueError(name)
@@ -309,7 +313,9 @@ def _recsys_flops(cfg, B: int, train: bool) -> float:
         per += 2 * F * d_in
     elif name == "BSTConfig":
         D, S = cfg.embed_dim, cfg.seq_len + 1
-        per = cfg.n_blocks * (4 * 2 * S * D * D + 2 * 2 * S * S * D + 2 * 2 * S * D * 4 * D)
+        per = cfg.n_blocks * (
+            4 * 2 * S * D * D + 2 * 2 * S * S * D + 2 * 2 * S * D * 4 * D
+        )
         d_in = S * D + cfg.n_other_fields * D
         dims = [d_in, *cfg.mlp_dims, 1]
         per += sum(2 * a * b for a, b in zip(dims[:-1], dims[1:]))
@@ -351,8 +357,10 @@ def build_recsys_cell(spec: ArchSpec, shape: ShapeSpec, mesh, opt_cfg=None) -> C
     if shape.kind == "recsys_train":
         B = p["batch"]
         opt_cfg = opt_cfg or OptimizerConfig(zero1=True)
-        step = make_train_step(lambda prm, b: loss(prm, b), opt_cfg, jit=False,
-                               moment_shardings=_moment_shardings(pshapes, mesh))
+        step = make_train_step(
+            lambda prm, b: loss(prm, b), opt_cfg, jit=False,
+            moment_shardings=_moment_shardings(pshapes, mesh),
+        )
         batch = _recsys_batch_specs(cfg, B, mesh)
         return Cell(
             spec.name, shape.name, step,
@@ -387,7 +395,9 @@ def build_recsys_cell(spec: ArchSpec, shape: ShapeSpec, mesh, opt_cfg=None) -> C
             batch = _recsys_batch_specs(cfg, B, mesh)
             batch.pop("label", None)
             cand_ids = _sds((Nc,), jnp.int32, mesh, ("candidates",))
-            cand_fields = _sds((Nc, cfg.n_item_fields), jnp.int32, mesh, ("candidates", None))
+            cand_fields = _sds(
+                (Nc, cfg.n_item_fields), jnp.int32, mesh, ("candidates", None)
+            )
             return Cell(
                 spec.name, shape.name, fn, (pshapes, batch, cand_ids, cand_fields),
                 model_flops=_two_tower_retrieval_flops(cfg, B, Nc),
@@ -412,6 +422,33 @@ def build_recsys_cell(spec: ArchSpec, shape: ShapeSpec, mesh, opt_cfg=None) -> C
 # geoweb cells (the paper's system)
 # ---------------------------------------------------------------------------
 
+I32_SAFE_MAX = 2**30  # see _check_i32_addressable below
+
+
+def _check_i32_addressable(name: str, value: int, n_shards: int) -> int:
+    """Guard the engine's int32 index arithmetic at production scale.
+
+    Every posting/toe-print position in the query pipeline is int32 (CSR
+    offsets, binary-search bounds, sweep starts).  At the paper's full
+    scale (2^26 docs × 128 postings = 2^33 global postings) a shard's
+    store only stays addressable because the mesh provides enough doc
+    shards; with too few shards the offsets' top entries and the search
+    positions silently wrap negative.  The bound is 2^30 — not 2^31−1 —
+    so intermediate index *sums* (e.g. ``start + budget``, the bisection
+    bounds) keep headroom too.  Fails loudly at cell-construction time
+    with the minimum shard count instead of lowering a program that
+    would return garbage.
+    """
+    if value > I32_SAFE_MAX:
+        need = -(-value * n_shards // I32_SAFE_MAX)
+        raise ValueError(
+            f"geoweb cell: per-shard {name} = {value:,} exceeds the int32-"
+            f"addressable bound 2^30; shard the docs over >= {need} devices "
+            f"(mesh provides {n_shards}) or shrink the config"
+        )
+    return value
+
+
 def build_geoweb_cell(spec: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
     from repro.core import algorithms as alg
     from repro.core.distributed import make_serve_fn, ShardedGeoIndex
@@ -423,8 +460,10 @@ def build_geoweb_cell(spec: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
     q_axis = "model"
     S = int(np.prod([mesh.shape[a] for a in doc_axes]))
     N = cfg.n_docs // S  # docs per shard
-    Tt = N * cfg.max_rects  # toe prints per shard
-    Pp = N * cfg.avg_postings_per_doc
+    Tt = _check_i32_addressable(
+        "toe prints", N * cfg.max_rects, S
+    )  # toe prints per shard
+    Pp = _check_i32_addressable("postings", N * cfg.avg_postings_per_doc, S)
     G2 = cfg.grid * cfg.grid
     R = cfg.doc_major_rects
     M = cfg.n_terms
@@ -476,7 +515,11 @@ def build_geoweb_cell(spec: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
 
 
 def build_cell(
-    spec: ArchSpec, shape: ShapeSpec, mesh, opt_cfg=None, lm_overrides: dict | None = None
+    spec: ArchSpec,
+    shape: ShapeSpec,
+    mesh,
+    opt_cfg=None,
+    lm_overrides: dict | None = None,
 ) -> Cell:
     if spec.family == "lm":
         return build_lm_cell(spec, shape, mesh, opt_cfg, lm_overrides)

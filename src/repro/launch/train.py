@@ -25,13 +25,17 @@ from repro.train.optimizer import OptimizerConfig, init_opt_state
 
 def loss_and_batch_fns(spec, cfg, batch_size: int, seq_len: int, seed: int):
     if spec.family == "lm":
-        dc = LMDataConfig(vocab=cfg.vocab, seq_len=seq_len, global_batch=batch_size, seed=seed)
+        dc = LMDataConfig(
+            vocab=cfg.vocab, seq_len=seq_len, global_batch=batch_size, seed=seed
+        )
         return (
             lambda p, b: tf_lib.loss_fn(cfg, p, b),
             lambda step: lm_batch(dc, step),
         )
     if spec.family == "gnn":
-        g = make_powerlaw_graph(512, 2048, cfg.d_feat, n_classes=max(cfg.n_classes, 1), seed=seed)
+        g = make_powerlaw_graph(
+            512, 2048, cfg.d_feat, n_classes=max(cfg.n_classes, 1), seed=seed
+        )
         batch = full_graph_batch(g, edge_multiple=8)
         return (lambda p, b: egnn_lib.loss_fn(cfg, p, b), lambda step: batch)
     if spec.family == "recsys":
@@ -39,7 +43,9 @@ def loss_and_batch_fns(spec, cfg, batch_size: int, seq_len: int, seed: int):
         if name == "DCNv2Config":
             return (
                 lambda p, b: rec_lib.dcn_v2_loss(cfg, p, b),
-                lambda step: ctr_batch(batch_size, cfg.n_dense, cfg.vocab_sizes, seed, step),
+                lambda step: ctr_batch(
+                    batch_size, cfg.n_dense, cfg.vocab_sizes, seed, step
+                ),
             )
         if name == "AutoIntConfig":
             return (
@@ -49,15 +55,19 @@ def loss_and_batch_fns(spec, cfg, batch_size: int, seq_len: int, seed: int):
         if name == "BSTConfig":
             return (
                 lambda p, b: rec_lib.bst_loss(cfg, p, b),
-                lambda step: bst_batch(batch_size, cfg.n_items, cfg.seq_len,
-                                       cfg.n_other_fields, cfg.field_vocab, seed, step),
+                lambda step: bst_batch(
+                    batch_size, cfg.n_items, cfg.seq_len,
+                    cfg.n_other_fields, cfg.field_vocab, seed, step,
+                ),
             )
         if name == "TwoTowerConfig":
             return (
                 lambda p, b: rec_lib.two_tower_loss(cfg, p, b),
-                lambda step: two_tower_batch(batch_size, cfg.n_users, cfg.n_items,
-                                             cfg.n_user_fields, cfg.n_item_fields,
-                                             cfg.field_vocab, cfg.hist_len, seed, step),
+                lambda step: two_tower_batch(
+                    batch_size, cfg.n_users, cfg.n_items,
+                    cfg.n_user_fields, cfg.n_item_fields,
+                    cfg.field_vocab, cfg.hist_len, seed, step,
+                ),
             )
     raise ValueError(spec.family)
 
@@ -83,9 +93,13 @@ def main() -> None:
     cfg = spec.config if args.full else spec.smoke_config
 
     mesh = make_host_mesh() if len(jax.devices()) > 1 else None
-    opt = OptimizerConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5 + 1),
-                          total_steps=args.steps)
-    loss_fn, batch_fn = loss_and_batch_fns(spec, cfg, args.batch_size, args.seq_len, args.seed)
+    opt = OptimizerConfig(
+        lr=args.lr, warmup_steps=min(20, args.steps // 5 + 1),
+        total_steps=args.steps,
+    )
+    loss_fn, batch_fn = loss_and_batch_fns(
+        spec, cfg, args.batch_size, args.seq_len, args.seed
+    )
 
     with use_sharding(mesh):
         step_fn = make_train_step(loss_fn, opt, microbatches=args.microbatches)

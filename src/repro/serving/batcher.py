@@ -15,8 +15,17 @@ two batch sizes) and pads every incoming query up to the nearest bucket:
   rect cells inside real queries) feed the serving report's
   ``padding_overhead`` column.
 
+Buckets are additionally *plan-homogeneous*: when the serving layer runs a
+cost-based planner (``--algo auto``), each query carries its chosen
+:class:`~repro.core.planner.QueryPlan` and the plan joins the bucket key —
+a flushed batch holds one plan only, so the executor compiles once per
+plan × shape and runs every row under its own chosen algorithm.  Fixed-
+algorithm serving leaves ``plan`` as ``None`` and behaves bit-identically
+to the pre-planner batcher.
+
 Invariants (unit-tested): every emitted batch's shape is in the registered
-set, and every submitted query appears in exactly one emitted batch.
+set, every submitted query appears in exactly one emitted batch, and every
+query in an emitted batch shares the batch's plan.
 """
 from __future__ import annotations
 
@@ -40,6 +49,7 @@ class PendingQuery:
     terms: np.ndarray  # i32[d]  (no padding)
     rects: np.ndarray  # f32[r, 4]
     amps: np.ndarray  # f32[r]
+    plan: object = None  # QueryPlan chosen by the planner (None = fixed)
 
 
 @dataclass
@@ -51,6 +61,7 @@ class RawBatch:
     terms: np.ndarray  # i32[B, d]
     rects: np.ndarray  # f32[B, r, 4]
     amps: np.ndarray  # f32[B, r]
+    plan: object = None  # the plan every query in this batch shares
 
     @property
     def n_real(self) -> int:
@@ -82,7 +93,7 @@ class ShapeBucketedBatcher:
         self.term_buckets = self.term_buckets or _pow2_buckets(self.max_terms)
         self.rect_buckets = self.rect_buckets or _pow2_buckets(self.max_rects)
         self.batch_sizes = self.batch_sizes or _pow2_buckets(self.max_batch)
-        self._pending: dict[tuple[int, int], list[PendingQuery]] = {}
+        self._pending: dict[tuple, list[PendingQuery]] = {}
         # padding accounting
         self.pad_slots = 0  # dummy whole-query rows
         self.real_slots = 0
@@ -118,9 +129,14 @@ class ShapeBucketedBatcher:
                 return b
         raise ValueError(f"query dimension {n} exceeds largest bucket {buckets[-1]}")
 
-    def _key_of(self, q: PendingQuery) -> tuple[int, int]:
-        """The (term, rect) bucket a query lands in."""
+    def _key_of(self, q: PendingQuery) -> tuple:
+        """The (plan, term, rect) bucket a query lands in.
+
+        The plan leads the key so buckets are plan-homogeneous: one flushed
+        batch = one compiled plan × shape.
+        """
         return (
+            q.plan,
             self._bucket_of(max(len(q.terms), 1), self.term_buckets),
             self._bucket_of(max(len(q.rects), 1), self.rect_buckets),
         )
@@ -141,8 +157,8 @@ class ShapeBucketedBatcher:
         return out
 
     # ------------------------------------------------------------------
-    def _emit(self, key: tuple[int, int], qs: list[PendingQuery]) -> RawBatch:
-        d, r = key
+    def _emit(self, key: tuple, qs: list[PendingQuery]) -> RawBatch:
+        plan, d, r = key
         B = self._bucket_of(len(qs), self.batch_sizes)
         shape = BucketShape(B, d, r)
         terms = np.full((B, d), -1, dtype=np.int32)
@@ -160,7 +176,7 @@ class ShapeBucketedBatcher:
         self.pad_slots += B - len(qs)
         self.real_slots += len(qs)
         self.emitted_shapes.add(shape)
-        return RawBatch(shape, [q.qid for q in qs], terms, rects, amps)
+        return RawBatch(shape, [q.qid for q in qs], terms, rects, amps, plan)
 
     # ------------------------------------------------------------------
     @property
@@ -205,7 +221,7 @@ class DeadlineBatcher(ShapeBucketedBatcher):
         super().__post_init__()
         if self.max_wait_s < 0:
             raise ValueError("max_wait_s must be >= 0 (inf = count-only)")
-        self._oldest: dict[tuple[int, int], float] = {}
+        self._oldest: dict[tuple, float] = {}
 
     # ------------------------------------------------------------------
     def add(self, q: PendingQuery, now: float = 0.0) -> list[RawBatch]:
@@ -234,8 +250,12 @@ class DeadlineBatcher(ShapeBucketedBatcher):
         """
         if self.max_wait_s == float("inf"):
             return []
+        # key=t only: bucket keys lead with a QueryPlan (unorderable), so a
+        # tied deadline must fall back to stable insertion order, not key
+        # comparison
         ripe = sorted(
-            (t, k) for k, t in self._oldest.items() if t + self.max_wait_s <= now
+            ((t, k) for k, t in self._oldest.items() if t + self.max_wait_s <= now),
+            key=lambda tk: tk[0],
         )
         out = []
         for _, key in ripe:

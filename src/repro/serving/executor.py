@@ -1,4 +1,4 @@
-"""Batch executors: single-device and doc-sharded scatter-gather.
+"""Batch executors: single-device, doc-sharded scatter-gather, SPMD mesh.
 
 The executor is the serving layer's view of the engine: it takes a padded
 :class:`~repro.core.algorithms.QueryBatch` and returns a
@@ -12,13 +12,17 @@ The executor is the serving layer's view of the engine: it takes a padded
   lists into a global top-k by a k-way merge.  Per-query merge traffic is
   O(k · S), independent of corpus size — the property that lets the
   architecture scale out.
+* :class:`MeshExecutor` is the SPMD twin: one ``shard_map`` serve step per
+  plan, with the per-stage byte counters *measured inside the step* and
+  psum-reduced over the doc axes.
 
-  On a multi-device runtime each shard's engine naturally lands on its own
-  device; on a single host the scatter loop degrades gracefully to a
-  sequential sweep over shards (the mesh-parallel ``shard_map`` variant
-  lives in :func:`repro.core.distributed.make_serve_fn`).  Either way the
-  merged results are equivalent to a single-device engine over the full
-  corpus — unit-tested in ``tests/test_serving.py``.
+Plan-driven execution: every executor accepts ``run(batch, plan=...)``
+with a :class:`~repro.core.planner.QueryPlan`, and ``algorithm="auto"``
+builds a cost-based planner over the executor's corpus so the serving
+layer can ask :meth:`plan_query` for each query's cheapest pipeline
+before batching (plan-homogeneous buckets → one compile per plan×shape).
+Fixed-algorithm executors return ``None`` from :meth:`plan_query` and run
+exactly as before.
 """
 from __future__ import annotations
 
@@ -30,6 +34,7 @@ from repro.core import algorithms as alg
 from repro.core import ranking
 from repro.core.distributed import partition_order
 from repro.core.engine import GeoSearchEngine
+from repro.core.planner import CostModel, Planner, QueryPlan
 from repro.core.text_index import global_idf_np, rescale_impacts_to_global
 
 
@@ -40,12 +45,27 @@ class SingleDeviceExecutor:
         self.engine = engine
         self.algorithm = algorithm
         self.kw = kw
+        self.planner: Planner | None = None
+        if algorithm == "auto":
+            self.planner = Planner.from_engine(
+                engine, fused=bool(kw.get("fused", False))
+            )
 
     @property
     def top_k(self) -> int:
         return self.engine.budgets.top_k
 
-    def run(self, batch: alg.QueryBatch) -> alg.TopKResult:
+    def plan_query(self, terms, rects, amps) -> QueryPlan | None:
+        """Cheapest plan for one query; ``None`` when the algorithm is fixed."""
+        if self.planner is None:
+            return None
+        return self.planner.plan_query(terms, rects, amps)
+
+    def run(
+        self, batch: alg.QueryBatch, plan: QueryPlan | None = None
+    ) -> alg.TopKResult:
+        if plan is not None:
+            return self.engine.query(batch, plan=plan, **self.kw)
         return self.engine.query(batch, self.algorithm, **self.kw)
 
 
@@ -57,6 +77,19 @@ class ShardedExecutor:
         self.global_ids: list[np.ndarray] = global_ids  # per shard: local → global
         self.algorithm = algorithm
         self.kw = kw
+        self.planner: Planner | None = None
+        if algorithm == "auto":
+            # corpus-global features: df and tile coverage summed over the
+            # shards, block metadata concatenated
+            model = CostModel.from_shards(
+                [e.index for e in engines], engines[0].budgets
+            )
+            self.planner = Planner(
+                model=model,
+                candidates=Planner.make_candidates(
+                    engines[0].budgets, fused=bool(kw.get("fused", False))
+                ),
+            )
 
     @property
     def n_shards(self) -> int:
@@ -65,6 +98,11 @@ class ShardedExecutor:
     @property
     def top_k(self) -> int:
         return self.engines[0].budgets.top_k
+
+    def plan_query(self, terms, rects, amps) -> QueryPlan | None:
+        if self.planner is None:
+            return None
+        return self.planner.plan_query(terms, rects, amps)
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -109,12 +147,19 @@ class ShardedExecutor:
         return ShardedExecutor(engines, gids, algorithm, **kw)
 
     # ------------------------------------------------------------------
-    def run(self, batch: alg.QueryBatch) -> alg.TopKResult:
+    def run(
+        self, batch: alg.QueryBatch, plan: QueryPlan | None = None
+    ) -> alg.TopKResult:
         """Scatter the batch to all shards; gather + merge local top-k."""
         all_ids, all_scores = [], []
         stats_acc: dict[str, np.ndarray] = {}
         for eng, gid in zip(self.engines, self.global_ids):
-            res = eng.query(batch, self.algorithm, **self.kw)
+            if plan is not None:
+                # each shard engine re-clamps the plan's sweep budget to
+                # its own toe-print store inside _compiled
+                res = eng.query(batch, plan=plan, **self.kw)
+            else:
+                res = eng.query(batch, self.algorithm, **self.kw)
             ids = np.asarray(res.ids)
             scores = np.asarray(res.scores).copy()
             valid = ids >= 0
@@ -137,7 +182,7 @@ class ShardedExecutor:
 
 
 class MeshExecutor:
-    """SPMD executor: one ``shard_map`` serve step over a device mesh.
+    """SPMD executor: one ``shard_map`` serve step per plan over a mesh.
 
     The mesh-parallel twin of :class:`ShardedExecutor` — the same doc-wise
     partitioning, but all shards execute concurrently on their own devices
@@ -151,15 +196,15 @@ class MeshExecutor:
     --xla_force_host_platform_device_count=N``); exercised by the
     subprocess tests in ``tests/test_distributed.py``.
 
-    Per-stage byte counters: the jit'd ``shard_map`` step only returns
-    ``(ids, scores)`` — hauling the data-dependent stats arrays through the
-    collectives would put host bookkeeping on the hot path.  Instead
-    ``run`` models the counters host-side from the batch shape and the
-    per-shard capacity budgets (every sweep reads its full
-    ``sweep_budget``, every candidate slot probes), using the same keys as
-    :class:`ShardedExecutor`'s measured stats.  The model is a per-shard
-    *capacity upper bound* of the measured counters — asserted against the
-    other executors in ``tests/test_serving.py``.
+    Per-stage byte counters are **measured inside the step**: each shard's
+    per-query stats vectors are psum-reduced over the doc axes and ride
+    back with the ids/scores (``make_serve_fn(with_stats=True)``), so mesh
+    serving reports exact traffic — the same numbers the host-side
+    executors measure, asserted equal in ``tests/test_serving.py``.
+
+    Serve steps are compiled lazily per plan: the fixed-algorithm step at
+    construction, and one step per distinct :class:`QueryPlan` the planner
+    selects under ``algorithm="auto"``.
     """
 
     def __init__(
@@ -172,15 +217,30 @@ class MeshExecutor:
         algorithm: str = "k_sweep",
         n_rect_slots: int = 4,
         block_size: int = 128,
+        weights: ranking.RankWeights | None = None,
+        doc_axes: tuple[str, ...] = ("data",),
+        query_axis: str = "model",
+        fused: bool = False,
     ):
         self.mesh = mesh
-        self._serve = serve_fn
         self._index = sharded_index
         self.top_k = top_k
         self.budgets = budgets or alg.QueryBudgets(top_k=top_k)
         self.algorithm = algorithm
         self.n_rect_slots = n_rect_slots  # doc footprint slots (R)
         self.block_size = block_size  # block-max metadata granularity
+        self.weights = weights or ranking.RankWeights()
+        self.doc_axes = doc_axes
+        self.query_axis = query_axis
+        self.fused = fused
+        # plan (or None = the construction-time fixed config) → serve step
+        self._serve_fns: dict = {None: serve_fn}
+        self.planner: Planner | None = None
+        if algorithm == "auto":
+            self.planner = Planner(
+                model=CostModel.from_sharded_index(sharded_index, self.budgets),
+                candidates=Planner.make_candidates(self.budgets, fused=fused),
+            )
 
     @staticmethod
     def build(
@@ -216,110 +276,67 @@ class MeshExecutor:
             budgets,
             sweep_budget=min(budgets.sweep_budget, sharded.tp_rects.shape[1]),
         )
+        weights = weights or ranking.RankWeights()
+        serve_algorithm = "k_sweep" if algorithm == "auto" else algorithm
         serve = make_serve_fn(
-            mesh, budgets, weights or ranking.RankWeights(),
+            mesh, budgets, weights,
             doc_axes=doc_axes, query_axis=query_axis,
-            algorithm=algorithm, grid=grid, n_terms=n_terms,
+            algorithm=serve_algorithm, grid=grid, n_terms=n_terms,
             fused=fused, block_size=sharded.block_size,
+            with_stats=True,
         )
         return MeshExecutor(
             mesh, serve, sharded, budgets.top_k,
             budgets=budgets, algorithm=algorithm,
             n_rect_slots=doc_rects.shape[1],
             block_size=sharded.block_size,
+            weights=weights, doc_axes=doc_axes, query_axis=query_axis,
+            fused=fused,
         )
 
     @property
     def n_shards(self) -> int:
         return self._index.n_shards
 
-    @property
-    def n_postings(self) -> int:
-        """Per-shard posting-store length (padded to the largest shard)."""
-        return int(self._index.postings.shape[1])
+    def plan_query(self, terms, rects, amps) -> QueryPlan | None:
+        if self.planner is None:
+            return None
+        return self.planner.plan_query(terms, rects, amps)
 
-    def _model_stats(self, batch: alg.QueryBatch) -> dict[str, np.ndarray]:
-        """Host-side per-query byte counters (capacity model, per shard × S).
+    def _serve_for(self, plan: QueryPlan | None):
+        """The (lazily compiled) shard_map serve step for a plan."""
+        if plan in self._serve_fns:
+            return self._serve_fns[plan]
+        from repro.core.distributed import make_serve_fn
 
-        Mirrors the stats keys of :mod:`repro.core.algorithms` for the
-        configured algorithm.  Data-dependent quantities (sweeps fetched,
-        unique candidates) are replaced by their budget capacities —
-        ``k_sweeps`` full sweeps, ``max_candidates`` candidate slots —
-        which is what each device's fixed-shape pipeline actually streams
-        through memory; only the real term count per query is measured
-        from the batch itself.  Every query executes against all ``S``
-        doc shards, so the per-shard model is scaled by ``n_shards``.
-        """
-        terms = np.asarray(batch.terms)
-        B = terms.shape[0]
-        n_terms_real = (terms >= 0).sum(axis=-1).astype(np.float64)  # [B]
-        S = float(self.n_shards)
-        bud = self.budgets
-        R = self.n_rect_slots
-        logp = float(np.ceil(np.log2(max(self.n_postings, 2))))
-        if self.algorithm == "k_sweep":
-            sweeps = np.full(B, float(bud.k_sweeps))
-            fetched = sweeps * bud.sweep_budget
-            # early termination / pruning cap the candidate set before text
-            # probing; without them every fetched toe print may probe
-            select = bud.early_termination or bud.prune
-            n_uniq = (
-                np.minimum(fetched, float(bud.max_candidates))
-                if select
-                else fetched
-            )
-            # streamed-block capacity: whole TILE-aligned windows (+1 tile
-            # of alignment slop on the pruned/fused path), in metadata-block
-            # units; data-dependent skips are modeled as zero savings
-            from repro.kernels.sweep_score.kernel import TILE as tile
+        budgets = replace(
+            plan.budgets,
+            sweep_budget=min(
+                plan.budgets.sweep_budget, self._index.tp_rects.shape[1]
+            ),
+        )
+        serve = make_serve_fn(
+            self.mesh, budgets, self.weights,
+            doc_axes=self.doc_axes, query_axis=self.query_axis,
+            algorithm=plan.algorithm, grid=self._index.grid,
+            n_terms=self._index.n_terms, fused=plan.fused,
+            block_size=self._index.block_size, with_stats=True,
+        )
+        self._serve_fns[plan] = serve
+        return serve
 
-            pad_budget = -(-bud.sweep_budget // tile) * tile + tile
-            blocks_total = float(bud.k_sweeps * (pad_budget // self.block_size))
-            stats = {
-                "candidates": fetched,
-                "sweeps": sweeps,
-                "bytes_spatial": fetched * alg.TP_BYTES,
-                "sweep_slack": np.zeros(B),
-                "bytes_scored": n_uniq * alg.TP_BYTES,
-                "blocks_total": np.full(B, blocks_total),
-                "blocks_skipped": np.zeros(B),
-                "probes_saved": np.zeros(B),
-                "bytes_postings": n_uniq * logp * alg.POSTING_BYTES,
-                "seeks": sweeps + n_terms_real,
-                "n_probes": n_uniq * n_terms_real,
-                "bytes_seq": fetched * alg.TP_BYTES,
-                "bytes_random": n_uniq * n_terms_real * 32,
-            }
-        elif self.algorithm == "text_first":
-            n_c = np.full(B, float(bud.max_candidates))
-            n_probes = n_c * np.maximum(n_terms_real - 1, 0.0)
-            stats = {
-                "candidates": n_c,
-                "bytes_spatial": n_c * R * (16 + 4),
-                "bytes_postings": n_c * alg.POSTING_BYTES
-                + bud.max_candidates * alg.POSTING_BYTES,
-                "fetch_runs": n_c,
-                "seeks": n_c + n_terms_real,
-                "n_probes": n_probes,
-                "bytes_seq": np.full(B, float(bud.max_candidates))
-                * alg.POSTING_BYTES,
-                "bytes_random": n_c * R * (16 + 4) + n_probes * 32,
-            }
-        else:  # geo_first
-            n_c = np.full(B, float(bud.max_candidates))
-            stats = {
-                "candidates": n_c,
-                "bytes_spatial": n_c * 4 + n_c * R * (16 + 4),
-                "bytes_postings": n_c * logp * alg.POSTING_BYTES,
-                "seeks": 2 * n_c,
-                "n_probes": n_c * n_terms_real,
-                "bytes_seq": np.zeros(B),
-                "bytes_random": n_c * 4 + n_c * R * (16 + 4)
-                + n_c * n_terms_real * 32,
-            }
-        return {k: v * S for k, v in stats.items()}
-
-    def run(self, batch: alg.QueryBatch) -> alg.TopKResult:
+    def run(
+        self, batch: alg.QueryBatch, plan: QueryPlan | None = None
+    ) -> alg.TopKResult:
+        serve = self._serve_for(plan)
         with self.mesh:
-            ids, scores = self._serve(self._index, batch)
-        return alg.TopKResult(ids=ids, scores=scores, stats=self._model_stats(batch))
+            out = serve(self._index, batch)
+        if len(out) == 3:
+            ids, scores, stats = out
+        else:  # hand-built executor around a stats-less make_serve_fn
+            (ids, scores), stats = out, {}
+        return alg.TopKResult(
+            ids=ids,
+            scores=scores,
+            stats={k: np.asarray(v) for k, v in stats.items()},
+        )

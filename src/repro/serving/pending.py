@@ -46,6 +46,7 @@ class PendingEntry:
     start_t: float | None = None
     done_t: float | None = None
     value: object | None = None  # owner's QueryResult row, set at dispatch
+    plan_label: str | None = None  # plan that served the owner's batch
     # (arrival_s, trace index) of duplicates that subscribed while the
     # owner was still in a batcher bucket (timing unknown at subscribe time)
     subscribers: list[tuple[float, int]] = field(default_factory=list)

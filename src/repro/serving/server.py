@@ -9,17 +9,26 @@ One query's life:
 3. **coalesce check** (optional) — a miss whose fingerprint is already in
    a queued or executing batch *subscribes* to that batch's pending result
    (:mod:`repro.serving.pending`) instead of re-enqueueing.
-4. **batcher** — remaining misses queue in their (terms, rects) shape
-   bucket; the bucket flushes when it fills *or* when its oldest query's
-   deadline (``max_wait_s``) expires
+4. **planner** (optional) — when the executor runs ``algorithm="auto"``,
+   the miss is routed through the cost-based planner
+   (:mod:`repro.core.planner`): cheap host-side features pick the
+   cheapest :class:`QueryPlan` (text-first / geo-first / K-SWEEP) for
+   *this* query.  Fixed-algorithm executors skip this stage (plan
+   ``None``), bit-identically to the pre-planner server.
+5. **batcher** — remaining misses queue in their (plan, terms, rects)
+   bucket — buckets are *plan-homogeneous*, so a flushed batch compiles
+   and runs one plan only; the bucket flushes when it fills *or* when its
+   oldest query's deadline (``max_wait_s``) expires
    (:class:`~repro.serving.batcher.DeadlineBatcher`).
-5. **dispatch queue → workers** — flushed batches enter a FIFO dispatch
+6. **dispatch queue → workers** — flushed batches enter a FIFO dispatch
    queue; each of ``n_workers`` executor slots picks up the next batch
    when free, so sharded/mesh executor batches can overlap.
-6. **executor** — the batch runs on the engine (single device or sharded
-   scatter-gather); per-query rows are scattered back to their submitters
-   and to any coalesced subscribers.
-7. **cache fill** — each executed query's result is inserted with its
+7. **executor** — the batch runs on the engine (single device or sharded
+   scatter-gather) under the batch's plan; per-query rows are scattered
+   back to their submitters and to any coalesced subscribers, and the
+   batch's byte counters / latencies are attributed to its plan in the
+   report's per-plan breakdown.
+8. **cache fill** — each executed query's result is inserted with its
    *cost* (its share of the batch's measured execution time — the Landlord
    eviction credit) and its *size* (the top-k payload bytes — the Landlord
    byte-budget admission input).
@@ -106,6 +115,12 @@ class ServeReport:
     service_s: list[float] = field(default_factory=list)
     # dispatch timeline, one entry per executed batch in dispatch order
     batch_events: list[BatchEvent] = field(default_factory=list)
+    # per-plan attribution: executed/coalesced query counts, latencies and
+    # summed byte counters keyed by plan label (fixed-algorithm serving
+    # attributes everything to the executor's single algorithm)
+    plan_queries: dict = field(default_factory=dict)  # label -> int
+    plan_latencies_s: dict = field(default_factory=dict)  # label -> [float]
+    plan_stats: dict = field(default_factory=dict)  # label -> {ctr: float}
     # per-trace-position results (run_trace(collect_results=True) only)
     results: list | None = None
     arrival: str = "closed"
@@ -145,6 +160,17 @@ class ServeReport:
             return 0.0
         return float(np.percentile(np.asarray(xs), p) * 1e3)
 
+    def plan_percentile_ms(self, label: str, p: float) -> float:
+        """Latency percentile of the queries served under one plan."""
+        xs = self.plan_latencies_s.get(label)
+        if not xs:
+            return 0.0
+        return float(np.percentile(np.asarray(xs), p) * 1e3)
+
+    def _record_plan(self, label: str, latency_s: float) -> None:
+        self.plan_queries[label] = self.plan_queries.get(label, 0) + 1
+        self.plan_latencies_s.setdefault(label, []).append(latency_s)
+
     def summary(self) -> str:
         per_q = {
             k: v / max(self.n_queries, 1)
@@ -159,6 +185,14 @@ class ServeReport:
             f"elem_padding={self.element_padding_overhead:.3f}  "
             f"shapes={self.n_compiled_shapes}"
         ]
+        if len(self.plan_queries) > 1:
+            mix = "  ".join(
+                f"{label}={n} (p50/p99="
+                f"{self.plan_percentile_ms(label, 50):.3f}/"
+                f"{self.plan_percentile_ms(label, 99):.3f}ms)"
+                for label, n in sorted(self.plan_queries.items())
+            )
+            lines.append(f"plans: {mix}")
         if self.batch_wait_s:
             decomp = "  ".join(
                 f"{stage}_p50/p99={self.stage_percentile_ms(stage, 50):.3f}/"
@@ -200,6 +234,10 @@ class GeoServer:
         self.coalesce = coalesce
         # qid → (fingerprint key, arrival time, trace position)
         self._inflight: dict[int, tuple[tuple, float, int]] = {}
+        # id(TraceQuery) → QueryPlan, per run_trace: the warmup's shape
+        # prediction and the live loop plan the same objects, and zipf
+        # traces repeat pool entries — plan each object once
+        self._plan_cache: dict[int, object] = {}
         self._next_qid = 0
         # per-worker busy-until times (virtual seconds, open loop)
         self._workers: list[float] = [0.0] * n_workers
@@ -253,6 +291,7 @@ class GeoServer:
             )
         report = ServeReport(arrival=arrival, slo_ms=slo_ms)
         report.n_workers = self.n_workers
+        self._plan_cache.clear()  # trace objects may be reused across runs
         if collect_results:
             report.results = [None] * len(trace)
         if warmup and trace:
@@ -284,6 +323,26 @@ class GeoServer:
         key = query_fingerprint(q.terms, q.rects, q.amps, quant=self.fingerprint_quant)
         hit = self.cache.get(key) if self.cache is not None else None
         return key, hit
+
+    def _plan_for(self, q: TraceQuery):
+        """Ask the executor's planner for this query's plan (None = fixed).
+
+        Memoized by trace-object identity for the current ``run_trace`` —
+        the warmup replay and the live loop see the same objects (and zipf
+        traces repeat them), so each query is planned exactly once.
+        """
+        plan_fn = getattr(self.executor, "plan_query", None)
+        if plan_fn is None:
+            return None
+        key = id(q)
+        if key not in self._plan_cache:
+            self._plan_cache[key] = plan_fn(q.terms, q.rects, q.amps)
+        return self._plan_cache[key]
+
+    def _plan_label(self, raw: RawBatch) -> str:
+        if raw.plan is not None:
+            return raw.plan.label
+        return getattr(self.executor, "algorithm", "fixed")
 
     @staticmethod
     def _set_result(report: ServeReport, idx: int, value) -> None:
@@ -327,7 +386,7 @@ class GeoServer:
             self._inflight[qid] = (key, t_arr, idx)
             if self._pending is not None:
                 self._pending.register(key, qid)
-            pending = PendingQuery(qid, q.terms, q.rects, q.amps)
+            pending = PendingQuery(qid, q.terms, q.rects, q.amps, self._plan_for(q))
             raws = (
                 self.batcher.add(pending, t_arr)
                 if deadline_aware
@@ -407,7 +466,8 @@ class GeoServer:
             self._inflight[qid] = (key, now, idx)
             if self._pending is not None:
                 self._pending.register(key, qid)
-            for raw in b.add(PendingQuery(qid, q.terms, q.rects, q.amps), now):
+            pq = PendingQuery(qid, q.terms, q.rects, q.amps, self._plan_for(q))
+            for raw in b.add(pq, now):
                 self._execute_open(raw, report, flush_t=now, service_time=service_time)
             report.n_queries += 1
         # drain: fire remaining finite deadlines in order, then the
@@ -451,10 +511,13 @@ class GeoServer:
         queue_wait = max(entry.start_t - max(t_arr, entry.flush_t), 0.0)
         service = entry.done_t - max(t_arr, entry.start_t)
         self._record(report, entry.done_t - t_arr, batch_wait, queue_wait, service)
+        if entry.plan_label is not None:
+            report._record_plan(entry.plan_label, entry.done_t - t_arr)
         self._set_result(report, idx, entry.value)
 
     def _predict_shapes(self, trace: list[TraceQuery], open_loop: bool) -> set:
-        """Replay cache + batcher decisions (no execution) → emitted shapes.
+        """Replay cache + batcher decisions (no execution) → emitted
+        (plan, shape) pairs — the compile units of a planned server.
 
         Exact for LRU and for Landlord without eviction pressure; under
         pressure Landlord's cost/size-dependent evictions may diverge, and
@@ -479,7 +542,7 @@ class GeoServer:
 
         def emit(raws):
             for raw in raws:
-                shapes.add(raw.shape)
+                shapes.add((raw.plan, raw.shape))
                 for qid in raw.qids:
                     key = pending.pop(qid)
                     inflight_keys.discard(key)
@@ -502,7 +565,7 @@ class GeoServer:
                 return
             pending[qid] = key
             inflight_keys.add(key)
-            p = PendingQuery(qid, q.terms, q.rects, q.amps)
+            p = PendingQuery(qid, q.terms, q.rects, q.amps, self._plan_for(q))
             emit(batcher.add(p, now) if deadline_aware else batcher.add(p))
             qid += 1
 
@@ -526,22 +589,25 @@ class GeoServer:
         return shapes
 
     def _warmup(self, trace: list[TraceQuery], open_loop: bool = False) -> None:
-        """Pre-compile every predicted batch shape with an inert batch."""
-        for shape in sorted(
+        """Pre-compile every predicted (plan, shape) with an inert batch."""
+        for plan, shape in sorted(
             self._predict_shapes(trace, open_loop),
-            key=lambda s: (s.batch, s.d_terms, s.q_rects),
+            key=lambda ps: (repr(ps[0]), ps[1].batch, ps[1].d_terms, ps[1].q_rects),
         ):
             terms = np.full((shape.batch, shape.d_terms), -1, dtype=np.int32)
             rects = np.zeros((shape.batch, shape.q_rects, 4), dtype=np.float32)
             rects[:, :, 0] = 1.0
             rects[:, :, 1] = 1.0
             amps = np.zeros((shape.batch, shape.q_rects), dtype=np.float32)
-            res = self.executor.run(
-                alg.QueryBatch(
-                    terms=jnp.asarray(terms),
-                    rects=jnp.asarray(rects),
-                    amps=jnp.asarray(amps),
-                )
+            batch = alg.QueryBatch(
+                terms=jnp.asarray(terms),
+                rects=jnp.asarray(rects),
+                amps=jnp.asarray(amps),
+            )
+            res = (
+                self.executor.run(batch, plan=plan)
+                if plan is not None
+                else self.executor.run(batch)
             )
             jax.block_until_ready(res.scores)
 
@@ -555,18 +621,22 @@ class GeoServer:
 
     # ------------------------------------------------------------------
     def _finish_batch(self, raw: RawBatch, report: ServeReport):
-        """Run the executor; return host results + per-row payload bytes."""
-        res = self.executor.run(self._to_query_batch(raw))
+        """Run the executor under the batch's plan; return host results."""
+        if raw.plan is not None:
+            res = self.executor.run(self._to_query_batch(raw), plan=raw.plan)
+        else:
+            res = self.executor.run(self._to_query_batch(raw))
         ids = np.asarray(res.ids)
         scores = np.asarray(res.scores)
         report.n_batches += 1
         report.shapes_used.add(raw.shape)
+        pstats = report.plan_stats.setdefault(self._plan_label(raw), {})
         for key, v in res.stats.items():
             # only the real rows' work is attributable to served queries,
             # but padded rows burn real bytes too — count everything
-            report.stats[key] = report.stats.get(key, 0.0) + float(
-                np.asarray(v, dtype=np.float64).sum()
-            )
+            total = float(np.asarray(v, dtype=np.float64).sum())
+            report.stats[key] = report.stats.get(key, 0.0) + total
+            pstats[key] = pstats.get(key, 0.0) + total
         return ids, scores
 
     def _execute(
@@ -588,11 +658,13 @@ class GeoServer:
         report.batch_events.append(
             BatchEvent(flush_t, t_exec, t_done, 0, raw.n_real)
         )
+        label = self._plan_label(raw)
         for row, qid in enumerate(raw.qids):
             key, t_arr, idx = self._inflight.pop(qid)
             self._record(
                 report, t_done - t_arr, flush_t - t_arr, t_exec - flush_t, service
             )
+            report._record_plan(label, t_done - t_arr)
             need_value = (
                 report.results is not None
                 or self.cache is not None
@@ -620,6 +692,7 @@ class GeoServer:
                             t_exec - flush_t,
                             service,
                         )
+                        report._record_plan(label, t_done - t_sub)
                         self._set_result(report, sub_idx, value)
                     entry.subscribers.clear()
 
@@ -662,9 +735,11 @@ class GeoServer:
         self._workers[w] = done
         report.batch_events.append(BatchEvent(flush_t, start, done, w, raw.n_real))
         cost = dt / max(raw.n_real, 1)
+        label = self._plan_label(raw)
         for row, qid in enumerate(raw.qids):
             key, t_arr, idx = self._inflight.pop(qid)
             self._record(report, done - t_arr, flush_t - t_arr, start - flush_t, dt)
+            report._record_plan(label, done - t_arr)
             need_value = (
                 report.results is not None
                 or self.cache is not None
@@ -686,6 +761,7 @@ class GeoServer:
                     key, qid, flush_t, start, done, value
                 )
                 if entry is not None:
+                    entry.plan_label = label
                     # resolve duplicates that subscribed while this query
                     # sat in its batcher bucket; later duplicates (arriving
                     # before `done`) are recorded directly at lookup time
