@@ -12,6 +12,12 @@ performance regressed beyond noise:
   genuine "batcher stopped batching" regression lands in the hundreds of
   ms to seconds and clears the floor easily).
 * **QPS** — fail when ``current < qps_factor × baseline``.
+* **Telemetry overhead** — the ``serve_telemetry_overhead`` row carries
+  ``qps_ratio`` (telemetry-on QPS / telemetry-off QPS, best-of-3 each);
+  fail when the *current* run's ratio drops below ``overhead_floor``
+  (default 0.95 — i.e. the full obs stack must cost <5% QPS).  This is an
+  absolute gate on the fresh run, not a baseline comparison: the ratio is
+  already self-normalised.
 
 Rows present in the baseline but missing from the current run fail too (a
 silently dropped benchmark is how gates rot).  Rows present in the new run
@@ -50,6 +56,7 @@ def compare(
     qps_factor: float = 0.5,
     slack_ms: float = 25.0,
     min_fail_ms: float = 250.0,
+    overhead_floor: float = 0.95,
 ) -> tuple[list[str], list[str]]:
     """Return ``(failures, warnings)`` — the gate passes iff no failures.
 
@@ -85,6 +92,13 @@ def compare(
                     f"{name}: qps {c_qps:.0f} < floor {floor:.0f} "
                     f"({qps_factor}x baseline {b_qps:.0f})"
                 )
+    ratio = current.get("serve_telemetry_overhead", {}).get("qps_ratio")
+    if ratio is not None and ratio < overhead_floor:
+        failures.append(
+            f"serve_telemetry_overhead: qps_ratio {ratio:.3f} < floor "
+            f"{overhead_floor} (telemetry-on must keep >= "
+            f"{overhead_floor:.0%} of telemetry-off QPS)"
+        )
     return failures, warnings
 
 
@@ -97,6 +111,8 @@ def main() -> None:
     ap.add_argument("--slack-ms", type=float, default=25.0)
     ap.add_argument("--min-fail-ms", type=float, default=250.0,
                     help="p99 below this never fails (one-off stall immunity)")
+    ap.add_argument("--overhead-floor", type=float, default=0.95,
+                    help="min telemetry-on/off QPS ratio (obs overhead gate)")
     args = ap.parse_args()
 
     baseline = load_rows(args.baseline)
@@ -105,6 +121,7 @@ def main() -> None:
         baseline, current,
         p99_factor=args.p99_factor, qps_factor=args.qps_factor,
         slack_ms=args.slack_ms, min_fail_ms=args.min_fail_ms,
+        overhead_floor=args.overhead_floor,
     )
     for name in sorted(set(baseline) & set(current)):
         b, c = baseline[name], current[name]

@@ -262,6 +262,45 @@ def bench_planner(quick: bool) -> None:
         f"plan_mix={'/'.join(f'{k}:{v}' for k, v in sorted(mix.items()))}",
     )
 
+    # planner audit: how well do the cost model's per-query counter
+    # predictions match what the executors actually measure?  One row per
+    # algorithm, mean relative error per counter before vs after
+    # CostModel.calibrate on this same mixture batch (the serving-time
+    # audit log computes the identical quantity online; see
+    # repro.obs.audit.PlannerAudit.error_summary).
+    from repro.core.planner import COST_KEYS
+
+    planner = eng.planner
+    model = planner.model
+    terms = np.asarray(batch.terms)
+    rects = np.asarray(batch.rects)
+    amps = np.asarray(batch.amps)
+    feats = [model.features(terms[b], rects[b], amps[b]) for b in range(B)]
+
+    def _audit_errors() -> dict:
+        errs = {}
+        for plan in planner.candidates:
+            res = eng.query(batch, plan=plan)
+            pred = [model.estimate(plan, f) for f in feats]
+            for k in COST_KEYS:
+                meas = np.asarray(res.stats[k], np.float64).reshape(B, -1).sum(axis=1)
+                p = np.array([e[k] for e in pred])
+                errs[(plan.algorithm, k)] = float(
+                    (np.abs(p - meas) / np.maximum(meas, 1.0)).mean()
+                )
+        return errs
+
+    before = _audit_errors()
+    model.calibrate(eng, batch, planner.candidates)
+    after = _audit_errors()
+    for plan in planner.candidates:
+        algo = plan.algorithm
+        derived = ";".join(
+            f"{k}_err={before[(algo, k)]:.3f};{k}_err_cal={after[(algo, k)]:.3f}"
+            for k in COST_KEYS
+        )
+        _row(f"planner_audit_{algo}", 0.0, derived)
+
 
 def bench_k_sensitivity(quick: bool) -> None:
     from repro.core import GeoSearchEngine, QueryBudgets

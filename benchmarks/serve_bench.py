@@ -235,6 +235,33 @@ def main() -> None:
         tag = "on" if coal else "off"
         report_row(f"serving_workers_{n_workers}_coalesce_{tag}", rep)
 
+    # telemetry overhead: the identical closed-loop zipf run with the obs
+    # stack off vs fully on (metrics + spans + events).  No cache, so every
+    # query pays the per-query recording path.  Best-of-3 per side so one
+    # background hiccup cannot fake an overhead regression; the qps_ratio
+    # row is gated in compare_baseline (must stay >= its floor).
+    from repro.obs import Telemetry
+
+    def _best_run(make_telemetry):
+        best = None
+        for _ in range(3):
+            server = GeoServer(
+                single, cache=None, batcher=batcher(),
+                telemetry=make_telemetry() if make_telemetry else None,
+            )
+            rep = server.run_trace(zipf)
+            if best is None or rep.qps > best.qps:
+                best = rep
+        return best
+
+    rep_off = _best_run(None)
+    rep_on = _best_run(Telemetry)
+    single.engine.metrics = None  # detach from the shared engine
+    report_row("serve_telemetry_off", rep_off)
+    report_row("serve_telemetry_on", rep_on)
+    ratio = rep_on.qps / rep_off.qps if rep_off.qps else 0.0
+    _row("serve_telemetry_overhead", 0.0, f"qps_ratio={ratio:.3f}")
+
     sharded = ShardedExecutor.build(
         corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
         pagerank=corpus.pagerank, n_shards=2 if smoke else 4, partition="geo",

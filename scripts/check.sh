@@ -9,9 +9,9 @@ cd "$(dirname "$0")/.."
 if command -v ruff >/dev/null 2>&1; then
   echo "== ruff lint =="
   ruff check .
-  echo "== ruff format check (serving + core + kernels + launch + corpus) =="
+  echo "== ruff format check (serving + core + kernels + launch + corpus + obs) =="
   ruff format --check src/repro/serving src/repro/core src/repro/kernels \
-    src/repro/launch src/repro/corpus benchmarks/compare_baseline.py
+    src/repro/launch src/repro/corpus src/repro/obs benchmarks/compare_baseline.py
 else
   echo "== ruff not installed; skipping lint (CI runs it) =="
 fi
@@ -30,5 +30,16 @@ echo "== benchmark baseline comparison =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.compare_baseline \
   benchmarks/baseline_smoke.json "$smoke_json"
 rm -f "$smoke_json"
+
+echo "== telemetry smoke serve + trace validation =="
+tel_dir="$(mktemp -d /tmp/serve_telemetry.XXXXXX)"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.launch.serve \
+  --n-docs 800 --n-terms 300 --queries 96 --batch 8 --pool-size 24 \
+  --arrival poisson --rate-qps 400 --workers 2 --coalesce \
+  --algorithm auto --no-recall \
+  --trace-out "$tel_dir/trace.json" --metrics-out "$tel_dir/metrics.prom" \
+  --audit-out "$tel_dir/audit.jsonl" --events-out "$tel_dir/events.jsonl"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.obs.validate "$tel_dir/trace.json"
+rm -rf "$tel_dir"
 
 echo "== OK =="

@@ -187,6 +187,11 @@ class GeoSearchEngine:
         cache = self.__dict__.setdefault("_fn_cache", {})
         key = (plan, kw_key)
         if key not in cache:
+            # metrics registry is attached by the serving layer's
+            # attach_telemetry; each distinct plan x kw jit program counts
+            m = getattr(self, "metrics", None)
+            if m is not None:
+                m.inc("engine.compiled_fns_total")
             fn = alg.get_algorithm(plan.algorithm)
             kw = {**plan.engine_kw(), **dict(kw_key)}
             # a plan's budgets may come from another shard's engine: sweeps

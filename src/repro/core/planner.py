@@ -16,8 +16,8 @@ hashable: they key the engine's compiled-function cache, the serving
 batcher's buckets (a flushed batch compiles once per plan × shape), and the
 ``ServeReport`` per-plan attribution.
 
-Cost-model features (all O(d + NB) numpy per query, no device work)
--------------------------------------------------------------------
+Cost-model features (cheap host-side numpy per query, no device work)
+---------------------------------------------------------------------
 * ``df_min`` / ``df_sum`` — posting-list lengths of the query terms from the
   :class:`~repro.core.text_index.TextIndex` CSR offsets (the df table is
   precomputed once at planner build).  ``df_min`` is the TEXT-FIRST driver
@@ -32,7 +32,10 @@ Cost-model features (all O(d + NB) numpy per query, no device work)
   metadata* (``blk_mbr`` + per-block occupancy): every block whose MBR
   touches the footprint lies inside the span K-SWEEP's coalesced streams
   must cover, which sizes its streamed volume and its sweep-capacity
-  truncation risk.
+  truncation risk.  Block candidates come from a coarse bbox grid built
+  once over the block MBRs (cell → block CSR), so the exact MBR test runs
+  on the footprint's cells' blocks only, not all NB blocks; the probe
+  count is published as the ``planner.tp_span_probe`` metric.
 
 Per-algorithm cost estimates mirror the stats formulas the executors
 measure (:mod:`repro.core.algorithms`): predicted ``n_probes``,
@@ -55,7 +58,7 @@ the feature split alone separates the regimes above.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import asdict, dataclass, field
 
 import numpy as np
 
@@ -66,6 +69,8 @@ from repro.core.spatial_index import INVALID
 # objective keys: the per-stage counters every algorithm reports
 COST_KEYS = ("n_probes", "bytes_postings", "bytes_spatial")
 _SCALE_CLIP = 16.0
+# coarse bbox-grid resolution for the tp_span candidate lookup
+_SPAN_GRID = 16
 
 
 @dataclass(frozen=True)
@@ -131,6 +136,64 @@ class CostModel:
     budgets: alg.QueryBudgets
     # (algorithm, counter) -> multiplicative calibration scale
     scales: dict = field(default_factory=dict)
+    # metrics registry (repro.obs) attached by the serving layer; None =
+    # the planner publishes nothing
+    metrics: object = None
+    # cumulative exact MBR tests performed by the tp_span candidate path
+    tp_span_probes: int = 0
+
+    def __post_init__(self) -> None:
+        # Coarse bbox grid over the occupied block MBRs: cell -> block-id
+        # CSR.  Replaces the O(NB) all-blocks scan in features(): a query
+        # rect gathers candidate blocks from its covered coarse cells and
+        # runs the exact MBR ∩ rect test on those only.  Exact because the
+        # cell mapping is clamped and monotone with NO upper-edge epsilon
+        # on either side: any point in MBR ∩ rect lands in a cell covered
+        # by both, so candidates are a superset of the true hits (boundary
+        # over-coverage only adds candidates, never drops one), and zero-
+        # count blocks contribute nothing to the span sum either way.
+        G = _SPAN_GRID
+        occ = np.flatnonzero(np.asarray(self.blk_count) > 0)
+        m = np.asarray(self.blk_mbr, np.float64)
+        if len(occ):
+            ix0, iy0, ix1, iy1 = _coarse_cells(m[occ], G)
+            w, h = ix1 - ix0 + 1, iy1 - iy0 + 1
+            ok = (w > 0) & (h > 0)  # inverted MBRs (padding) cover nothing
+            occ, ix0, iy0, w, h = occ[ok], ix0[ok], iy0[ok], w[ok], h[ok]
+        if len(occ):
+            reps = w * h
+            blocks = np.repeat(occ, reps)
+            # per-entry (dx, dy) offset within its block's cell range
+            first = np.concatenate(([0], np.cumsum(reps)[:-1]))
+            k = np.arange(int(reps.sum())) - np.repeat(first, reps)
+            wv = np.repeat(w, reps)
+            cells = (np.repeat(iy0, reps) + k // wv) * G + (
+                np.repeat(ix0, reps) + k % wv
+            )
+            order = np.argsort(cells, kind="stable")
+            self._span_blocks = blocks[order]
+            self._span_offsets = np.zeros(G * G + 1, np.int64)
+            np.cumsum(np.bincount(cells, minlength=G * G), out=self._span_offsets[1:])
+        else:
+            self._span_blocks = np.zeros((0,), np.int64)
+            self._span_offsets = np.zeros(G * G + 1, np.int64)
+
+    def _span_candidates(self, r: np.ndarray) -> np.ndarray:
+        """Block ids whose coarse cells the query rects touch (superset of
+        the blocks whose MBR intersects any rect)."""
+        G = _SPAN_GRID
+        ix0, iy0, ix1, iy1 = _coarse_cells(r, G)
+        parts = []
+        for j in range(len(r)):
+            for cy in range(int(iy0[j]), int(iy1[j]) + 1):
+                base = cy * G
+                s = self._span_offsets[base + int(ix0[j])]
+                e = self._span_offsets[base + int(ix1[j]) + 1]
+                if e > s:
+                    parts.append(self._span_blocks[s:e])
+        if not parts:
+            return np.zeros((0,), np.int64)
+        return np.unique(np.concatenate(parts))
 
     # ------------------------------------------------------------------
     # construction
@@ -250,17 +313,25 @@ class CostModel:
         if len(r) and len(self.blk_mbr):
             # Morton-span estimate for K-SWEEP's contiguous streams: every
             # metadata block whose MBR touches the footprint lies inside
-            # the span the coalesced sweeps must cover
-            m = self.blk_mbr.astype(np.float64)
-            hit = (
-                (np.minimum(m[None, :, 2], r[:, None, 2])
-                 >= np.maximum(m[None, :, 0], r[:, None, 0]))
-                & (np.minimum(m[None, :, 3], r[:, None, 3])
-                   >= np.maximum(m[None, :, 1], r[:, None, 1]))
-            ).any(axis=0)
-            tp_span = float(
-                np.minimum((hit * self.blk_count).sum(), self.n_toeprints)
-            )
+            # the span the coalesced sweeps must cover.  The coarse bbox
+            # grid narrows the exact MBR test to the blocks sharing a cell
+            # with the footprint — same sum as the old all-blocks scan
+            # (superset argument in __post_init__), O(candidates) not O(NB)
+            cand = self._span_candidates(r)
+            self.tp_span_probes += len(cand)
+            if self.metrics is not None:
+                self.metrics.inc("planner.tp_span_probe", float(len(cand)))
+            if len(cand):
+                m = self.blk_mbr[cand].astype(np.float64)
+                hit = (
+                    (np.minimum(m[None, :, 2], r[:, None, 2])
+                     >= np.maximum(m[None, :, 0], r[:, None, 0]))
+                    & (np.minimum(m[None, :, 3], r[:, None, 3])
+                       >= np.maximum(m[None, :, 1], r[:, None, 1]))
+                ).any(axis=0)
+                tp_span = float(
+                    np.minimum((hit * self.blk_count[cand]).sum(), self.n_toeprints)
+                )
         return QueryFeatures(
             n_terms=int(len(t)),
             df_min=float(dfs.min()) if len(dfs) else 0.0,
@@ -439,6 +510,37 @@ class Planner:
                 best, best_cost = plan, c
         return best
 
+    def explain(self, terms, rects, amps) -> dict:
+        """The full planning decision for one query, as plain data.
+
+        Returns ``{"features": {...}, "candidates": {label: {algorithm,
+        n_probes, bytes_postings, bytes_spatial, truncation, cost}},
+        "chosen": label}`` — the planner-audit record the serving layer
+        persists.  The chosen label matches :meth:`plan_query` exactly
+        (same costs, same stable tie-break order).
+        """
+        f = self.model.features(terms, rects, amps)
+        candidates: dict[str, dict] = {}
+        best, best_cost = None, float("inf")
+        for plan in self.candidates:
+            est = self.model.estimate(plan, f)
+            trunc = self.model.truncation(plan, f)
+            c = (
+                self.w_probes * est["n_probes"]
+                + self.w_postings * est["bytes_postings"]
+                + self.w_spatial * est["bytes_spatial"]
+                + self.w_truncation * trunc
+            )
+            candidates[plan.label] = {
+                "algorithm": plan.algorithm,
+                **est,
+                "truncation": trunc,
+                "cost": c,
+            }
+            if c < best_cost:
+                best, best_cost = plan.label, c
+        return {"features": asdict(f), "candidates": candidates, "chosen": best}
+
     def plan_rows(self, batch: alg.QueryBatch) -> list[QueryPlan]:
         """One plan per row of a padded :class:`QueryBatch`."""
         terms = np.asarray(batch.terms)
@@ -448,6 +550,23 @@ class Planner:
             self.plan_query(terms[b], rects[b], amps[b])
             for b in range(terms.shape[0])
         ]
+
+
+def _coarse_cells(rects: np.ndarray, grid: int):
+    """Clamped inclusive cell bounds ``(ix0, iy0, ix1, iy1)`` on the coarse
+    span grid — deliberately WITHOUT :func:`geometry.rect_cell_bounds_np`'s
+    upper-edge epsilon, so an edge exactly on a cell boundary also claims
+    the next cell.  Over-coverage keeps the candidate set a superset of the
+    true MBR hits (the exactness requirement); degenerate (zero-area) block
+    MBRs still cover their point's cell, while inverted (padding) MBRs come
+    back with ``ix1 < ix0`` and cover nothing.
+    """
+    g = float(grid)
+    ix0 = np.clip(np.floor(rects[..., 0] * g).astype(np.int64), 0, grid - 1)
+    iy0 = np.clip(np.floor(rects[..., 1] * g).astype(np.int64), 0, grid - 1)
+    ix1 = np.clip(np.floor(rects[..., 2] * g).astype(np.int64), 0, grid - 1)
+    iy1 = np.clip(np.floor(rects[..., 3] * g).astype(np.int64), 0, grid - 1)
+    return ix0, iy0, ix1, iy1
 
 
 def _block_counts(n_toeprints: int, block_size: int, blk_mbr: np.ndarray):

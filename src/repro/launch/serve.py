@@ -34,6 +34,16 @@ cannot beat the running top-C threshold are skipped before scoring, which
 shrinks the inverted-index probes and the streamed spatial bytes in the
 reported counters.
 
+Telemetry (``--trace-out/--metrics-out/--audit-out/--events-out``): any of
+these flags builds the server with a :class:`repro.obs.Telemetry` handle
+and exports, post-run, a Chrome/Perfetto ``trace_event`` JSON of every
+query/batch/executor span (open it at https://ui.perfetto.dev), a metrics
+snapshot (Prometheus text for ``.prom``/``.txt`` paths, JSON otherwise),
+the planner audit JSONL (predicted vs measured cost per planned query;
+``--algorithm auto`` only), and the flush/dispatch/complete/evict/coalesce
+event JSONL.  Without the flags the server runs telemetry-free (zero
+overhead).
+
 ``--algorithm auto`` turns on the cost-based planner
 (:mod:`repro.core.planner`): every miss is routed to the cheapest of
 text-first / geo-first / K-SWEEP from its posting-list lengths and
@@ -73,6 +83,42 @@ from repro.serving import (
     SingleDeviceExecutor,
     make_cache,
 )
+
+
+def build_telemetry(args):
+    """A :class:`repro.obs.Telemetry` handle, or None when no export path
+    was requested (the server then runs the telemetry-free code path)."""
+    if not (args.trace_out or args.metrics_out or args.audit_out or args.events_out):
+        return None
+    from repro.obs import Telemetry
+
+    return Telemetry()
+
+
+def export_telemetry(tel, args) -> None:
+    import json
+
+    if args.trace_out:
+        tel.tracer.write(args.trace_out)
+        print(f"trace ({len(tel.tracer.queries)} query spans) → {args.trace_out}")
+    if args.metrics_out:
+        if args.metrics_out.endswith((".prom", ".txt")):
+            with open(args.metrics_out, "w") as f:
+                f.write(tel.metrics.to_prometheus())
+        else:
+            with open(args.metrics_out, "w") as f:
+                json.dump(tel.metrics.to_json(), f, indent=2)
+        print(f"metrics → {args.metrics_out}")
+    if args.audit_out:
+        tel.audit.to_jsonl(args.audit_out)
+        errs = tel.audit.error_summary()
+        joined = len(tel.audit.joined)
+        print(f"planner audit ({joined} joined records) → {args.audit_out}")
+        for (algo, counter), e in sorted(errs.items()):
+            print(f"  pred-error {algo}/{counter}: {e:.3f}")
+    if args.events_out:
+        tel.events.to_jsonl(args.events_out)
+        print(f"events ({len(tel.events)}) → {args.events_out}")
 
 
 def build_stack(args, corpus):
@@ -118,6 +164,7 @@ def build_stack(args, corpus):
     server = GeoServer(
         executor, cache=cache, batcher=batcher,
         n_workers=args.workers, coalesce=args.coalesce,
+        telemetry=build_telemetry(args),
     )
     return server, budgets
 
@@ -208,6 +255,25 @@ def main() -> None:
         "--no-recall", action="store_true",
         help="skip the oracle recall check (slow on big corpora)",
     )
+    ap.add_argument(
+        "--trace-out", default=None, metavar="PATH",
+        help="write per-query/batch/executor spans as Chrome/Perfetto "
+        "trace_event JSON",
+    )
+    ap.add_argument(
+        "--metrics-out", default=None, metavar="PATH",
+        help="write the metrics registry snapshot (.prom/.txt = "
+        "Prometheus text format, otherwise JSON)",
+    )
+    ap.add_argument(
+        "--audit-out", default=None, metavar="PATH",
+        help="write the planner audit JSONL (predicted vs measured cost "
+        "per planned query; --algorithm auto only)",
+    )
+    ap.add_argument(
+        "--events-out", default=None, metavar="PATH",
+        help="write flush/dispatch/complete/evict/coalesce events as JSONL",
+    )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.arrival == "closed" and args.workers > 1:
@@ -248,6 +314,8 @@ def main() -> None:
     )
     report = server.run_trace(trace, arrival=args.arrival, slo_ms=args.slo_ms)
     print(report.summary())
+    if server.telemetry:
+        export_telemetry(server.telemetry, args)
 
     if not args.no_recall:
         from repro.corpus import make_query_trace

@@ -23,6 +23,15 @@ layer can ask :meth:`plan_query` for each query's cheapest pipeline
 before batching (plan-homogeneous buckets → one compile per plan×shape).
 Fixed-algorithm executors return ``None`` from :meth:`plan_query` and run
 exactly as before.
+
+Telemetry: every executor exposes :meth:`attach_telemetry` (the server
+calls it when built with a :class:`~repro.obs.Telemetry` handle).  With a
+tracer attached, executors record **wall-clock** spans on the trace's
+executor process — the engine call for :class:`SingleDeviceExecutor`, one
+span per shard of :class:`ShardedExecutor`'s sequential scatter-gather
+loop, and the mesh step for :class:`MeshExecutor` — and route their
+engines' compile counters / the planner's probe counters into the metrics
+registry.  ``telemetry=None`` (the default) leaves ``run`` untouched.
 """
 from __future__ import annotations
 
@@ -45,6 +54,7 @@ class SingleDeviceExecutor:
         self.engine = engine
         self.algorithm = algorithm
         self.kw = kw
+        self.telemetry = None
         self.planner: Planner | None = None
         if algorithm == "auto":
             self.planner = Planner.from_engine(
@@ -55,6 +65,13 @@ class SingleDeviceExecutor:
     def top_k(self) -> int:
         return self.engine.budgets.top_k
 
+    def attach_telemetry(self, telemetry) -> None:
+        self.telemetry = telemetry
+        if telemetry and telemetry.metrics is not None:
+            self.engine.metrics = telemetry.metrics
+            if self.planner is not None:
+                self.planner.model.metrics = telemetry.metrics
+
     def plan_query(self, terms, rects, amps) -> QueryPlan | None:
         """Cheapest plan for one query; ``None`` when the algorithm is fixed."""
         if self.planner is None:
@@ -64,9 +81,19 @@ class SingleDeviceExecutor:
     def run(
         self, batch: alg.QueryBatch, plan: QueryPlan | None = None
     ) -> alg.TopKResult:
+        tracer = self.telemetry.tracer if self.telemetry else None
+        t0 = tracer.wall_now() if tracer is not None else 0.0
         if plan is not None:
-            return self.engine.query(batch, plan=plan, **self.kw)
-        return self.engine.query(batch, self.algorithm, **self.kw)
+            res = self.engine.query(batch, plan=plan, **self.kw)
+        else:
+            res = self.engine.query(batch, self.algorithm, **self.kw)
+        if tracer is not None:
+            label = plan.label if plan is not None else self.algorithm
+            tracer.span(
+                "engine", f"query[{label}]", t0, tracer.wall_now(),
+                args={"batch": int(batch.terms.shape[0])},
+            )
+        return res
 
 
 class ShardedExecutor:
@@ -77,6 +104,7 @@ class ShardedExecutor:
         self.global_ids: list[np.ndarray] = global_ids  # per shard: local → global
         self.algorithm = algorithm
         self.kw = kw
+        self.telemetry = None
         self.planner: Planner | None = None
         if algorithm == "auto":
             # corpus-global features: df and tile coverage summed over the
@@ -98,6 +126,14 @@ class ShardedExecutor:
     @property
     def top_k(self) -> int:
         return self.engines[0].budgets.top_k
+
+    def attach_telemetry(self, telemetry) -> None:
+        self.telemetry = telemetry
+        if telemetry and telemetry.metrics is not None:
+            for eng in self.engines:
+                eng.metrics = telemetry.metrics
+            if self.planner is not None:
+                self.planner.model.metrics = telemetry.metrics
 
     def plan_query(self, terms, rects, amps) -> QueryPlan | None:
         if self.planner is None:
@@ -153,7 +189,10 @@ class ShardedExecutor:
         """Scatter the batch to all shards; gather + merge local top-k."""
         all_ids, all_scores = [], []
         stats_acc: dict[str, np.ndarray] = {}
-        for eng, gid in zip(self.engines, self.global_ids):
+        tracer = self.telemetry.tracer if self.telemetry else None
+        label = plan.label if plan is not None else self.algorithm
+        for shard, (eng, gid) in enumerate(zip(self.engines, self.global_ids)):
+            t0 = tracer.wall_now() if tracer is not None else 0.0
             if plan is not None:
                 # each shard engine re-clamps the plan's sweep budget to
                 # its own toe-print store inside _compiled
@@ -170,6 +209,13 @@ class ShardedExecutor:
             for key, v in res.stats.items():
                 v = np.asarray(v, dtype=np.float64)
                 stats_acc[key] = stats_acc.get(key, 0.0) + v
+            if tracer is not None:
+                # ids/scores were just pulled to host, so the span covers
+                # this shard's real execution, not only its dispatch
+                tracer.span(
+                    f"shard {shard}", f"query[{label}]", t0, tracer.wall_now(),
+                    args={"batch": int(batch.terms.shape[0])},
+                )
         k = all_ids[0].shape[-1]
         ids = np.concatenate(all_ids, axis=-1)  # [B, S*k]
         scores = np.concatenate(all_scores, axis=-1)
@@ -235,6 +281,7 @@ class MeshExecutor:
         self.fused = fused
         # plan (or None = the construction-time fixed config) → serve step
         self._serve_fns: dict = {None: serve_fn}
+        self.telemetry = None
         self.planner: Planner | None = None
         if algorithm == "auto":
             self.planner = Planner(
@@ -298,6 +345,12 @@ class MeshExecutor:
     def n_shards(self) -> int:
         return self._index.n_shards
 
+    def attach_telemetry(self, telemetry) -> None:
+        self.telemetry = telemetry
+        if telemetry and telemetry.metrics is not None:
+            if self.planner is not None:
+                self.planner.model.metrics = telemetry.metrics
+
     def plan_query(self, terms, rects, amps) -> QueryPlan | None:
         if self.planner is None:
             return None
@@ -307,6 +360,8 @@ class MeshExecutor:
         """The (lazily compiled) shard_map serve step for a plan."""
         if plan in self._serve_fns:
             return self._serve_fns[plan]
+        if self.telemetry and self.telemetry.metrics is not None:
+            self.telemetry.metrics.inc("engine.compiled_fns_total")
         from repro.core.distributed import make_serve_fn
 
         budgets = replace(
@@ -329,8 +384,16 @@ class MeshExecutor:
         self, batch: alg.QueryBatch, plan: QueryPlan | None = None
     ) -> alg.TopKResult:
         serve = self._serve_for(plan)
+        tracer = self.telemetry.tracer if self.telemetry else None
+        t0 = tracer.wall_now() if tracer is not None else 0.0
         with self.mesh:
             out = serve(self._index, batch)
+        if tracer is not None:
+            label = plan.label if plan is not None else self.algorithm
+            tracer.span(
+                "mesh step", f"serve[{label}]", t0, tracer.wall_now(),
+                args={"batch": int(batch.terms.shape[0])},
+            )
         if len(out) == 3:
             ids, scores, stats = out
         else:  # hand-built executor around a stats-less make_serve_fn

@@ -120,14 +120,18 @@ class PendingTable:
         del self._by_key[key]
         return entry
 
-    def expire(self, now: float) -> None:
-        """Drop entries whose batch completed by virtual ``now``."""
+    def expire(self, now: float) -> int:
+        """Drop entries whose batch completed by virtual ``now``; returns
+        the number of coalesce windows closed (telemetry counter)."""
         heap = self._done_heap
+        n = 0
         while heap and heap[0][0] <= now:
             _, _, key, qid = heapq.heappop(heap)
             entry = self._by_key.get(key)
             if entry is not None and entry.owner_qid == qid:
                 del self._by_key[key]
+                n += 1
+        return n
 
     # ------------------------------------------------------------------
     def unresolved_subscribers(self) -> int:

@@ -154,17 +154,23 @@ class ServeReport:
         return float(np.percentile(np.asarray(self.latencies_s), p) * 1e3)
 
     def stage_percentile_ms(self, stage: str, p: float) -> float:
-        """Percentile of one latency component: batch_wait|queue_wait|service."""
+        """Percentile of one latency component: batch_wait|queue_wait|service.
+
+        NaN when the stage has no samples — "never ran" must be
+        distinguishable from "ran in 0ms" on a dashboard.
+        """
         xs = getattr(self, f"{stage}_s")
         if not xs:
-            return 0.0
+            return float("nan")
         return float(np.percentile(np.asarray(xs), p) * 1e3)
 
     def plan_percentile_ms(self, label: str, p: float) -> float:
-        """Latency percentile of the queries served under one plan."""
+        """Latency percentile of the queries served under one plan; NaN
+        when no query ran under ``label`` (same contract as
+        :meth:`stage_percentile_ms`)."""
         xs = self.plan_latencies_s.get(label)
         if not xs:
-            return 0.0
+            return float("nan")
         return float(np.percentile(np.asarray(xs), p) * 1e3)
 
     def _record_plan(self, label: str, latency_s: float) -> None:
@@ -186,10 +192,14 @@ class ServeReport:
             f"shapes={self.n_compiled_shapes}"
         ]
         if len(self.plan_queries) > 1:
+            # NaN percentile = no latency samples under that plan: omit
+            # the p50/p99 parenthetical, keep the count
             mix = "  ".join(
                 f"{label}={n} (p50/p99="
                 f"{self.plan_percentile_ms(label, 50):.3f}/"
                 f"{self.plan_percentile_ms(label, 99):.3f}ms)"
+                if self.plan_latencies_s.get(label)
+                else f"{label}={n}"
                 for label, n in sorted(self.plan_queries.items())
             )
             lines.append(f"plans: {mix}")
@@ -198,6 +208,7 @@ class ServeReport:
                 f"{stage}_p50/p99={self.stage_percentile_ms(stage, 50):.3f}/"
                 f"{self.stage_percentile_ms(stage, 99):.3f}ms"
                 for stage in ("batch_wait", "queue_wait", "service")
+                if getattr(self, f"{stage}_s")
             )
             slo = (
                 f"  slo_{self.slo_ms:g}ms={self.slo_attainment:.3f}"
@@ -223,6 +234,7 @@ class GeoServer:
         fingerprint_quant: int = 128,
         n_workers: int = 1,
         coalesce: bool = False,
+        telemetry=None,
     ):
         if n_workers < 1:
             raise ValueError("n_workers must be >= 1")
@@ -232,6 +244,14 @@ class GeoServer:
         self.fingerprint_quant = fingerprint_quant
         self.n_workers = n_workers
         self.coalesce = coalesce
+        # repro.obs.Telemetry handle, or None: every telemetry branch in
+        # the serve loop is behind a single `if self.telemetry` check, so a
+        # server built without one runs the pre-telemetry code path
+        self.telemetry = telemetry
+        if telemetry:
+            attach = getattr(executor, "attach_telemetry", None)
+            if attach is not None:  # test doubles need no telemetry surface
+                attach(telemetry)
         # qid → (fingerprint key, arrival time, trace position)
         self._inflight: dict[int, tuple[tuple, float, int]] = {}
         # id(TraceQuery) → QueryPlan, per run_trace: the warmup's shape
@@ -310,6 +330,10 @@ class GeoServer:
             pad_el / (pad_el + real_el) if pad_el + real_el else 0.0
         )
         report.n_compiled_shapes = len(report.shapes_used)
+        if self.telemetry and self.telemetry.metrics is not None:
+            m = self.telemetry.metrics
+            m.set("batcher.pad_slots", report.pad_slots)
+            m.set("batcher.real_slots", report.real_slots)
         assert not self._inflight, "batcher dropped in-flight queries"
         if self._pending is not None:
             n_left = self._pending.unresolved_subscribers()
@@ -361,16 +385,24 @@ class GeoServer:
                 dl = self.batcher.next_deadline()
                 if dl is not None and dl <= t_arr:
                     for raw in self.batcher.due(t_arr):
-                        self._execute(raw, report, flush_t=t_arr, t0=t_start)
+                        self._execute(
+                            raw, report, flush_t=t_arr, t0=t_start,
+                            reason="deadline",
+                        )
             key, hit = self._lookup(q)
             if hit is not None:
                 report.cache_hits += 1
+                self._count("server.cache_hits_total")
                 lookup_s = time.perf_counter() - t_start - t_arr
-                self._record(report, lookup_s, 0.0, 0.0, lookup_s)
+                self._record(
+                    report, lookup_s, 0.0, 0.0, lookup_s,
+                    t_arr=t_arr, idx=idx, kind="hit",
+                )
                 self._set_result(report, idx, hit)
                 report.n_queries += 1
                 continue
             report.cache_misses += 1
+            self._count("server.cache_misses_total")
             # coalesce: the twin is still waiting in a batcher bucket
             # (closed-loop has no post-flush window — execution is
             # synchronous with the flush on the wall clock)
@@ -378,6 +410,7 @@ class GeoServer:
                 entry = self._pending.lookup(key, t_arr)
                 if entry is not None:
                     report.coalesced += 1
+                    self._coalesce_event(t_arr, entry.owner_qid, idx)
                     entry.subscribers.append((t_arr, idx))
                     report.n_queries += 1
                     continue
@@ -386,18 +419,22 @@ class GeoServer:
             self._inflight[qid] = (key, t_arr, idx)
             if self._pending is not None:
                 self._pending.register(key, qid)
-            pending = PendingQuery(qid, q.terms, q.rects, q.amps, self._plan_for(q))
+            plan = self._plan_for(q)
+            self._audit_plan(qid, idx, q, plan, t_arr)
+            pending = PendingQuery(qid, q.terms, q.rects, q.amps, plan)
             raws = (
                 self.batcher.add(pending, t_arr)
                 if deadline_aware
                 else self.batcher.add(pending)
             )
             for raw in raws:
-                self._execute(raw, report, flush_t=t_arr, t0=t_start)
+                self._execute(
+                    raw, report, flush_t=t_arr, t0=t_start, reason="fill"
+                )
             report.n_queries += 1
         t_end = time.perf_counter() - t_start
         for raw in self.batcher.flush():
-            self._execute(raw, report, flush_t=t_end, t0=t_start)
+            self._execute(raw, report, flush_t=t_end, t0=t_start, reason="drain")
         report.wall_s = time.perf_counter() - t_start
 
     def _run_open(self, trace, report: ServeReport, service_time) -> None:
@@ -427,34 +464,41 @@ class GeoServer:
                     break
                 for raw in b.due(dl):
                     self._execute_open(
-                        raw, report, flush_t=dl, service_time=service_time
+                        raw, report, flush_t=dl, service_time=service_time,
+                        reason="deadline",
                     )
             # apply fills AFTER the deadline loop: a deadline batch that
             # completed before `now` must be visible to this very lookup
             # (it triggered the lazy flush), as it would be on a live server
             self._apply_fills(now)
             if self._pending is not None:
-                self._pending.expire(now)
+                self._expire_pending(now)
             t_lk = time.perf_counter()
             key, hit = self._lookup(q)
             if hit is not None:
                 report.cache_hits += 1
+                self._count("server.cache_hits_total")
                 # a hit's latency is just the (real, measured) lookup; zero
                 # under an injected service model so tests are deterministic
                 lookup_s = (
                     0.0 if service_time is not None else time.perf_counter() - t_lk
                 )
-                self._record(report, lookup_s, 0.0, 0.0, lookup_s)
+                self._record(
+                    report, lookup_s, 0.0, 0.0, lookup_s,
+                    t_arr=now, idx=idx, kind="hit",
+                )
                 self._set_result(report, idx, hit)
                 report.n_queries += 1
                 continue
             report.cache_misses += 1
+            self._count("server.cache_misses_total")
             # coalesce: subscribe to an in-flight twin (queued in a bucket,
             # waiting for a worker, or executing) instead of re-enqueueing
             if self._pending is not None:
                 entry = self._pending.lookup(key, now)
                 if entry is not None:
                     report.coalesced += 1
+                    self._coalesce_event(now, entry.owner_qid, idx)
                     if entry.dispatched:
                         self._record_coalesced(report, entry, now, idx)
                     else:
@@ -466,9 +510,14 @@ class GeoServer:
             self._inflight[qid] = (key, now, idx)
             if self._pending is not None:
                 self._pending.register(key, qid)
-            pq = PendingQuery(qid, q.terms, q.rects, q.amps, self._plan_for(q))
+            plan = self._plan_for(q)
+            self._audit_plan(qid, idx, q, plan, now)
+            pq = PendingQuery(qid, q.terms, q.rects, q.amps, plan)
             for raw in b.add(pq, now):
-                self._execute_open(raw, report, flush_t=now, service_time=service_time)
+                self._execute_open(
+                    raw, report, flush_t=now, service_time=service_time,
+                    reason="fill",
+                )
             report.n_queries += 1
         # drain: fire remaining finite deadlines in order, then the
         # infinite-wait leftovers at the end of the stream
@@ -477,22 +526,58 @@ class GeoServer:
             if dl is None:
                 break
             for raw in b.due(dl):
-                self._execute_open(raw, report, flush_t=dl, service_time=service_time)
+                self._execute_open(
+                    raw, report, flush_t=dl, service_time=service_time,
+                    reason="deadline",
+                )
         for raw in b.flush():
             flush_t = max(t_last, min(self._workers))
-            self._execute_open(raw, report, flush_t=flush_t, service_time=service_time)
+            self._execute_open(
+                raw, report, flush_t=flush_t, service_time=service_time,
+                reason="drain",
+            )
         self._apply_fills(float("inf"))  # a later run_trace sees the full cache
         if self._pending is not None:
-            self._pending.expire(float("inf"))
+            self._expire_pending(float("inf"))
         report.wall_s = max(max(self._workers), t_last) - t_first
 
     # ------------------------------------------------------------------
-    @staticmethod
-    def _record(report, latency, batch_wait, queue_wait, service) -> None:
+    def _record(
+        self,
+        report,
+        latency,
+        batch_wait,
+        queue_wait,
+        service,
+        *,
+        t_arr: float = 0.0,
+        qid: int = -1,
+        idx: int = -1,
+        kind: str = "executed",
+        label: str | None = None,
+    ) -> None:
+        """Every served query's latency decomposition funnels through here —
+        report lists, metrics histograms, and the query's trace span are all
+        appended in the same order from the same numbers, so the span-derived
+        percentiles are the report's percentiles by construction."""
         report.latencies_s.append(latency)
         report.batch_wait_s.append(batch_wait)
         report.queue_wait_s.append(queue_wait)
         report.service_s.append(service)
+        tel = self.telemetry
+        if tel:
+            if tel.metrics is not None:
+                m = tel.metrics
+                m.inc("server.queries_total")
+                m.observe("server.latency_ms", latency * 1e3)
+                m.observe("server.batch_wait_ms", batch_wait * 1e3)
+                m.observe("server.queue_wait_ms", queue_wait * 1e3)
+                m.observe("server.service_ms", service * 1e3)
+            if tel.tracer is not None:
+                tel.tracer.query(
+                    qid, idx, kind, label, t_arr,
+                    latency, batch_wait, queue_wait, service,
+                )
 
     def _record_coalesced(self, report, entry, t_arr: float, idx: int) -> None:
         """Charge a coalesced query against its twin batch's timeline.
@@ -510,10 +595,104 @@ class GeoServer:
         batch_wait = max(entry.flush_t - t_arr, 0.0)
         queue_wait = max(entry.start_t - max(t_arr, entry.flush_t), 0.0)
         service = entry.done_t - max(t_arr, entry.start_t)
-        self._record(report, entry.done_t - t_arr, batch_wait, queue_wait, service)
+        self._record(
+            report, entry.done_t - t_arr, batch_wait, queue_wait, service,
+            t_arr=t_arr, idx=idx, kind="coalesced", label=entry.plan_label,
+        )
         if entry.plan_label is not None:
             report._record_plan(entry.plan_label, entry.done_t - t_arr)
         self._set_result(report, idx, entry.value)
+
+    # ------------------------------------------------------------------
+    # telemetry helpers (each a no-op without the matching sink)
+    # ------------------------------------------------------------------
+    def _count(self, name: str, amount: float = 1.0, **labels) -> None:
+        tel = self.telemetry
+        if tel and tel.metrics is not None:
+            tel.metrics.inc(name, amount, **labels)
+
+    def _coalesce_event(self, now: float, owner_qid: int, idx: int) -> None:
+        tel = self.telemetry
+        if tel:
+            if tel.metrics is not None:
+                tel.metrics.inc("server.coalesced_total")
+            if tel.events is not None:
+                tel.events.emit(now, "coalesce", qid=owner_qid, idx=idx)
+
+    def _expire_pending(self, now: float) -> None:
+        n = self._pending.expire(now)
+        tel = self.telemetry
+        if n and tel:
+            if tel.metrics is not None:
+                tel.metrics.inc("pending.expired_total", n)
+            if tel.events is not None:
+                tel.events.emit(now, "expire", n=n)
+
+    def _audit_plan(self, qid: int, idx: int, q, plan, now: float) -> None:
+        """Record a planned miss's features + candidate costs for the audit.
+
+        Runs :meth:`~repro.core.planner.Planner.explain` — a second feature
+        pass over the query — so the audit costs nothing unless enabled.
+        Recorded at live enqueue (not in ``_plan_for``) so the warmup's
+        shape-prediction replay never pollutes the log.
+        """
+        tel = self.telemetry
+        if plan is None or not tel or tel.audit is None:
+            return
+        planner = getattr(self.executor, "planner", None)
+        if planner is None:
+            return
+        ex = planner.explain(q.terms, q.rects, q.amps)
+        tel.audit.record(
+            qid, idx, ex["features"], ex["candidates"], ex["chosen"], now
+        )
+
+    def _batch_telemetry(
+        self, raw: RawBatch, label: str, reason: str,
+        flush_t: float, start_t: float, done_t: float, worker: int,
+    ) -> None:
+        """Per-executed-batch flush/dispatch/complete events + batch span."""
+        tel = self.telemetry
+        if not tel:
+            return
+        shape = (raw.shape.batch, raw.shape.d_terms, raw.shape.q_rects)
+        if tel.metrics is not None:
+            m = tel.metrics
+            m.inc("batcher.flush_total", reason=reason)
+            m.observe("batcher.batch_real_queries", float(raw.n_real))
+            m.inc("executor.batches_total", plan=label)
+        if tel.tracer is not None:
+            tel.tracer.batch(
+                worker, flush_t, start_t, done_t, label, raw.n_real, shape
+            )
+        if tel.events is not None:
+            shape = list(shape)
+            tel.events.emit(
+                flush_t, "flush", reason=reason, plan=label,
+                n_real=raw.n_real, shape=shape,
+            )
+            tel.events.emit(
+                start_t, "dispatch", worker=worker, plan=label,
+                n_real=raw.n_real,
+            )
+            tel.events.emit(
+                done_t, "complete", worker=worker, plan=label,
+                n_real=raw.n_real, service_s=done_t - start_t,
+            )
+
+    def _put_cache(self, key, value, cost: float, now: float) -> None:
+        """Cache insert + eviction accounting (Landlord may evict many)."""
+        ev0 = self.cache.evictions
+        self.cache.put(
+            key, value, cost=cost, size=value.ids.nbytes + value.scores.nbytes
+        )
+        n_ev = self.cache.evictions - ev0
+        tel = self.telemetry
+        if n_ev and tel:
+            if tel.metrics is not None:
+                tel.metrics.inc("cache.evictions_total", n_ev)
+            if tel.events is not None:
+                tel.events.emit(now, "evict", n=n_ev)
 
     def _predict_shapes(self, trace: list[TraceQuery], open_loop: bool) -> set:
         """Replay cache + batcher decisions (no execution) → emitted
@@ -630,17 +809,38 @@ class GeoServer:
         scores = np.asarray(res.scores)
         report.n_batches += 1
         report.shapes_used.add(raw.shape)
-        pstats = report.plan_stats.setdefault(self._plan_label(raw), {})
+        label = self._plan_label(raw)
+        tel = self.telemetry
+        metrics = tel.metrics if tel else None
+        pstats = report.plan_stats.setdefault(label, {})
+        per_row: dict[str, np.ndarray] = {}
         for key, v in res.stats.items():
             # only the real rows' work is attributable to served queries,
             # but padded rows burn real bytes too — count everything
-            total = float(np.asarray(v, dtype=np.float64).sum())
+            arr = np.asarray(v, dtype=np.float64)
+            total = float(arr.sum())
             report.stats[key] = report.stats.get(key, 0.0) + total
             pstats[key] = pstats.get(key, 0.0) + total
+            if metrics is not None:
+                metrics.inc(f"executor.{key}_total", total, plan=label)
+            if arr.ndim >= 1 and arr.shape[0] == raw.shape.batch:
+                per_row[key] = arr.reshape(arr.shape[0], -1).sum(axis=1)
+        if tel and tel.audit is not None and raw.plan is not None:
+            # join each planned row's measured counters back onto its
+            # audit record — prediction vs ground truth, per query
+            for row, qid in enumerate(raw.qids):
+                tel.audit.join(
+                    qid, {k: float(a[row]) for k, a in per_row.items()}
+                )
         return ids, scores
 
     def _execute(
-        self, raw: RawBatch, report: ServeReport, flush_t: float, t0: float
+        self,
+        raw: RawBatch,
+        report: ServeReport,
+        flush_t: float,
+        t0: float,
+        reason: str = "fill",
     ) -> None:
         """Closed-loop execution: wall-clock timing relative to ``t0``.
 
@@ -659,10 +859,12 @@ class GeoServer:
             BatchEvent(flush_t, t_exec, t_done, 0, raw.n_real)
         )
         label = self._plan_label(raw)
+        self._batch_telemetry(raw, label, reason, flush_t, t_exec, t_done, 0)
         for row, qid in enumerate(raw.qids):
             key, t_arr, idx = self._inflight.pop(qid)
             self._record(
-                report, t_done - t_arr, flush_t - t_arr, t_exec - flush_t, service
+                report, t_done - t_arr, flush_t - t_arr, t_exec - flush_t, service,
+                t_arr=t_arr, qid=qid, idx=idx, kind="executed", label=label,
             )
             report._record_plan(label, t_done - t_arr)
             need_value = (
@@ -677,10 +879,7 @@ class GeoServer:
             )
             self._set_result(report, idx, value)
             if self.cache is not None:
-                self.cache.put(
-                    key, value,
-                    cost=cost, size=value.ids.nbytes + value.scores.nbytes,
-                )
+                self._put_cache(key, value, cost, t_done)
             if self._pending is not None:
                 entry = self._pending.resolve(key, qid)
                 if entry is not None:
@@ -691,6 +890,8 @@ class GeoServer:
                             flush_t - t_sub,
                             t_exec - flush_t,
                             service,
+                            t_arr=t_sub, idx=sub_idx, kind="coalesced",
+                            label=label,
                         )
                         report._record_plan(label, t_done - t_sub)
                         self._set_result(report, sub_idx, value)
@@ -707,13 +908,16 @@ class GeoServer:
         """
         fills = self._pending_fills
         while fills and fills[0][0] <= now:
-            _, _, key, value, cost = heapq.heappop(fills)
-            self.cache.put(
-                key, value, cost=cost, size=value.ids.nbytes + value.scores.nbytes
-            )
+            done, _, key, value, cost = heapq.heappop(fills)
+            self._put_cache(key, value, cost, done)
 
     def _execute_open(
-        self, raw: RawBatch, report: ServeReport, flush_t: float, service_time
+        self,
+        raw: RawBatch,
+        report: ServeReport,
+        flush_t: float,
+        service_time,
+        reason: str = "fill",
     ) -> None:
         """Open-loop execution: dispatch to the earliest-free worker slot.
 
@@ -736,9 +940,13 @@ class GeoServer:
         report.batch_events.append(BatchEvent(flush_t, start, done, w, raw.n_real))
         cost = dt / max(raw.n_real, 1)
         label = self._plan_label(raw)
+        self._batch_telemetry(raw, label, reason, flush_t, start, done, w)
         for row, qid in enumerate(raw.qids):
             key, t_arr, idx = self._inflight.pop(qid)
-            self._record(report, done - t_arr, flush_t - t_arr, start - flush_t, dt)
+            self._record(
+                report, done - t_arr, flush_t - t_arr, start - flush_t, dt,
+                t_arr=t_arr, qid=qid, idx=idx, kind="executed", label=label,
+            )
             report._record_plan(label, done - t_arr)
             need_value = (
                 report.results is not None
