@@ -12,6 +12,14 @@ performance regressed beyond noise:
   genuine "batcher stopped batching" regression lands in the hundreds of
   ms to seconds and clears the floor easily).
 * **QPS** — fail when ``current < qps_factor × baseline``.
+* **Routing fan-out** — the ``serve_routing_footprint_fanout`` row carries
+  ``shards_touched_mean``, ``shards_total`` and ``identical`` (1 iff the
+  footprint-routed results were bitwise equal to the broadcast twin's);
+  fail when the current run's mean fan-out exceeds ``fanout_factor`` ×
+  shards (default 0.5 — footprint routing must reach ≤ S/2 shards per
+  query on the city trace) or when ``identical`` is 0.  Like the
+  telemetry gate this is absolute on the fresh run, not relative to the
+  baseline: the routing contract does not drift with machine noise.
 * **Telemetry overhead** — the ``serve_telemetry_overhead`` row carries
   ``qps_ratio`` (telemetry-on QPS / telemetry-off QPS, best-of-3 each);
   fail when the *current* run's ratio drops below ``overhead_floor``
@@ -57,6 +65,7 @@ def compare(
     slack_ms: float = 25.0,
     min_fail_ms: float = 250.0,
     overhead_floor: float = 0.95,
+    fanout_factor: float = 0.5,
 ) -> tuple[list[str], list[str]]:
     """Return ``(failures, warnings)`` — the gate passes iff no failures.
 
@@ -92,6 +101,23 @@ def compare(
                     f"{name}: qps {c_qps:.0f} < floor {floor:.0f} "
                     f"({qps_factor}x baseline {b_qps:.0f})"
                 )
+    fanout = current.get("serve_routing_footprint_fanout")
+    if fanout is not None:
+        mean = fanout.get("shards_touched_mean")
+        total = fanout.get("shards_total")
+        if mean is not None and total:
+            limit = fanout_factor * total
+            if mean > limit:
+                failures.append(
+                    f"serve_routing_footprint_fanout: shards_touched_mean "
+                    f"{mean:.3f} > {limit:.1f} ({fanout_factor}x "
+                    f"{total:.0f} shards — footprint routing stopped pruning)"
+                )
+        if fanout.get("identical") == 0:
+            failures.append(
+                "serve_routing_footprint_fanout: footprint-routed results "
+                "diverged bitwise from the broadcast twin"
+            )
     ratio = current.get("serve_telemetry_overhead", {}).get("qps_ratio")
     if ratio is not None and ratio < overhead_floor:
         failures.append(
@@ -113,6 +139,9 @@ def main() -> None:
                     help="p99 below this never fails (one-off stall immunity)")
     ap.add_argument("--overhead-floor", type=float, default=0.95,
                     help="min telemetry-on/off QPS ratio (obs overhead gate)")
+    ap.add_argument("--fanout-factor", type=float, default=0.5,
+                    help="max mean shards-touched as a fraction of shards "
+                         "(footprint-routing prune gate)")
     args = ap.parse_args()
 
     baseline = load_rows(args.baseline)
@@ -121,7 +150,7 @@ def main() -> None:
         baseline, current,
         p99_factor=args.p99_factor, qps_factor=args.qps_factor,
         slack_ms=args.slack_ms, min_fail_ms=args.min_fail_ms,
-        overhead_floor=args.overhead_floor,
+        overhead_floor=args.overhead_floor, fanout_factor=args.fanout_factor,
     )
     for name in sorted(set(baseline) & set(current)):
         b, c = baseline[name], current[name]

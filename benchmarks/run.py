@@ -25,7 +25,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
 * ``fig_k_sweep``  — sensitivity of fetched volume to k (paper §IV.C).
 * ``fig_scale``    — throughput vs corpus size (the scalability axis the
                      paper's abstract claims).
-* ``geo_partition``— hash vs geographic (Morton) document partitioning
+* ``geo_partition``— hash vs Morton vs region-range document partitioning
                      (paper §Conclusions future work).
 * ``kernel_*``     — Pallas kernels vs jnp oracles (CPU interpret: check
                      only; derived column reports modeled VMEM bytes/call).
@@ -35,8 +35,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
                      ``serving_arrival_*`` rows replay the same trace
                      open-loop (Poisson arrivals) across deadline settings
                      and the ``serving_workers_*`` rows sweep the worker
-                     pool × in-flight coalescing.  The full sweep lives in
-                     ``benchmarks.serve_bench``.
+                     pool × in-flight coalescing; the
+                     ``serving_routing_*`` rows compare footprint routing
+                     against broadcast at S=8 on city-sized footprints
+                     (mean shards-touched, recall@10, bit-identity).  The
+                     full sweep lives in ``benchmarks.serve_bench``.
 
 Usage: ``PYTHONPATH=src python -m benchmarks.run [--quick]``
 """
@@ -350,6 +353,10 @@ def bench_geo_partition(quick: bool) -> None:
     from repro.core.distributed import shard_corpus_np
     from repro.corpus import make_corpus
 
+    from repro.core.distributed import (
+        HashPartitioner, MortonPartitioner, RegionRangePartitioner,
+    )
+
     n_docs, S = (2048, 4) if quick else (8192, 8)
     corpus = make_corpus(n_docs, 500, seed=6)
     rng = np.random.default_rng(0)
@@ -360,10 +367,15 @@ def bench_geo_partition(quick: bool) -> None:
         w = float(c[2])
         probes.append([c[0] - w, c[1] - w, c[0] + w, c[1] + w])
     probes = np.array(probes, np.float32)
-    for part in ["hash", "geo"]:
+    parts = [
+        ("hash", HashPartitioner()),
+        ("morton", MortonPartitioner()),
+        ("region", RegionRangePartitioner()),
+    ]
+    for part, partitioner in parts:
         sh = shard_corpus_np(
             corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.pagerank,
-            corpus.n_terms, n_shards=S, partition=part, grid=32,
+            corpus.n_terms, n_shards=S, partitioner=partitioner, grid=32,
         )
         # per-shard toe-print MBR -> how many shards must a query visit?
         rects = np.asarray(sh.tp_rects)  # [S, T, 4]
@@ -437,7 +449,9 @@ def bench_distributed(quick: bool) -> None:
              "skipped=single_device_container;see tests/test_distributed.py")
         return
     from repro.core import QueryBudgets
-    from repro.core.distributed import make_serve_fn, shard_corpus_np
+    from repro.core.distributed import (
+        MortonPartitioner, make_serve_fn, shard_corpus_np,
+    )
     from repro.corpus import make_corpus, make_query_trace
 
     corpus = make_corpus(2048, 500, seed=7)
@@ -446,7 +460,8 @@ def bench_distributed(quick: bool) -> None:
     n = len(jax.devices())
     mesh = jax.make_mesh((n, 1), ("data", "model"))
     sharded = shard_corpus_np(corpus.doc_terms, corpus.doc_rects, corpus.doc_amps,
-                              corpus.pagerank, corpus.n_terms, n, "geo", grid=32)
+                              corpus.pagerank, corpus.n_terms, n,
+                              MortonPartitioner(), grid=32)
     serve = make_serve_fn(mesh, budgets, doc_axes=("data",), grid=32,
                           n_terms=corpus.n_terms)
     trace = make_query_trace(corpus, n_queries=32, seed=8)
@@ -519,6 +534,98 @@ def bench_serving(quick: bool) -> None:
         report_row(f"serving_workers_{n_workers}_coalesce_{tag}", rep)
 
 
+def bench_routing(quick: bool) -> None:
+    """Footprint routing vs broadcast at S=8: fan-out, recall, bit-identity.
+
+    The tentpole claim in one sweep — on a city-footprint zipf trace over
+    region-partitioned shards, footprint routing must (a) touch a mean of
+    ≪ S shards per query, (b) keep recall@k vs the exact oracle at 1.0
+    under generous budgets, and (c) return bit-identical ids *and* scores
+    to the hash-partition broadcast baseline.
+    """
+    from repro.core import GeoSearchEngine, QueryBudgets
+    from repro.core.distributed import HashPartitioner, RegionRangePartitioner
+    from repro.corpus import make_corpus, make_zipf_trace
+    from repro.serving import GeoServer, ShapeBucketedBatcher, make_executor
+
+    n_docs, S = (2048, 8) if quick else (8192, 8)
+    n_q = 256 if quick else 1024
+    # single-place docs: multi-place corpora smear shard coverage across
+    # the map (every shard touches every city), which defeats routing by
+    # construction — single-toe-print pages are the workload it targets.
+    # Seed 17's zipf city-size draw spreads population over ~8 cities;
+    # single-mega-city draws are the degenerate anti-case (all shards
+    # subdivide the one city, so every city query touches all of them).
+    corpus = make_corpus(n_docs, 500, max_rects=1, seed=17)
+    budgets = QueryBudgets(
+        max_candidates=2048, max_tiles=256, k_sweeps=8,
+        sweep_budget=max(n_docs // 4, 512), top_k=10,
+    )
+    kw = dict(algorithm="k_sweep", budgets=budgets, grid=32, n_shards=S)
+    broadcast = make_executor(
+        "sharded", corpus, partitioner=HashPartitioner(),
+        routing="broadcast", **kw,
+    )
+    routed = make_executor(
+        "sharded", corpus, partitioner=RegionRangePartitioner(),
+        routing="footprint", **kw,
+    )
+    trace = make_zipf_trace(
+        corpus, n_queries=n_q, pool_size=max(n_q // 8, 32), seed=14,
+        scales=(1.0,),  # city-sized footprints
+    )
+
+    def serve(executor):
+        server = GeoServer(
+            executor, cache=None,
+            batcher=ShapeBucketedBatcher(
+                max_batch=16, max_terms=8, max_rects=4,
+                term_buckets=[8], rect_buckets=[4], batch_sizes=[16],
+            ),
+        )
+        return server.run_trace(trace, collect_results=True)
+
+    rep_bc = serve(broadcast)
+    rep_fp = serve(routed)
+    identical = all(
+        np.array_equal(a.ids, b.ids)
+        and a.scores.tobytes() == b.scores.tobytes()
+        for a, b in zip(rep_bc.results, rep_fp.results)
+    )
+    # recall@k vs the exact oracle on the distinct pool head
+    from repro.corpus import pad_trace_batch
+
+    seen, distinct = set(), []
+    for q in trace:
+        key = id(q)
+        if key not in seen:
+            seen.add(key)
+            distinct.append(q)
+    probe = pad_trace_batch(distinct[:64])
+    eng = GeoSearchEngine.build(
+        corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
+        pagerank=corpus.pagerank, grid=32, budgets=budgets,
+    )
+    want = np.asarray(eng.oracle(probe).ids)
+    got = np.asarray(routed.run(probe).ids)
+    hits = tot = 0
+    for b in range(want.shape[0]):
+        w = set(want[b][want[b] >= 0])
+        hits += len(w & set(got[b][got[b] >= 0]))
+        tot += len(w)
+    recall = hits / max(tot, 1)
+    from benchmarks.serve_bench import report_row
+
+    report_row("serving_routing_broadcast", rep_bc)
+    report_row("serving_routing_footprint", rep_fp)
+    mean_touched = rep_fp.routing_mean(routed.algorithm)
+    _row(
+        "serving_routing_footprint_fanout", 0.0,
+        f"shards_touched_mean={mean_touched:.3f};shards_total={S};"
+        f"identical={int(identical)};recall_at_10={recall:.3f}",
+    )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -533,6 +640,7 @@ def main() -> None:
     bench_kernels(args.quick)
     bench_distributed(args.quick)
     bench_serving(args.quick)
+    bench_routing(args.quick)
 
 
 if __name__ == "__main__":

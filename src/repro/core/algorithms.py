@@ -430,13 +430,24 @@ def k_sweep(
             streamed_tp = n_sweeps * budgets.sweep_budget
             blocks_total = n_sweeps * ((budgets.sweep_budget + bs - 1) // bs)
             blocks_skipped = jnp.int32(0)
-        # (4) translate to docIDs, sort, aggregate per doc
-        docs_s, g_tot, last = _sorted_run_sums(docs_c, part_c, ok_c)
+        # (4) translate to docIDs, sort, dedupe per doc (the partial scores
+        # drove selection; they are not the final geo score)
+        docs_s, _, last = _sorted_run_sums(docs_c, part_c, ok_c)
         dvalid = last
         docs_u = jnp.where(dvalid, docs_s, 0)
         # (5) filter through the inverted index
         match, tscore = tidx.text_score_of_docs(text, terms, docs_u)
         keep = dvalid & match
+        # (6) final geo score from each survivor's own footprint slots —
+        # the same doc-major scorer as geo_first/oracle, summed in the
+        # doc's canonical slot order.  Scoring from doc_rects rows (not
+        # the sweep stream's run sums) keeps per-doc scores bit-identical
+        # across shard layouts: the stream order, coalescing slack, and
+        # cumsum prefix all depend on the partitioning, a doc's own rect
+        # row does not (the footprint-routing equivalence gate).
+        g_tot = _geo_score_docs(
+            spatial, docs_u, keep, q_rects, q_amps, _default_doc_scorer
+        )
         qm = fp.query_mass(q_rects, q_amps)
         score = ranking.combine_scores(
             weights, tscore, g_tot, pagerank[jnp.where(keep, docs_u, 0)], qm

@@ -14,12 +14,52 @@ One ``shard_map`` serve step:
 Collective volume per query is O(k · n_doc_shards) — independent of corpus
 size, the property that makes the architecture scale to thousands of chips.
 
-Partitioning policies (paper §Conclusions future work):
-* ``hash`` — docs round-robin over shards (the standard engine layout);
-* ``geo``  — docs sorted by the Morton code of their footprint center, then
-  split into equal contiguous ranges: each shard owns a compact region, its
-  tile grid is denser, sweeps are tighter, and non-overlapping shards
-  short-circuit (geo score 0 everywhere → empty local top-k).
+The ``Partitioner`` protocol (paper §Conclusions future work)
+-------------------------------------------------------------
+Document partitioning is a first-class strategy object, not a string flag.
+A partitioner implements:
+
+* ``name`` — stable identifier (CLI / report label);
+* ``assign(doc_rects, n_shards) -> i32[N]`` — shard id per document, given
+  the doc footprint rects ``f32[N, R, 4]`` (padded slots: inverted rects);
+* ``coverage(rects, amps) -> bool[G, G]`` — the bbox-grid summary of one
+  shard's toe prints (shared base implementation; see below).
+
+Shipped strategies:
+
+* :class:`HashPartitioner`   — round-robin ``doc_id % n_shards`` (the
+  standard engine layout; every shard sees every region);
+* :class:`MortonPartitioner` — docs sorted by the Morton code of their
+  footprint center, split into equal contiguous ranges: each shard owns a
+  compact curve segment, its tile grid is denser and sweeps are tighter;
+* :class:`RegionRangePartitioner` — recursive median (KD) splits of the
+  footprint centers: each shard owns an axis-aligned region, the tightest
+  per-shard MBRs of the three (the footprint-routing partitioner).
+
+Strings are resolved exactly once, at the CLI boundary, via
+:func:`resolve_partitioner`; every core/serving call site takes an
+instance (passing a raw string raises ``TypeError``).
+
+Coverage grids and footprint routing
+------------------------------------
+Each shard's spatial extent is summarized as a ``G×G`` boolean bbox grid
+(``G = COVERAGE_GRID``) over its toe-print rects — the same clamped-floor
+cell mapping (:func:`repro.core.planner.coarse_cells`, no upper-edge
+epsilon) the planner's ``tp_span`` grid uses, so the summary *over-covers*:
+any toe print ∩ query-rect intersection shares at least one cell with the
+query's cell range.  The grid is stored as its summed-area table
+(``coverage_sat f32[G+1, G+1]``, integral image of the 0/1 grid), making
+"does this rect touch any covered cell" an O(1) four-corner lookup both
+host-side (:func:`footprint_touch_np`) and inside the jit'd serve step.
+
+Because ranking requires footprint overlap (``combine_scores`` scores a
+doc −inf when its geo score is 0 — see :mod:`repro.core.ranking`), a shard
+whose coverage grid misses every query footprint in a batch can only
+produce empty local top-k lists.  Executors exploit this: the host
+scatter-gather loop skips such shards outright, and the mesh serve step
+(``make_serve_fn(with_routing=True)``) masks them so their counters and
+score contributions are zero by construction — bit-identical results at
+O(shards-touched) instead of O(S) per-query cost.
 """
 from __future__ import annotations
 
@@ -39,9 +79,221 @@ from repro.core.text_index import (
     TextIndex,
     build_text_index_np,
     global_idf_np as tidx_global_idf,
-    rescale_impacts_to_global,
 )
 from repro.core import geometry
+from repro.core.planner import coarse_cells
+
+#: Side length of the per-shard coverage bbox grid.  Matches the planner's
+#: ``tp_span`` grid resolution (``planner._SPAN_GRID``): fine enough that
+#: city-sized footprints resolve to a few cells, coarse enough that the
+#: [S, G+1, G+1] SAT stack stays negligible next to the index arrays.
+COVERAGE_GRID = 16
+
+
+def _valid_rects_np(rects: np.ndarray, amps: np.ndarray | None = None) -> np.ndarray:
+    """bool[...] mask of real (non-padding) rect slots: positive area and,
+    when amplitudes are given, positive amplitude."""
+    rects = np.asarray(rects)
+    v = (rects[..., 2] > rects[..., 0]) & (rects[..., 3] > rects[..., 1])
+    if amps is not None:
+        v = v & (np.asarray(amps) > 0)
+    return v
+
+
+def coverage_grid_np(
+    rects: np.ndarray, amps: np.ndarray | None = None, grid: int = COVERAGE_GRID
+) -> np.ndarray:
+    """Occupancy grid ``bool[G, G]`` (row = y cell) of the valid rects.
+
+    Cells are claimed through :func:`repro.core.planner.coarse_cells` — the
+    shared clamped-floor mapping with no upper-edge epsilon — so the grid
+    over-covers: every point of every valid rect lands in a claimed cell.
+    """
+    occ = np.zeros((grid, grid), dtype=bool)
+    r = np.asarray(rects).reshape(-1, 4)
+    valid = _valid_rects_np(rects, amps).reshape(-1)
+    r = r[valid]
+    if r.shape[0] == 0:
+        return occ
+    ix0, iy0, ix1, iy1 = coarse_cells(r, grid)
+    for x0, y0, x1, y1 in zip(ix0, iy0, ix1, iy1):
+        occ[y0 : y1 + 1, x0 : x1 + 1] = True
+    return occ
+
+
+def coverage_sat_np(occ: np.ndarray) -> np.ndarray:
+    """Summed-area table ``f32[G+1, G+1]`` of a 0/1 occupancy grid."""
+    g = occ.shape[0]
+    sat = np.zeros((g + 1, g + 1), dtype=np.float32)
+    sat[1:, 1:] = np.cumsum(np.cumsum(occ.astype(np.float32), axis=0), axis=1)
+    return sat
+
+
+def footprint_touch_np(
+    sats: np.ndarray,
+    rects: np.ndarray,
+    amps: np.ndarray | None = None,
+    grid: int = COVERAGE_GRID,
+) -> np.ndarray:
+    """Which shards each query's footprints can reach: ``bool[S, B]``.
+
+    ``sats`` is the stacked coverage SAT ``f32[S, G+1, G+1]``; ``rects`` the
+    query footprints ``f32[B, R, 4]`` (``amps f32[B, R]`` marks padding).
+    A query touches a shard iff any valid rect's coarse-cell range contains
+    a covered cell — an O(1) four-corner SAT lookup per (shard, rect).
+    Queries with no valid rect touch nothing (scored −inf everywhere by
+    ``require_geo`` ranking regardless of routing).
+    """
+    sats = np.asarray(sats)
+    rects = np.asarray(rects)
+    valid = _valid_rects_np(rects, amps)  # [B, R]
+    ix0, iy0, ix1, iy1 = coarse_cells(rects, grid)  # each [B, R]
+    cover = (
+        sats[:, iy1 + 1, ix1 + 1]
+        - sats[:, iy0, ix1 + 1]
+        - sats[:, iy1 + 1, ix0]
+        + sats[:, iy0, ix0]
+    )  # [S, B, R]
+    return np.any((cover > 0) & valid[None], axis=-1)
+
+
+def _footprint_centers(doc_rects: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Mean footprint center per doc, over valid rect slots (f64[N], f64[N])."""
+    r = np.asarray(doc_rects, dtype=np.float64)
+    valid = _valid_rects_np(r)  # [N, R]
+    w = np.maximum(valid.sum(axis=1), 1)
+    cx = np.where(valid, (r[:, :, 0] + r[:, :, 2]) * 0.5, 0.0).sum(axis=1) / w
+    cy = np.where(valid, (r[:, :, 1] + r[:, :, 3]) * 0.5, 0.0).sum(axis=1) / w
+    return cx, cy
+
+
+class Partitioner:
+    """Document-partitioning strategy (see module docstring).
+
+    Stateless: ``assign`` maps doc footprints to shard ids; ``coverage``
+    summarizes one shard's toe prints as the routing occupancy grid (the
+    base implementation is shared — strategies only differ in ``assign``).
+    """
+
+    name: str = "base"
+
+    def assign(self, doc_rects: np.ndarray, n_shards: int) -> np.ndarray:
+        raise NotImplementedError
+
+    def coverage(
+        self,
+        rects: np.ndarray,
+        amps: np.ndarray | None = None,
+        grid: int = COVERAGE_GRID,
+    ) -> np.ndarray:
+        return coverage_grid_np(rects, amps, grid)
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"{type(self).__name__}()"
+
+
+class HashPartitioner(Partitioner):
+    """Round-robin ``doc_id % n_shards`` — the geography-blind baseline."""
+
+    name = "hash"
+
+    def assign(self, doc_rects: np.ndarray, n_shards: int) -> np.ndarray:
+        n_docs = np.asarray(doc_rects).shape[0]
+        return (np.arange(n_docs) % n_shards).astype(np.int32)
+
+
+class MortonPartitioner(Partitioner):
+    """Equal contiguous ranges of the Morton order of footprint centers."""
+
+    name = "morton"
+
+    def assign(self, doc_rects: np.ndarray, n_shards: int) -> np.ndarray:
+        n_docs = np.asarray(doc_rects).shape[0]
+        cx, cy = _footprint_centers(doc_rects)
+        fine = 1 << 15
+        code = geometry.morton_encode_np(
+            np.clip(cx * fine, 0, fine - 1).astype(np.uint32),
+            np.clip(cy * fine, 0, fine - 1).astype(np.uint32),
+        )
+        order = np.argsort(code, kind="stable")
+        per = (n_docs + n_shards - 1) // n_shards
+        ids = np.empty(n_docs, dtype=np.int32)
+        ids[order] = np.arange(n_docs) // per
+        return ids
+
+
+class RegionRangePartitioner(Partitioner):
+    """Recursive median (KD) splits of footprint centers: each shard owns a
+    compact axis-aligned region, so coverage grids are the tightest of the
+    shipped strategies.  Handles any ``n_shards`` via proportional child
+    targets (shard sizes differ by at most one doc)."""
+
+    name = "region"
+
+    def assign(self, doc_rects: np.ndarray, n_shards: int) -> np.ndarray:
+        n_docs = np.asarray(doc_rects).shape[0]
+        cx, cy = _footprint_centers(doc_rects)
+        ids = np.zeros(n_docs, dtype=np.int32)
+        next_id = [0]
+
+        def split(sel: np.ndarray, parts: int, depth: int) -> None:
+            if parts <= 1:
+                ids[sel] = next_id[0]
+                next_id[0] += 1
+                return
+            left = parts // 2
+            axis = cx if depth % 2 == 0 else cy
+            order = sel[np.argsort(axis[sel], kind="stable")]
+            cut = (len(sel) * left + parts - 1) // parts
+            split(order[:cut], left, depth + 1)
+            split(order[cut:], parts - left, depth + 1)
+
+        split(np.arange(n_docs), n_shards, 0)
+        return ids
+
+
+_PARTITIONERS = {
+    "hash": HashPartitioner,
+    "morton": MortonPartitioner,
+    "region": RegionRangePartitioner,
+    # legacy CLI spelling from the string-flag era: Morton order
+    "geo": MortonPartitioner,
+}
+
+
+def resolve_partitioner(spec: "str | Partitioner | None") -> Partitioner:
+    """CLI-boundary resolution: str → instance (once); instances pass through.
+
+    ``None`` resolves to :class:`MortonPartitioner` (the serving default).
+    Everywhere else in core/serving, raw strings are a ``TypeError``.
+    """
+    if spec is None:
+        return MortonPartitioner()
+    if isinstance(spec, Partitioner):
+        return spec
+    if isinstance(spec, str):
+        try:
+            return _PARTITIONERS[spec]()
+        except KeyError:
+            raise ValueError(
+                f"unknown partitioner {spec!r}; choose from {sorted(_PARTITIONERS)}"
+            ) from None
+    raise TypeError(f"expected Partitioner instance or name, got {type(spec).__name__}")
+
+
+def _require_partitioner(
+    partitioner: "Partitioner | None", default: type[Partitioner]
+) -> Partitioner:
+    """Core-API guard: instances only (strings stop at the CLI boundary)."""
+    if partitioner is None:
+        return default()
+    if isinstance(partitioner, Partitioner):
+        return partitioner
+    raise TypeError(
+        "partitioner must be a Partitioner instance (e.g. MortonPartitioner()); "
+        "raw strings are only accepted at the CLI boundary via "
+        f"resolve_partitioner() — got {partitioner!r}"
+    )
 
 
 @jax.tree_util.register_dataclass
@@ -69,30 +321,16 @@ class ShardedGeoIndex:
     blk_max_mass: jax.Array  # f32[S, NB]
     pagerank: jax.Array  # f32[S, N]
     doc_offset: jax.Array  # i32[S]  local→global docID base
+    # routing: per-shard coverage-grid summed-area table (module docstring)
+    coverage_sat: jax.Array  # f32[S, CG+1, CG+1]
     grid: int = field(metadata=dict(static=True))
     n_terms: int = field(metadata=dict(static=True))
     block_size: int = field(default=128, metadata=dict(static=True))
+    coverage_grid: int = field(default=COVERAGE_GRID, metadata=dict(static=True))
 
     @property
     def n_shards(self) -> int:
         return self.postings.shape[0]
-
-
-def partition_order(doc_rects: np.ndarray, n_shards: int, partition: str) -> np.ndarray:
-    """Doc permutation for sharding: ``hash`` round-robin or ``geo`` Morton."""
-    n_docs = doc_rects.shape[0]
-    if partition == "geo":
-        cx = doc_rects[:, :, [0, 2]].mean(axis=(1, 2))
-        cy = doc_rects[:, :, [1, 3]].mean(axis=(1, 2))
-        fine = 1 << 15
-        code = geometry.morton_encode_np(
-            np.clip((cx * fine), 0, fine - 1).astype(np.uint32),
-            np.clip((cy * fine), 0, fine - 1).astype(np.uint32),
-        )
-        return np.argsort(code, kind="stable")
-    if partition == "hash":
-        return np.argsort(np.arange(n_docs) % n_shards, kind="stable")
-    raise ValueError(partition)
 
 
 def shard_corpus_np(
@@ -102,33 +340,43 @@ def shard_corpus_np(
     pagerank: np.ndarray,
     n_terms: int,
     n_shards: int,
-    partition: str = "hash",
+    partitioner: "Partitioner | None" = None,
     grid: int = 64,
     m_intervals: int = 2,
     block_size: int = 128,
 ) -> ShardedGeoIndex:
-    """Partition a corpus and build one index per shard (host side)."""
+    """Partition a corpus with ``partitioner`` (default hash round-robin)
+    and build one index per shard (host side), including each shard's
+    coverage SAT for footprint routing."""
     n_docs = len(doc_terms)
-    order = partition_order(doc_rects, n_shards, partition)
+    partitioner = _require_partitioner(partitioner, default=HashPartitioner)
+    shard_ids = np.asarray(partitioner.assign(doc_rects, n_shards))
+    if shard_ids.shape != (n_docs,):
+        raise ValueError(
+            f"{partitioner.name}.assign returned shape {shard_ids.shape}, "
+            f"expected ({n_docs},)"
+        )
 
-    per = (n_docs + n_shards - 1) // n_shards
     idf_global = tidx_global_idf(doc_terms, n_terms)
     shards = []
-    offsets = []
-    global_ids = []
+    coverage = []
     for s in range(n_shards):
-        sel = order[s * per : (s + 1) * per]
-        offsets.append(0)  # global ids carried via explicit map instead
-        global_ids.append(sel)
+        # ascending global ids within the shard: local tie-breaks (lower
+        # local docID wins) then agree with the single-index engine's
+        sel = np.flatnonzero(shard_ids == s)
         terms = [doc_terms[i] for i in sel]
-        text = build_text_index_np(terms, n_terms)
         # broadcast global term statistics (IDF) so shards rank like the
-        # single-index engine would
-        text = rescale_impacts_to_global(text, idf_global)
+        # single-index engine would — built in directly (not rescaled after
+        # the fact) so impacts are bit-identical across partitionings
+        text = build_text_index_np(terms, n_terms, idf=idf_global)
         spatial = build_spatial_index_np(
             doc_rects[sel], doc_amps[sel], grid, m_intervals, block_size=block_size
         )
         shards.append((text, spatial, pagerank[sel], sel))
+        occ = partitioner.coverage(
+            np.asarray(spatial.tp_rects), np.asarray(spatial.tp_amps), COVERAGE_GRID
+        )
+        coverage.append(coverage_sat_np(occ))
 
     # pad to uniform shapes and stack
     P_max = max(s[0].postings.shape[0] for s in shards)
@@ -204,14 +452,20 @@ def shard_corpus_np(
         blk_max_mass=jnp.asarray(stacked["blk_max_mass"]),
         pagerank=jnp.asarray(stacked["pagerank"]),
         doc_offset=jnp.asarray(gid),
+        coverage_sat=jnp.asarray(np.stack(coverage)),
         grid=grid,
         n_terms=n_terms,
         block_size=shards[0][1].block_size,
+        coverage_grid=COVERAGE_GRID,
     )
 
 
 def sharded_index_specs(
-    doc_axes: tuple[str, ...], grid: int, n_terms: int, block_size: int = 128
+    doc_axes: tuple[str, ...],
+    grid: int,
+    n_terms: int,
+    block_size: int = 128,
+    coverage_grid: int = COVERAGE_GRID,
 ) -> ShardedGeoIndex:
     """PartitionSpecs for every field (leading dim over the doc axes)."""
     lead = P(doc_axes)
@@ -221,8 +475,9 @@ def sharded_index_specs(
         tile_starts=lead, tile_ends=lead,
         doc_rects=lead, doc_amps=lead, doc_mbr=lead, doc_mass=lead,
         blk_mbr=lead, blk_max_amp=lead, blk_max_mass=lead,
-        pagerank=lead, doc_offset=lead,
+        pagerank=lead, doc_offset=lead, coverage_sat=lead,
         grid=grid, n_terms=n_terms, block_size=block_size,
+        coverage_grid=coverage_grid,
     )
 
 
@@ -238,6 +493,7 @@ def make_serve_fn(
     fused: bool = False,
     block_size: int = 128,
     with_stats: bool = False,
+    with_routing: bool = False,
 ):
     """Build the jit'd distributed serve step for a mesh.
 
@@ -251,7 +507,20 @@ def make_serve_fn(
     summed over the doc axes with ``psum`` (k·S-independent — one scalar
     vector per query rides the existing collective phase), so serving
     reports see exact mesh traffic instead of a host-side capacity model.
+
+    ``with_routing=True`` (requires ``with_stats``) turns on footprint
+    routing inside the step: each shard tests the batch's footprints
+    against its coverage SAT; a shard no query touches is *masked* — its
+    local results are forced to (−1, −inf) and its counters zeroed before
+    the psum, so merged outputs and counters are exactly what a host loop
+    that skipped the shard would produce.  Counter masking is batch-level
+    (a shard any query touches counts its whole batch, matching the host
+    executor's visit accounting); result masking is per-query.  Two stat
+    keys are added: ``shards_touched`` (per query — shards its footprints
+    reach) and ``shards_visited`` (per batch — shards any query reaches).
     """
+    if with_routing and not with_stats:
+        raise ValueError("with_routing requires with_stats=True")
     fn = alg.get_algorithm(algorithm)
     if algorithm == "k_sweep" and fused:
         from functools import partial as _partial
@@ -289,6 +558,30 @@ def make_serve_fn(
         local = GeoIndex(text=text, spatial=spatial, pagerank=idx.pagerank[0])
         return local, idx.doc_offset[0]
 
+    def shard_touch(idx: ShardedGeoIndex, query: alg.QueryBatch) -> jax.Array:
+        """Footprint routing test against this shard's coverage SAT: bool[B].
+
+        Mirrors :func:`footprint_touch_np` (same clamped-floor cell mapping
+        as :func:`repro.core.planner.coarse_cells`) for one shard in-jit.
+        """
+        sat = idx.coverage_sat[0]
+        cg = idx.coverage_grid
+        g = float(cg)
+        rects = query.rects
+        ix0 = jnp.clip(jnp.floor(rects[..., 0] * g).astype(jnp.int32), 0, cg - 1)
+        iy0 = jnp.clip(jnp.floor(rects[..., 1] * g).astype(jnp.int32), 0, cg - 1)
+        ix1 = jnp.clip(jnp.floor(rects[..., 2] * g).astype(jnp.int32), 0, cg - 1)
+        iy1 = jnp.clip(jnp.floor(rects[..., 3] * g).astype(jnp.int32), 0, cg - 1)
+        valid = (
+            (rects[..., 2] > rects[..., 0])
+            & (rects[..., 3] > rects[..., 1])
+            & (query.amps > 0)
+        )  # [B, R]
+        cover = (
+            sat[iy1 + 1, ix1 + 1] - sat[iy0, ix1 + 1] - sat[iy1 + 1, ix0] + sat[iy0, ix0]
+        )  # [B, R]
+        return jnp.any((cover > 0) & valid, axis=-1)
+
     def shard_body(idx: ShardedGeoIndex, query: alg.QueryBatch):
         local, gid_map = local_index(idx)
         res = fn(local.text, local.spatial, local.pagerank, query, budgets, weights)
@@ -297,6 +590,13 @@ def make_serve_fn(
         safe = jnp.clip(res.ids, 0, gid_map.shape[0] - 1)
         gids = jnp.where(res.ids >= 0, gid_map[safe], -1)
         scores = jnp.where(res.ids >= 0, res.scores, -jnp.inf)
+        if with_routing:
+            # mask untouched (query, shard) pairs before the merge: their
+            # contribution becomes structurally empty (provably it already
+            # was — require_geo scores a non-overlapping shard −inf)
+            touch = shard_touch(idx, query)  # [B]
+            gids = jnp.where(touch[:, None], gids, -1)
+            scores = jnp.where(touch[:, None], scores, -jnp.inf)
         # hierarchical top-k merge over doc axes (innermost first = intra-pod)
         for ax in reversed(doc_axes):
             g_ids = jax.lax.all_gather(gids, ax)  # [n_ax, B, k]
@@ -311,9 +611,26 @@ def make_serve_fn(
         if with_stats:
             # exact per-query counters: sum each shard's measured stats
             # over the doc axes (every query executed on every shard)
-            stats = {
-                key: jax.lax.psum(v, doc_axes) for key, v in res.stats.items()
-            }
+            raw = res.stats
+            if with_routing:
+                # batch-level visit accounting: a shard counts its whole
+                # batch iff any query touches it — exactly the host loop's
+                # skip semantics, so host and mesh counters stay equal
+                visited = jnp.any(touch)
+                raw = {
+                    key: jnp.where(visited, v, jnp.zeros_like(v))
+                    for key, v in raw.items()
+                }
+            stats = {key: jax.lax.psum(v, doc_axes) for key, v in raw.items()}
+            if with_routing:
+                stats["shards_touched"] = jax.lax.psum(
+                    touch.astype(jnp.float32), doc_axes
+                )
+                # [1] not scalar: stats ride the P(query_axis) out_spec,
+                # so each query-shard contributes its own visit count
+                stats["shards_visited"] = jax.lax.psum(
+                    jnp.any(touch).astype(jnp.float32)[None], doc_axes
+                )
             return gids, scores, stats
         return gids, scores
 

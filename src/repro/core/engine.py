@@ -68,8 +68,11 @@ class GeoSearchEngine:
         weights: ranking.RankWeights | None = None,
         compress: bool = False,
         block_size: int = 128,
+        idf: np.ndarray | None = None,
     ) -> "GeoSearchEngine":
-        text = build_text_index_np(doc_terms, n_terms, n_bitmap_terms)
+        # idf: corpus-global IDF override for shard engines (see
+        # build_text_index_np — keeps impacts partition-independent)
+        text = build_text_index_np(doc_terms, n_terms, n_bitmap_terms, idf=idf)
         spatial = build_spatial_index_np(
             doc_rects, doc_amps, grid, m_intervals, compress=compress,
             block_size=block_size,

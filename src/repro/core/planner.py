@@ -156,7 +156,7 @@ class CostModel:
         occ = np.flatnonzero(np.asarray(self.blk_count) > 0)
         m = np.asarray(self.blk_mbr, np.float64)
         if len(occ):
-            ix0, iy0, ix1, iy1 = _coarse_cells(m[occ], G)
+            ix0, iy0, ix1, iy1 = coarse_cells(m[occ], G)
             w, h = ix1 - ix0 + 1, iy1 - iy0 + 1
             ok = (w > 0) & (h > 0)  # inverted MBRs (padding) cover nothing
             occ, ix0, iy0, w, h = occ[ok], ix0[ok], iy0[ok], w[ok], h[ok]
@@ -182,7 +182,7 @@ class CostModel:
         """Block ids whose coarse cells the query rects touch (superset of
         the blocks whose MBR intersects any rect)."""
         G = _SPAN_GRID
-        ix0, iy0, ix1, iy1 = _coarse_cells(r, G)
+        ix0, iy0, ix1, iy1 = coarse_cells(r, G)
         parts = []
         for j in range(len(r)):
             for cy in range(int(iy0[j]), int(iy1[j]) + 1):
@@ -552,14 +552,20 @@ class Planner:
         ]
 
 
-def _coarse_cells(rects: np.ndarray, grid: int):
-    """Clamped inclusive cell bounds ``(ix0, iy0, ix1, iy1)`` on the coarse
-    span grid — deliberately WITHOUT :func:`geometry.rect_cell_bounds_np`'s
+def coarse_cells(rects: np.ndarray, grid: int):
+    """Clamped inclusive cell bounds ``(ix0, iy0, ix1, iy1)`` on a coarse
+    bbox grid — deliberately WITHOUT :func:`geometry.rect_cell_bounds_np`'s
     upper-edge epsilon, so an edge exactly on a cell boundary also claims
     the next cell.  Over-coverage keeps the candidate set a superset of the
     true MBR hits (the exactness requirement); degenerate (zero-area) block
     MBRs still cover their point's cell, while inverted (padding) MBRs come
     back with ``ix1 < ix0`` and cover nothing.
+
+    Shared machinery: the planner's ``tp_span`` candidate grid and the
+    per-shard coverage summaries that drive footprint routing
+    (:mod:`repro.core.distributed`) both bucket rects through this exact
+    mapping, so a rect intersection can never fall between the cells of
+    the two sides (monotone clamped floors on both).
     """
     g = float(grid)
     ix0 = np.clip(np.floor(rects[..., 0] * g).astype(np.int64), 0, grid - 1)

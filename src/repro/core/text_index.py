@@ -51,11 +51,16 @@ def build_text_index_np(
     doc_terms: list[np.ndarray],
     n_terms: int,
     n_bitmap_terms: int = 0,
+    idf: np.ndarray | None = None,
 ) -> TextIndex:
     """Build from per-doc term-id arrays (with repetitions = frequencies).
 
     Pure-numpy index construction (host side, analogous to the paper's
-    offline index build).
+    offline index build).  ``idf`` overrides the collection IDF — shard
+    builders pass the *corpus-global* IDF (:func:`global_idf_np`) so each
+    posting's impact is rounded to f32 exactly once from statistics that
+    do not depend on the partitioning, making per-doc scores bit-identical
+    across shard layouts (the routing equivalence gate relies on this).
     """
     n_docs = len(doc_terms)
     # term frequencies per doc, collection document frequencies
@@ -70,7 +75,8 @@ def build_text_index_np(
             freq_per_term[int(w)].append(int(c))
 
     df = np.array([len(x) for x in doc_ids_per_term], dtype=np.float64)
-    idf = np.log(1.0 + n_docs / np.maximum(df, 1.0))
+    if idf is None:
+        idf = np.log(1.0 + n_docs / np.maximum(df, 1.0))
 
     offsets = np.zeros((n_terms + 1,), dtype=np.int32)
     offsets[1:] = np.cumsum([len(x) for x in doc_ids_per_term])

@@ -160,16 +160,19 @@ class TraceQuery:
     arrival_s: float = 0.0
 
 
-def _one_query(rng, corpus: SynthCorpus, city: int, d_terms: int, q_rects: int):
+def _one_query(
+    rng, corpus: SynthCorpus, city: int, d_terms: int, q_rects: int,
+    scales: tuple = (0.3, 1.0, 3.0),
+):
     """Sample one variable-width query about ``city`` (terms from a doc)."""
     nt = int(rng.integers(1, d_terms + 1))
     doc = corpus.doc_terms[rng.integers(0, len(corpus.doc_terms))]
     terms = np.unique(rng.choice(doc, size=min(nt, len(doc)), replace=False))
     x, y, r = corpus.cities[city]
-    scales = np.array([0.3, 1.0, 3.0])
+    scales = np.asarray(scales)
     rects, amps = [], []
     for _ in range(int(rng.integers(1, q_rects + 1))):
-        w = r * scales[rng.integers(0, 3)] * rng.uniform(0.5, 1.0)
+        w = r * scales[rng.integers(0, len(scales))] * rng.uniform(0.5, 1.0)
         px = np.clip(x + rng.normal(0, r / 4), 0.001, 0.999)
         py = np.clip(y + rng.normal(0, r / 4), 0.001, 0.999)
         x0, x1 = np.clip(px - w, 0, 1), np.clip(px + w, 0, 1)
@@ -197,6 +200,7 @@ def make_zipf_trace(
     d_terms: int = 4,
     q_rects: int = 2,
     seed: int = 1,
+    scales: tuple = (0.3, 1.0, 3.0),
 ) -> list[TraceQuery]:
     """Skewed serving trace: Zipf repetition + geographic hot spots.
 
@@ -206,6 +210,11 @@ def make_zipf_trace(
     population centers).  The trace then samples the pool with Zipf(``a``)
     rank skew, so head queries repeat heavily — the regime where a result
     cache pays for itself — while the tail keeps the batcher honest.
+
+    ``scales`` sets the footprint-extent mix in city radii; the default
+    matches the paper's town (0.3·r) / city (1·r) / region (3·r) query
+    classes, and ``scales=(1.0,)`` pins a city-sized workload (the
+    footprint-routing benches).
     """
     rng = np.random.default_rng(seed)
     hot = np.argsort(-corpus.cities[:, 2])[:n_hot_cities]
@@ -215,7 +224,7 @@ def make_zipf_trace(
             city = int(hot[rng.integers(0, len(hot))])
         else:
             city = int(rng.integers(0, len(corpus.cities)))
-        pool.append(_one_query(rng, corpus, city, d_terms, q_rects))
+        pool.append(_one_query(rng, corpus, city, d_terms, q_rects, scales))
     # Zipf over pool ranks (rejection-free: clip the unbounded tail)
     ranks = np.minimum(rng.zipf(zipf_a, n_queries) - 1, pool_size - 1)
     return [pool[r] for r in ranks]

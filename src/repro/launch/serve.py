@@ -27,12 +27,22 @@ Replay discipline (``--arrival``):
   is queued or executing subscribe to the in-flight result instead of
   re-executing (reported in the ``coalesced`` counter).
 
-``--algo-prune`` switches the K-SWEEP engine to the block-max pruned
-sweep→score→select pipeline (``--fused`` runs it as the Pallas kernel;
-interpret mode on CPU): whole sweep blocks whose precomputed upper bound
-cannot beat the running top-C threshold are skipped before scoring, which
-shrinks the inverted-index probes and the streamed spatial bytes in the
-reported counters.
+``--prune`` (old spelling ``--algo-prune`` still accepted) switches the
+K-SWEEP engine to the block-max pruned sweep→score→select pipeline
+(``--fused`` runs it as the Pallas kernel; interpret mode on CPU): whole
+sweep blocks whose precomputed upper bound cannot beat the running top-C
+threshold are skipped before scoring, which shrinks the inverted-index
+probes and the streamed spatial bytes in the reported counters.
+
+Sharded serving (``--shards N``) is configured by two grouped flags:
+``--partition {hash,morton,region}`` picks the document
+:class:`~repro.core.distributed.Partitioner` (resolved from the string
+exactly once, here at the CLI boundary), and ``--routing
+{broadcast,footprint}`` picks the scatter discipline — ``broadcast``
+sends every batch to all shards (the paper's O(S) baseline), while
+``footprint`` consults each shard's coverage grid and skips shards no
+query footprint touches, bit-identically.  The report then carries a
+per-plan ``routing:`` fan-out line (mean shards-touched per query).
 
 Telemetry (``--trace-out/--metrics-out/--audit-out/--events-out``): any of
 these flags builds the server with a :class:`repro.obs.Telemetry` handle
@@ -59,7 +69,9 @@ Examples::
     python -m repro.launch.serve --trace zipf --cache landlord --batcher bucketed
     python -m repro.launch.serve --trace zipf --arrival poisson \\
         --rate-qps 200 --max-wait-ms 5 --slo-ms 50 --workers 4 --coalesce
-    python -m repro.launch.serve --trace zipf --algo-prune --fused --cache none
+    python -m repro.launch.serve --trace zipf --prune --fused --cache none
+    python -m repro.launch.serve --trace zipf --shards 8 \\
+        --partition region --routing footprint --cache none
     python -m repro.launch.serve --trace mixture --algorithm auto \\
         --grid 128 --m-intervals 8 --cache none
 """
@@ -68,6 +80,7 @@ from __future__ import annotations
 import argparse
 
 from repro.core import GeoSearchEngine, QueryBudgets
+from repro.core.distributed import resolve_partitioner
 from repro.corpus import (
     ARRIVAL_KINDS,
     make_corpus,
@@ -79,9 +92,9 @@ from repro.corpus import (
 from repro.serving import (
     DeadlineBatcher,
     GeoServer,
-    ShardedExecutor,
     SingleDeviceExecutor,
     make_cache,
+    make_executor,
 )
 
 
@@ -125,29 +138,23 @@ def build_stack(args, corpus):
     budgets = QueryBudgets(
         max_candidates=2048, max_tiles=args.max_tiles, k_sweeps=8,
         sweep_budget=max(args.n_docs // 8, 256), top_k=args.top_k,
-        prune=args.algo_prune,
+        prune=args.prune,
     )
-    kw = {}
-    if args.use_pallas and args.algorithm == "k_sweep":
-        from repro.kernels.geo_score.ops import geo_score_toeprints
-
-        kw = {"tp_scorer": geo_score_toeprints}
-    if args.fused and args.algorithm in ("k_sweep", "auto"):
-        kw["fused"] = True
-    if args.shards > 1:
-        executor = ShardedExecutor.build(
-            corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
-            pagerank=corpus.pagerank, n_shards=args.shards,
-            partition=args.partition, grid=args.grid, budgets=budgets,
-            algorithm=args.algorithm, **kw,
-        )
-    else:
-        eng = GeoSearchEngine.build(
-            corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
-            pagerank=corpus.pagerank, grid=args.grid,
-            m_intervals=args.m_intervals, budgets=budgets,
-        )
-        executor = SingleDeviceExecutor(eng, args.algorithm, **kw)
+    sharded = args.shards > 1
+    # the one place a partition *string* becomes a Partitioner instance
+    executor = make_executor(
+        "sharded" if sharded else "single",
+        corpus,
+        algorithm=args.algorithm,
+        budgets=budgets,
+        partitioner=resolve_partitioner(args.partition) if sharded else None,
+        routing=args.routing if sharded else "broadcast",
+        n_shards=args.shards,
+        grid=args.grid,
+        m_intervals=args.m_intervals,
+        fused=args.fused,
+        use_pallas=args.use_pallas,
+    )
 
     cache = make_cache(args.cache, args.cache_capacity, max_bytes=args.cache_max_bytes)
     max_wait_s = args.max_wait_ms * 1e-3
@@ -228,7 +235,20 @@ def main() -> None:
         "instead of re-executing them",
     )
     ap.add_argument("--shards", type=int, default=1)
-    ap.add_argument("--partition", default="geo", choices=["hash", "geo"])
+    ap.add_argument(
+        "--partition", default="morton",
+        choices=["hash", "morton", "region", "geo"],
+        metavar="{hash,morton,region}",  # "geo" = legacy alias for morton
+        help="document partitioner for --shards > 1 (hash = round-robin "
+        "baseline; morton = Z-order range split; region = recursive "
+        "median KD split)",
+    )
+    ap.add_argument(
+        "--routing", default="broadcast", choices=["broadcast", "footprint"],
+        help="scatter discipline for --shards > 1: broadcast every batch "
+        "to all shards, or skip shards whose coverage grid no query "
+        "footprint touches (bit-identical results, fewer shards visited)",
+    )
     ap.add_argument(
         "--algorithm", default="k_sweep",
         choices=["text_first", "geo_first", "k_sweep", "auto"],
@@ -240,15 +260,20 @@ def main() -> None:
         help="score with the Pallas geo_score kernel (interpret on CPU)",
     )
     ap.add_argument(
-        "--algo-prune", action="store_true",
+        "--prune", action="store_true",
         help="block-max pruned K-SWEEP: skip sweep blocks whose "
         "upper bound cannot beat the running top-C threshold "
         "(fewer index probes + bytes streamed)",
     )
+    # deprecated spelling, kept for one release; hidden from --help
+    ap.add_argument(
+        "--algo-prune", action="store_true", dest="prune",
+        help=argparse.SUPPRESS,
+    )
     ap.add_argument(
         "--fused", action="store_true",
         help="run K-SWEEP through the fused Pallas sweep kernel "
-        "(with --algo-prune: in-kernel sweep→score→select; "
+        "(with --prune: in-kernel sweep→score→select; "
         "interpret mode on CPU)",
     )
     ap.add_argument(
@@ -282,6 +307,8 @@ def main() -> None:
             "--workers > 1 requires an open-loop --arrival "
             "(poisson | bursty | diurnal)"
         )
+    if args.routing == "footprint" and args.shards <= 1:
+        ap.error("--routing footprint requires --shards > 1")
     if args.max_wait_ms is None:
         # closed-loop: count-only batching (PR 1); open-loop: a live server
         # would never hold a half-full bucket for seconds
@@ -309,8 +336,9 @@ def main() -> None:
         f"serving {len(trace)} queries: trace={args.trace} arrival={args.arrival} "
         f"rate_qps={args.rate_qps:g} max_wait_ms={args.max_wait_ms:g} "
         f"cache={args.cache} batcher={args.batcher} shards={args.shards} "
+        f"partition={args.partition} routing={args.routing} "
         f"workers={args.workers} coalesce={args.coalesce} "
-        f"algo={args.algorithm} prune={args.algo_prune} fused={args.fused} …"
+        f"algo={args.algorithm} prune={args.prune} fused={args.fused} …"
     )
     report = server.run_trace(trace, arrival=args.arrival, slo_ms=args.slo_ms)
     print(report.summary())

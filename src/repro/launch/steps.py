@@ -451,7 +451,7 @@ def _check_i32_addressable(name: str, value: int, n_shards: int) -> int:
 
 def build_geoweb_cell(spec: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
     from repro.core import algorithms as alg
-    from repro.core.distributed import make_serve_fn, ShardedGeoIndex
+    from repro.core.distributed import COVERAGE_GRID, make_serve_fn, ShardedGeoIndex
 
     cfg = spec.config
     if mesh is None:
@@ -494,9 +494,15 @@ def build_geoweb_cell(spec: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
         blk_max_mass=sh((S, NB), jnp.float32, lead + (None,)),
         pagerank=sh((S, N), jnp.float32, lead + (None,)),
         doc_offset=sh((S, N), jnp.int32, lead + (None,)),
+        coverage_sat=sh(
+            (S, COVERAGE_GRID + 1, COVERAGE_GRID + 1),
+            jnp.float32,
+            lead + (None, None),
+        ),
         grid=cfg.grid,
         n_terms=M,
         block_size=block_size,
+        coverage_grid=COVERAGE_GRID,
     )
     B, d, Qr = cfg.query_batch, cfg.d_terms, cfg.q_rects
     query = alg.QueryBatch(

@@ -21,6 +21,9 @@ under a stable dotted naming scheme:
     pending.expired_total           counter   coalesce windows closed
     executor.batches_total{plan=}   counter
     executor.<stat>_total{plan=}    counter   bytes_*, n_probes, seeks, ...
+    executor.shards_touched{plan=}  histogram shard fan-out per routed query
+                                              (footprint routing only;
+                                              broadcast never emits it)
     engine.compiled_fns_total       counter   plan x shape jit programs
     planner.tp_span_probe           counter   block MBRs tested per query
                                               (bbox-grid candidates only)

@@ -31,6 +31,7 @@ around the index, not the index alone.  This package is that layer:
 from repro.serving.batcher import BucketShape, DeadlineBatcher, ShapeBucketedBatcher
 from repro.serving.cache import LandlordCache, LRUCache, make_cache
 from repro.serving.executor import MeshExecutor, ShardedExecutor, SingleDeviceExecutor
+from repro.serving.factory import EXECUTOR_KINDS, make_executor
 from repro.serving.fingerprint import query_fingerprint
 from repro.serving.pending import PendingEntry, PendingTable
 from repro.serving.server import BatchEvent, GeoServer, ServeReport
@@ -45,6 +46,8 @@ __all__ = [
     "SingleDeviceExecutor",
     "ShardedExecutor",
     "MeshExecutor",
+    "EXECUTOR_KINDS",
+    "make_executor",
     "query_fingerprint",
     "PendingEntry",
     "PendingTable",

@@ -62,6 +62,9 @@ class RawBatch:
     rects: np.ndarray  # f32[B, r, 4]
     amps: np.ndarray  # f32[B, r]
     plan: object = None  # the plan every query in this batch shares
+    # filled post-execution by footprint-routed executors: per-batch shard
+    # fan-out {"shards_touched": f64[n_real], "shards_visited": float}
+    routing: dict | None = None
 
     @property
     def n_real(self) -> int:

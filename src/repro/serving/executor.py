@@ -6,15 +6,27 @@ The executor is the serving layer's view of the engine: it takes a padded
 
 * :class:`SingleDeviceExecutor` wraps one :class:`GeoSearchEngine`.
 * :class:`ShardedExecutor` partitions the corpus doc-wise into ``S`` shards
-  (``hash`` round-robin or ``geo`` Morton-contiguous, the same policies as
-  :mod:`repro.core.distributed`), builds one engine per shard, **scatters**
-  each batch to every shard, and **gathers** the per-shard local top-k
-  lists into a global top-k by a k-way merge.  Per-query merge traffic is
-  O(k · S), independent of corpus size — the property that lets the
-  architecture scale out.
+  with a :class:`~repro.core.distributed.Partitioner` strategy object
+  (hash round-robin, Morton-contiguous, or KD region ranges), builds one
+  engine per shard, **scatters** each batch to the shards it can reach,
+  and **gathers** the per-shard local top-k lists into a global top-k by
+  a k-way merge.  Per-query merge traffic is O(k · S), independent of
+  corpus size — the property that lets the architecture scale out.
 * :class:`MeshExecutor` is the SPMD twin: one ``shard_map`` serve step per
   plan, with the per-stage byte counters *measured inside the step* and
   psum-reduced over the doc axes.
+
+Footprint routing (``routing="footprint"``): each shard carries a
+coverage-grid SAT of its toe prints (:mod:`repro.core.distributed`).
+:meth:`ShardedExecutor.route_batch` tests every query footprint against
+every shard's SAT; ``run`` then *skips* shards no query touches — result-
+preserving because ``require_geo`` ranking scores a doc −inf when its geo
+score is 0, so an unreachable shard can only return empty lists.  The mesh
+executor gets the same semantics from ``make_serve_fn(with_routing=True)``,
+which masks untouched shards inside the jit'd step.  Both report
+``shards_touched`` (per query) and ``shards_visited`` (per batch) stats in
+footprint mode; ``routing="broadcast"`` (the default) keeps the original
+visit-everything behaviour and stat keys.
 
 Plan-driven execution: every executor accepts ``run(batch, plan=...)``
 with a :class:`~repro.core.planner.QueryPlan`, and ``algorithm="auto"``
@@ -41,10 +53,38 @@ import numpy as np
 
 from repro.core import algorithms as alg
 from repro.core import ranking
-from repro.core.distributed import partition_order
+from repro.core.distributed import (
+    MortonPartitioner,
+    Partitioner,
+    _require_partitioner,
+    _valid_rects_np,
+    coverage_grid_np,
+    coverage_sat_np,
+    footprint_touch_np,
+)
 from repro.core.engine import GeoSearchEngine
 from repro.core.planner import CostModel, Planner, QueryPlan
-from repro.core.text_index import global_idf_np, rescale_impacts_to_global
+from repro.core.text_index import global_idf_np
+
+ROUTINGS = ("broadcast", "footprint")
+
+
+def _check_routing(routing: str) -> str:
+    if routing not in ROUTINGS:
+        raise ValueError(f"routing must be one of {ROUTINGS}, got {routing!r}")
+    return routing
+
+
+def _reject_partition_kwarg(kw: dict) -> None:
+    """The ``partition="hash"|"geo"`` string flag is gone — fail loudly
+    instead of letting the stale kwarg leak into engine query kwargs."""
+    if "partition" in kw:
+        raise TypeError(
+            "partition= strings were replaced by the Partitioner API: pass "
+            "partitioner=HashPartitioner() / MortonPartitioner() / "
+            "RegionRangePartitioner() (strings resolve only at the CLI "
+            "boundary via repro.core.distributed.resolve_partitioner)"
+        )
 
 
 class SingleDeviceExecutor:
@@ -99,10 +139,20 @@ class SingleDeviceExecutor:
 class ShardedExecutor:
     """Doc-sharded scatter-gather execution over per-shard engines."""
 
-    def __init__(self, engines, global_ids, algorithm: str = "k_sweep", **kw):
+    def __init__(
+        self,
+        engines,
+        global_ids,
+        algorithm: str = "k_sweep",
+        routing: str = "broadcast",
+        **kw,
+    ):
+        _reject_partition_kwarg(kw)
         self.engines: list[GeoSearchEngine] = engines
         self.global_ids: list[np.ndarray] = global_ids  # per shard: local → global
         self.algorithm = algorithm
+        self.routing = _check_routing(routing)
+        self._coverage_sats: np.ndarray | None = None  # lazy f32[S, G+1, G+1]
         self.kw = kw
         self.telemetry = None
         self.planner: Planner | None = None
@@ -149,20 +199,26 @@ class ShardedExecutor:
         n_terms: int,
         pagerank: np.ndarray,
         n_shards: int,
-        partition: str = "geo",
+        partitioner: Partitioner | None = None,
         grid: int = 64,
         budgets: alg.QueryBudgets | None = None,
         weights: ranking.RankWeights | None = None,
         algorithm: str = "k_sweep",
+        routing: str = "broadcast",
         **kw,
     ) -> "ShardedExecutor":
+        _reject_partition_kwarg(kw)
         budgets = budgets or alg.QueryBudgets()
-        order = partition_order(doc_rects, n_shards, partition)
+        partitioner = _require_partitioner(partitioner, default=MortonPartitioner)
+        shard_ids = np.asarray(partitioner.assign(doc_rects, n_shards))
         idf_global = global_idf_np(doc_terms, n_terms)
-        per = (len(doc_terms) + n_shards - 1) // n_shards
         engines, gids = [], []
         for s in range(n_shards):
-            sel = order[s * per : (s + 1) * per]
+            # ascending global ids in-shard: local tie-breaks match global
+            sel = np.flatnonzero(shard_ids == s)
+            # global IDF built in directly: impacts round to f32 once from
+            # partition-independent statistics, so per-doc scores are
+            # bit-identical across shard layouts (routing equivalence gate)
             eng = GeoSearchEngine.build(
                 [doc_terms[i] for i in sel],
                 doc_rects[sel],
@@ -172,26 +228,68 @@ class ShardedExecutor:
                 grid=grid,
                 budgets=budgets,
                 weights=weights,
-            )
-            # broadcast global term statistics to the shard (global IDF)
-            eng.index = replace(
-                eng.index,
-                text=rescale_impacts_to_global(eng.index.text, idf_global),
+                idf=idf_global,
             )
             engines.append(eng)
             gids.append(sel.astype(np.int32))
-        return ShardedExecutor(engines, gids, algorithm, **kw)
+        return ShardedExecutor(engines, gids, algorithm, routing=routing, **kw)
 
     # ------------------------------------------------------------------
+    def _coverage(self) -> np.ndarray:
+        """Stacked per-shard coverage SATs ``f32[S, G+1, G+1]`` (lazy)."""
+        if self._coverage_sats is None:
+            self._coverage_sats = np.stack(
+                [
+                    coverage_sat_np(
+                        coverage_grid_np(
+                            np.asarray(eng.index.spatial.tp_rects),
+                            np.asarray(eng.index.spatial.tp_amps),
+                        )
+                    )
+                    for eng in self.engines
+                ]
+            )
+        return self._coverage_sats
+
+    def route_batch(self, batch: alg.QueryBatch) -> tuple[np.ndarray, np.ndarray]:
+        """Footprint-routing decision for a batch.
+
+        Returns ``(visit bool[S], touched f64[B])``: which shards to
+        scatter the batch to (any query's footprints reach them) and how
+        many shards each query's own footprints touch.
+        """
+        touch = footprint_touch_np(
+            self._coverage(), np.asarray(batch.rects), np.asarray(batch.amps)
+        )  # [S, B]
+        return touch.any(axis=1), touch.sum(axis=0, dtype=np.float64)
+
     def run(
         self, batch: alg.QueryBatch, plan: QueryPlan | None = None
     ) -> alg.TopKResult:
-        """Scatter the batch to all shards; gather + merge local top-k."""
+        """Scatter the batch to the routed shards; gather + merge top-k."""
         all_ids, all_scores = [], []
         stats_acc: dict[str, np.ndarray] = {}
+        visit = np.ones(self.n_shards, dtype=bool)
+        if self.routing == "footprint":
+            visit, touched = self.route_batch(batch)
+            if not _valid_rects_np(batch.rects, batch.amps).any():
+                # all-padding batch (server warmup): broadcast so every
+                # shard engine still compiles during the warmup pass
+                visit[:] = True
+            stats_acc["shards_touched"] = touched
+            stats_acc["shards_visited"] = np.float64(visit.sum())
+            if not visit.any():
+                b, k = batch.terms.shape[0], self.top_k
+                return alg.TopKResult(
+                    ids=np.full((b, k), -1, dtype=np.int32),
+                    scores=np.full((b, k), -np.inf, dtype=np.float32),
+                    stats=stats_acc,
+                )
         tracer = self.telemetry.tracer if self.telemetry else None
         label = plan.label if plan is not None else self.algorithm
         for shard, (eng, gid) in enumerate(zip(self.engines, self.global_ids)):
+            if not visit[shard]:
+                continue
             t0 = tracer.wall_now() if tracer is not None else 0.0
             if plan is not None:
                 # each shard engine re-clamps the plan's sweep budget to
@@ -267,6 +365,7 @@ class MeshExecutor:
         doc_axes: tuple[str, ...] = ("data",),
         query_axis: str = "model",
         fused: bool = False,
+        routing: str = "broadcast",
     ):
         self.mesh = mesh
         self._index = sharded_index
@@ -279,6 +378,7 @@ class MeshExecutor:
         self.doc_axes = doc_axes
         self.query_axis = query_axis
         self.fused = fused
+        self.routing = _check_routing(routing)
         # plan (or None = the construction-time fixed config) → serve step
         self._serve_fns: dict = {None: serve_fn}
         self.telemetry = None
@@ -297,17 +397,23 @@ class MeshExecutor:
         n_terms: int,
         pagerank: np.ndarray,
         mesh,
-        partition: str = "geo",
+        partitioner: Partitioner | None = None,
         grid: int = 64,
         budgets: alg.QueryBudgets | None = None,
         weights: ranking.RankWeights | None = None,
         algorithm: str = "k_sweep",
         fused: bool = False,
+        routing: str = "broadcast",
+        **kw,
     ) -> "MeshExecutor":
         from repro.core.distributed import make_serve_fn, shard_corpus_np
         from repro.sharding.specs import DEFAULT_RULES
 
+        _reject_partition_kwarg(kw)
+        if kw:
+            raise TypeError(f"unexpected keyword arguments: {sorted(kw)}")
         budgets = budgets or alg.QueryBudgets()
+        partitioner = _require_partitioner(partitioner, default=MortonPartitioner)
         doc_axes = tuple(a for a in DEFAULT_RULES["docs"] if a in mesh.axis_names)
         query_axis = next(a for a in DEFAULT_RULES["queries"] if a in mesh.axis_names)
         n_shards = 1
@@ -315,7 +421,7 @@ class MeshExecutor:
             n_shards *= mesh.shape[a]
         sharded = shard_corpus_np(
             doc_terms, doc_rects, doc_amps, pagerank, n_terms,
-            n_shards, partition, grid=grid,
+            n_shards, partitioner, grid=grid,
         )
         # sweeps cannot exceed a shard's toe-print store (same clamp as
         # GeoSearchEngine.build applies for the single-index case)
@@ -330,7 +436,7 @@ class MeshExecutor:
             doc_axes=doc_axes, query_axis=query_axis,
             algorithm=serve_algorithm, grid=grid, n_terms=n_terms,
             fused=fused, block_size=sharded.block_size,
-            with_stats=True,
+            with_stats=True, with_routing=routing == "footprint",
         )
         return MeshExecutor(
             mesh, serve, sharded, budgets.top_k,
@@ -338,7 +444,7 @@ class MeshExecutor:
             n_rect_slots=doc_rects.shape[1],
             block_size=sharded.block_size,
             weights=weights, doc_axes=doc_axes, query_axis=query_axis,
-            fused=fused,
+            fused=fused, routing=routing,
         )
 
     @property
@@ -376,6 +482,7 @@ class MeshExecutor:
             algorithm=plan.algorithm, grid=self._index.grid,
             n_terms=self._index.n_terms, fused=plan.fused,
             block_size=self._index.block_size, with_stats=True,
+            with_routing=self.routing == "footprint",
         )
         self._serve_fns[plan] = serve
         return serve

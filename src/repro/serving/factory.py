@@ -1,0 +1,119 @@
+"""One construction path for the three executor variants.
+
+``launch/serve.py``, the benchmarks, and the tests used to hand-build
+:class:`SingleDeviceExecutor` / :class:`ShardedExecutor` /
+:class:`MeshExecutor` with three diverging keyword sets (and a stringly
+``partition=`` flag).  :func:`make_executor` is the single front door:
+pick a ``kind``, hand it the corpus, and configure partitioning/routing
+through the :class:`~repro.core.distributed.Partitioner` API.
+
+    from repro.core.distributed import RegionRangePartitioner
+    ex = make_executor(
+        "sharded", corpus, n_shards=8,
+        partitioner=RegionRangePartitioner(), routing="footprint",
+    )
+
+The corpus argument is duck-typed: anything with ``doc_terms``,
+``doc_rects``, ``doc_amps``, ``pagerank`` and ``n_terms`` attributes
+(:class:`repro.corpus.SynthCorpus` in practice).
+"""
+from __future__ import annotations
+
+from repro.core import algorithms as alg
+from repro.core import ranking
+from repro.core.distributed import Partitioner
+from repro.core.engine import GeoSearchEngine
+from repro.serving.executor import (
+    MeshExecutor,
+    ShardedExecutor,
+    SingleDeviceExecutor,
+    _check_routing,
+)
+
+EXECUTOR_KINDS = ("single", "sharded", "mesh")
+
+
+def make_executor(
+    kind: str,
+    corpus,
+    *,
+    algorithm: str = "k_sweep",
+    budgets: alg.QueryBudgets | None = None,
+    weights: ranking.RankWeights | None = None,
+    partitioner: Partitioner | None = None,
+    routing: str = "broadcast",
+    n_shards: int = 1,
+    mesh=None,
+    grid: int = 64,
+    m_intervals: int = 2,
+    fused: bool = False,
+    use_pallas: bool = False,
+    telemetry=None,
+):
+    """Build an executor of ``kind`` over ``corpus``; see module docstring.
+
+    * ``kind="single"``  — one engine, one device.  Partitioning/routing
+      options do not apply and raise ``ValueError`` if set.
+    * ``kind="sharded"`` — host scatter-gather over ``n_shards`` per-shard
+      engines, split by ``partitioner`` (default Morton).
+    * ``kind="mesh"``    — SPMD ``shard_map`` step over ``mesh`` (required);
+      the shard count comes from the mesh's doc axes, not ``n_shards``.
+
+    ``routing="footprint"`` (sharded/mesh) skips/masks shards no query
+    footprint touches; ``telemetry`` is attached before returning.
+    """
+    if kind not in EXECUTOR_KINDS:
+        raise ValueError(f"kind must be one of {EXECUTOR_KINDS}, got {kind!r}")
+    _check_routing(routing)
+    if partitioner is not None and not isinstance(partitioner, Partitioner):
+        raise TypeError(
+            "partitioner must be a Partitioner instance; resolve strings at "
+            "the CLI boundary with repro.core.distributed.resolve_partitioner"
+        )
+    budgets = budgets or alg.QueryBudgets()
+
+    kw = {}
+    if use_pallas:
+        if kind == "mesh":
+            raise ValueError(
+                "use_pallas applies to host executors only (the mesh step "
+                "selects kernels via fused=)"
+            )
+        if algorithm == "k_sweep":
+            from repro.kernels.geo_score.ops import geo_score_toeprints
+
+            kw["tp_scorer"] = geo_score_toeprints
+    if fused and algorithm in ("k_sweep", "auto") and kind != "mesh":
+        kw["fused"] = True
+
+    if kind == "single":
+        if partitioner is not None or routing != "broadcast" or n_shards != 1:
+            raise ValueError(
+                "partitioner/routing/n_shards only apply to kind='sharded' "
+                "or kind='mesh'"
+            )
+        eng = GeoSearchEngine.build(
+            corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
+            pagerank=corpus.pagerank, grid=grid, m_intervals=m_intervals,
+            budgets=budgets, weights=weights,
+        )
+        executor = SingleDeviceExecutor(eng, algorithm, **kw)
+    elif kind == "sharded":
+        executor = ShardedExecutor.build(
+            corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
+            pagerank=corpus.pagerank, n_shards=n_shards,
+            partitioner=partitioner, grid=grid, budgets=budgets,
+            weights=weights, algorithm=algorithm, routing=routing, **kw,
+        )
+    else:  # mesh
+        if mesh is None:
+            raise ValueError("kind='mesh' requires mesh=")
+        executor = MeshExecutor.build(
+            corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
+            pagerank=corpus.pagerank, mesh=mesh, partitioner=partitioner,
+            grid=grid, budgets=budgets, weights=weights, algorithm=algorithm,
+            fused=fused, routing=routing,
+        )
+    if telemetry is not None:
+        executor.attach_telemetry(telemetry)
+    return executor

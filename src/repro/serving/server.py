@@ -121,6 +121,10 @@ class ServeReport:
     plan_queries: dict = field(default_factory=dict)  # label -> int
     plan_latencies_s: dict = field(default_factory=dict)  # label -> [float]
     plan_stats: dict = field(default_factory=dict)  # label -> {ctr: float}
+    # shard fan-out per plan (footprint-routed executors only): label ->
+    # {"queries", "shards_touched", "batches", "shards_visited"} — the
+    # per-query mean shards-touched is the routing win the paper argues for
+    routing: dict = field(default_factory=dict)
     # per-trace-position results (run_trace(collect_results=True) only)
     results: list | None = None
     arrival: str = "closed"
@@ -177,6 +181,15 @@ class ServeReport:
         self.plan_queries[label] = self.plan_queries.get(label, 0) + 1
         self.plan_latencies_s.setdefault(label, []).append(latency_s)
 
+    def routing_mean(self, label: str) -> float:
+        """Mean shards-touched per executed query under one plan; NaN when
+        no routed batch ran under ``label`` (same contract as
+        :meth:`plan_percentile_ms`)."""
+        r = self.routing.get(label)
+        if not r or not r["queries"]:
+            return float("nan")
+        return r["shards_touched"] / r["queries"]
+
     def summary(self) -> str:
         per_q = {
             k: v / max(self.n_queries, 1)
@@ -203,6 +216,14 @@ class ServeReport:
                 for label, n in sorted(self.plan_queries.items())
             )
             lines.append(f"plans: {mix}")
+        if self.routing:
+            fan = "  ".join(
+                f"{label}: shards/q={self.routing_mean(label):.2f} "
+                f"visited/batch="
+                f"{r['shards_visited'] / max(r['batches'], 1):.2f}"
+                for label, r in sorted(self.routing.items())
+            )
+            lines.append(f"routing: {fan}")
         if self.batch_wait_s:
             decomp = "  ".join(
                 f"{stage}_p50/p99={self.stage_percentile_ms(stage, 50):.3f}/"
@@ -791,6 +812,18 @@ class GeoServer:
             jax.block_until_ready(res.scores)
 
     @staticmethod
+    def routing_acc(report: ServeReport, label: str) -> dict:
+        return report.routing.setdefault(
+            label,
+            {
+                "queries": 0,
+                "shards_touched": 0.0,
+                "batches": 0,
+                "shards_visited": 0.0,
+            },
+        )
+
+    @staticmethod
     def _to_query_batch(raw: RawBatch) -> alg.QueryBatch:
         return alg.QueryBatch(
             terms=jnp.asarray(raw.terms),
@@ -825,6 +858,27 @@ class GeoServer:
                 metrics.inc(f"executor.{key}_total", total, plan=label)
             if arr.ndim >= 1 and arr.shape[0] == raw.shape.batch:
                 per_row[key] = arr.reshape(arr.shape[0], -1).sum(axis=1)
+        if "shards_touched" in per_row:
+            # footprint-routed executor: fold this batch's fan-out into the
+            # per-plan routing summary (real rows only — padding rows touch
+            # no shard a served query can be charged for)
+            touched = per_row["shards_touched"][: raw.n_real]
+            raw.routing = {
+                "shards_touched": touched,
+                "shards_visited": float(
+                    np.asarray(res.stats.get("shards_visited", 0.0)).sum()
+                ),
+            }
+            r = self.routing_acc(report, label)
+            r["queries"] += raw.n_real
+            r["shards_touched"] += float(touched.sum())
+            r["batches"] += 1
+            r["shards_visited"] += raw.routing["shards_visited"]
+            if metrics is not None:
+                for v in touched:
+                    metrics.observe(
+                        "executor.shards_touched", float(v), plan=label
+                    )
         if tel and tel.audit is not None and raw.plan is not None:
             # join each planned row's measured counters back onto its
             # audit record — prediction vs ground truth, per query

@@ -8,6 +8,7 @@ import numpy as np
 import pytest
 
 from repro.core import GeoSearchEngine, QueryBudgets
+from repro.core.distributed import HashPartitioner
 from repro.core.spatial_index import block_metadata_np
 from repro.corpus import make_corpus, make_uniform_trace, make_zipf_trace, pad_trace_batch
 from repro.kernels.sweep_score.ops import sweep_score, sweep_score_pruned
@@ -310,7 +311,7 @@ def test_sharded_executor_prune_matches_single():
     single = SingleDeviceExecutor(eng, fused=True)
     sharded = ShardedExecutor.build(
         corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
-        pagerank=corpus.pagerank, n_shards=1, partition="hash",
+        pagerank=corpus.pagerank, n_shards=1, partitioner=HashPartitioner(),
         grid=16, budgets=budgets, fused=True,
     )
     trace = pad_trace_batch(make_zipf_trace(corpus, n_queries=16, pool_size=8, seed=12))
@@ -343,8 +344,8 @@ def test_mesh_executor_prune_fused_matches_single():
     mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
     meshx = MeshExecutor.build(
         corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
-        pagerank=corpus.pagerank, mesh=mesh, partition="hash", grid=16,
-        budgets=budgets, fused=True,
+        pagerank=corpus.pagerank, mesh=mesh, partitioner=HashPartitioner(),
+        grid=16, budgets=budgets, fused=True,
     )
     eng = GeoSearchEngine.build(
         corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,

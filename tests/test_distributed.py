@@ -27,7 +27,9 @@ def test_distributed_serve_matches_oracle():
         import json, numpy as np, jax
         from repro.corpus import make_corpus, make_query_trace
         from repro.core import GeoSearchEngine, QueryBudgets
-        from repro.core.distributed import shard_corpus_np, make_serve_fn
+        from repro.core.distributed import (
+            MortonPartitioner, shard_corpus_np, make_serve_fn,
+        )
 
         corpus = make_corpus(n_docs=512, n_terms=100, seed=0)
         budgets = QueryBudgets(max_candidates=512, max_tiles=256, k_sweeps=4,
@@ -35,7 +37,8 @@ def test_distributed_serve_matches_oracle():
         mesh = jax.make_mesh((4, 2), ("data", "model"))
         sharded = shard_corpus_np(corpus.doc_terms, corpus.doc_rects,
                                   corpus.doc_amps, corpus.pagerank,
-                                  corpus.n_terms, 4, "geo", grid=32)
+                                  corpus.n_terms, 4, MortonPartitioner(),
+                                  grid=32)
         serve = make_serve_fn(mesh, budgets, doc_axes=("data",), grid=32,
                               n_terms=corpus.n_terms)
         q = make_query_trace(corpus, n_queries=16, seed=1)
@@ -150,10 +153,11 @@ def test_mesh_executor_serving_stack():
         budgets = QueryBudgets(max_candidates=1024, max_tiles=2048, k_sweeps=8,
                                sweep_budget=1024, top_k=10)
         mesh = jax.make_mesh((8, 1), ("data", "model"))
+        from repro.core.distributed import MortonPartitioner
         mx = MeshExecutor.build(
             corpus.doc_terms, corpus.doc_rects, corpus.doc_amps,
             corpus.n_terms, pagerank=corpus.pagerank, mesh=mesh,
-            partition="geo", grid=32, budgets=budgets)
+            partitioner=MortonPartitioner(), grid=32, budgets=budgets)
         eng = GeoSearchEngine.build(
             corpus.doc_terms, corpus.doc_rects, corpus.doc_amps,
             corpus.n_terms, pagerank=corpus.pagerank, grid=32,

@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 from repro.core import GeoSearchEngine, Planner, QueryBudgets, QueryPlan
+from repro.core.distributed import HashPartitioner
 from repro.core.planner import COST_KEYS, QueryFeatures
 from repro.corpus import (
     make_corpus,
@@ -293,7 +294,7 @@ def test_sharded_executor_runs_plans(small_engine):
     )
     sharded = ShardedExecutor.build(
         corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
-        pagerank=corpus.pagerank, n_shards=2, partition="hash",
+        pagerank=corpus.pagerank, n_shards=2, partitioner=HashPartitioner(),
         grid=16, budgets=budgets, algorithm="auto",
     )
     assert sharded.planner is not None

@@ -1,0 +1,269 @@
+"""Footprint-routing equivalence suite.
+
+The routing contract: a footprint-routed executor may *skip* shards whose
+coverage grid no query footprint touches, and must remain **bit-identical**
+to the broadcast baseline — `require_geo` ranking scores a doc −inf when
+its geo score is 0, so an unreachable shard can only contribute empty
+lists, and the shard builders construct impacts from partition-independent
+global statistics so per-doc scores do not depend on the shard layout.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import GeoSearchEngine, QueryBudgets
+from repro.core.algorithms import QueryBatch
+from repro.core.distributed import (
+    HashPartitioner,
+    MortonPartitioner,
+    RegionRangePartitioner,
+    resolve_partitioner,
+)
+from repro.corpus import make_corpus, make_query_trace
+from repro.serving import ShardedExecutor, make_executor
+
+
+def _budgets(top_k: int = 10) -> QueryBudgets:
+    # generous: every path is exact, so disagreement = routing bug
+    return QueryBudgets(
+        max_candidates=1024, max_tiles=256, k_sweeps=4,
+        sweep_budget=1024, top_k=top_k,
+    )
+
+
+def _bit_identical(a, b) -> None:
+    a_ids, b_ids = np.asarray(a.ids), np.asarray(b.ids)
+    a_sc, b_sc = np.asarray(a.scores), np.asarray(b.scores)
+    assert np.array_equal(a_ids, b_ids)
+    assert a_sc.tobytes() == b_sc.tobytes()  # bitwise, -inf included
+
+
+def _query_batch(rects: np.ndarray, amps: np.ndarray) -> QueryBatch:
+    b = rects.shape[0]
+    return QueryBatch(
+        terms=np.zeros((b, 1), dtype=np.int32),
+        rects=rects.astype(np.float32),
+        amps=amps.astype(np.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: region-routed ≡ hash-broadcast at S ∈ {1, 4, 8}
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", [1, 4, 8])
+def test_region_footprint_bit_identical_to_hash_broadcast(n_shards):
+    corpus = make_corpus(n_docs=256, n_terms=60, seed=7)
+    budgets = _budgets()
+    kw = dict(algorithm="k_sweep", budgets=budgets, grid=16, n_shards=n_shards)
+    broadcast = make_executor(
+        "sharded", corpus, partitioner=HashPartitioner(),
+        routing="broadcast", **kw,
+    )
+    routed = make_executor(
+        "sharded", corpus, partitioner=RegionRangePartitioner(),
+        routing="footprint", **kw,
+    )
+    batch = make_query_trace(corpus, n_queries=16, seed=8)
+    want = broadcast.run(batch)
+    got = routed.run(batch)
+    _bit_identical(want, got)
+    touched = got.stats["shards_touched"]
+    assert touched.shape == (16,)
+    # 0 is legal: a footprint overlapping no doc toe-print scores −inf
+    # everywhere, so the row is servable without visiting any shard
+    assert np.all(touched >= 0) and np.all(touched <= n_shards)
+    assert float(got.stats["shards_visited"]) <= n_shards
+    # broadcast never emits routing stats (key-set stability)
+    assert "shards_touched" not in want.stats
+
+
+def test_footprint_matches_single_device_bitwise():
+    corpus = make_corpus(n_docs=256, n_terms=60, seed=7)
+    budgets = _budgets()
+    single = make_executor("single", corpus, budgets=budgets, grid=16)
+    routed = make_executor(
+        "sharded", corpus, partitioner=RegionRangePartitioner(),
+        routing="footprint", budgets=budgets, grid=16, n_shards=4,
+    )
+    batch = make_query_trace(corpus, n_queries=16, seed=9)
+    _bit_identical(single.run(batch), routed.run(batch))
+
+
+# ---------------------------------------------------------------------------
+# routing decision properties
+# ---------------------------------------------------------------------------
+
+def test_shards_touched_monotone_in_footprint_area():
+    corpus = make_corpus(n_docs=256, n_terms=60, seed=3)
+    ex = make_executor(
+        "sharded", corpus, partitioner=RegionRangePartitioner(),
+        routing="footprint", budgets=_budgets(), grid=16, n_shards=8,
+    )
+    widths = [0.01, 0.05, 0.1, 0.2, 0.4, 0.6]
+    rects = np.zeros((len(widths), 1, 4), dtype=np.float32)
+    for i, w in enumerate(widths):
+        rects[i, 0] = [0.5 - w, 0.5 - w, 0.5 + w, 0.5 + w]
+    amps = np.ones((len(widths), 1), dtype=np.float32)
+    _, touched = ex.route_batch(_query_batch(rects, amps))
+    assert np.all(np.diff(touched) >= 0), touched
+    assert touched[-1] == 8  # a footprint over everything touches everything
+
+
+def test_zero_coverage_shard_contributes_zero_bytes_host():
+    """A query reaching only part of the corpus must not stream bytes from
+    the skipped shards, while staying bit-identical to broadcast."""
+    corpus = make_corpus(n_docs=256, n_terms=60, seed=5)
+    routed = make_executor(
+        "sharded", corpus, partitioner=RegionRangePartitioner(),
+        routing="footprint", budgets=_budgets(), grid=16, n_shards=4,
+    )
+    # broadcast twin over the *same* engines: byte deltas are routing-only
+    broadcast = ShardedExecutor(
+        routed.engines, routed.global_ids, "k_sweep", routing="broadcast"
+    )
+    # scan tiny footprints over a lattice and keep one that reaches a
+    # strict subset of shards — region partitioning must leave *some*
+    # location whose coverage misses at least one KD cell
+    centers = np.linspace(0.05, 0.95, 12)
+    cand = np.zeros((len(centers) ** 2, 1, 4), dtype=np.float32)
+    for i, cx in enumerate(centers):
+        for j, cy in enumerate(centers):
+            cand[i * len(centers) + j, 0] = [
+                cx - 0.01, cy - 0.01, cx + 0.01, cy + 0.01,
+            ]
+    amps = np.ones((len(cand), 1), dtype=np.float32)
+    _, cand_touched = routed.route_batch(_query_batch(cand, amps))
+    partial = np.flatnonzero((cand_touched >= 1) & (cand_touched < 4))
+    assert partial.size, "region partitioner produced no partial coverage"
+    batch = _query_batch(cand[partial[:1]], amps[:1])
+    got = routed.run(batch)
+    want = broadcast.run(batch)
+    _bit_identical(want, got)
+    visited = float(got.stats["shards_visited"])
+    assert 1 <= visited < 4  # reaches its own shard, not every KD cell
+    for key, v in want.stats.items():
+        if key.startswith("bytes_"):
+            total = float(np.asarray(v, np.float64).sum())
+            routed_total = float(
+                np.asarray(got.stats[key], np.float64).sum()
+            )
+            # the zero-coverage shards contributed exactly zero bytes to
+            # the broadcast totals — skipping them changes nothing
+            assert routed_total == total, key
+    # what routing *does* save: each skipped shard's fixed seek overhead
+    assert float(np.asarray(got.stats["seeks"]).sum()) < float(
+        np.asarray(want.stats["seeks"]).sum()
+    )
+
+
+def test_out_of_coverage_query_visits_nothing_host():
+    corpus = make_corpus(n_docs=128, n_terms=40, seed=2)
+    ex = make_executor(
+        "sharded", corpus, partitioner=RegionRangePartitioner(),
+        routing="footprint", budgets=_budgets(top_k=5), grid=16, n_shards=4,
+    )
+    # valid footprint (x1 > x0, amp > 0) entirely outside the corpus extent
+    rects = np.array([[[5.0, 5.0, 6.0, 6.0]]], dtype=np.float32)
+    res = ex.run(_query_batch(rects, np.ones((1, 1), dtype=np.float32)))
+    assert float(res.stats["shards_visited"]) == 0
+    assert np.all(np.asarray(res.ids) == -1)
+    assert np.all(np.isneginf(np.asarray(res.scores)))
+    # no engine ran: only routing stats exist, zero bytes anywhere
+    assert not any(k.startswith("bytes_") for k in res.stats)
+
+
+def test_mesh_routing_counters_match_host():
+    """The jit'd mesh masking reports the same routing + byte counters as
+    the host skip loop, and an out-of-coverage query leaves every mesh
+    counter provably zero."""
+    from jax.sharding import Mesh
+
+    corpus = make_corpus(n_docs=192, n_terms=64, seed=11)
+    budgets = QueryBudgets(
+        max_candidates=256, max_tiles=64, k_sweeps=4, sweep_budget=128,
+        top_k=5,
+    )
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    kw = dict(
+        partitioner=HashPartitioner(), routing="footprint",
+        budgets=budgets, grid=16,
+    )
+    meshx = make_executor("mesh", corpus, mesh=mesh, **kw)
+    host = make_executor("sharded", corpus, n_shards=1, **kw)
+    batch = make_query_trace(corpus, n_queries=8, seed=12)
+    got, want = meshx.run(batch), host.run(batch)
+    _bit_identical(want, got)
+    assert set(got.stats) == set(want.stats)
+    for k in want.stats:
+        np.testing.assert_allclose(
+            np.asarray(got.stats[k], np.float64).sum(),
+            np.asarray(want.stats[k], np.float64).sum(),
+            rtol=1e-6, err_msg=k,
+        )
+    # an unreachable footprint: the masked step's counters are all zero
+    rects = np.array([[[5.0, 5.0, 6.0, 6.0]]], dtype=np.float32)
+    far = meshx.run(_query_batch(rects, np.ones((1, 1), dtype=np.float32)))
+    assert np.all(np.asarray(far.ids) == -1)
+    for k, v in far.stats.items():
+        assert float(np.asarray(v, np.float64).sum()) == 0, k
+
+
+# ---------------------------------------------------------------------------
+# Partitioner API round-trips
+# ---------------------------------------------------------------------------
+
+def test_partitioner_round_trips_through_make_executor():
+    corpus = make_corpus(n_docs=64, n_terms=30, seed=1)
+    for part in (HashPartitioner(), MortonPartitioner(), RegionRangePartitioner()):
+        ex = make_executor(
+            "sharded", corpus, partitioner=part, n_shards=2,
+            budgets=_budgets(top_k=3), grid=16,
+        )
+        assert ex.n_shards == 2
+        # every doc lands in exactly one shard
+        all_ids = np.concatenate(ex.global_ids)
+        assert sorted(all_ids.tolist()) == list(range(64))
+
+
+def test_raw_partition_strings_rejected():
+    corpus = make_corpus(n_docs=64, n_terms=30, seed=1)
+    with pytest.raises(TypeError, match="Partitioner"):
+        make_executor("sharded", corpus, partitioner="hash", n_shards=2)
+    with pytest.raises(TypeError, match="Partitioner"):
+        ShardedExecutor.build(
+            corpus.doc_terms, corpus.doc_rects, corpus.doc_amps,
+            corpus.n_terms, pagerank=corpus.pagerank, n_shards=2,
+            partitioner="geo",
+        )
+    # the deprecated partition= kwarg fails loudly, not silently
+    with pytest.raises(TypeError, match="Partitioner API"):
+        ShardedExecutor.build(
+            corpus.doc_terms, corpus.doc_rects, corpus.doc_amps,
+            corpus.n_terms, pagerank=corpus.pagerank, n_shards=2,
+            partition="hash",
+        )
+
+
+def test_make_executor_validation():
+    corpus = make_corpus(n_docs=64, n_terms=30, seed=1)
+    with pytest.raises(ValueError, match="kind"):
+        make_executor("cluster", corpus)
+    with pytest.raises(ValueError, match="routing"):
+        make_executor("sharded", corpus, n_shards=2, routing="multicast")
+    with pytest.raises(ValueError, match="sharded"):
+        make_executor("single", corpus, partitioner=HashPartitioner())
+    with pytest.raises(ValueError, match="mesh"):
+        make_executor("mesh", corpus)
+
+
+def test_resolve_partitioner_aliases():
+    assert isinstance(resolve_partitioner(None), MortonPartitioner)
+    assert isinstance(resolve_partitioner("geo"), MortonPartitioner)
+    assert isinstance(resolve_partitioner("hash"), HashPartitioner)
+    assert isinstance(resolve_partitioner("morton"), MortonPartitioner)
+    assert isinstance(resolve_partitioner("region"), RegionRangePartitioner)
+    part = RegionRangePartitioner()
+    assert resolve_partitioner(part) is part
+    with pytest.raises(ValueError, match="unknown partitioner"):
+        resolve_partitioner("voronoi")

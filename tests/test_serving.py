@@ -5,6 +5,11 @@ import pytest
 
 from repro.corpus import make_corpus, make_zipf_trace
 from repro.core import GeoSearchEngine, QueryBudgets
+from repro.core.distributed import (
+    HashPartitioner,
+    MortonPartitioner,
+    RegionRangePartitioner,
+)
 from repro.serving import (
     GeoServer,
     LandlordCache,
@@ -163,8 +168,12 @@ def test_batcher_bounded_shape_count():
 # sharded scatter-gather vs single device
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("partition", ["hash", "geo"])
-def test_sharded_executor_matches_single_device(partition):
+@pytest.mark.parametrize(
+    "partitioner",
+    [HashPartitioner(), MortonPartitioner(), RegionRangePartitioner()],
+    ids=["hash", "morton", "region"],
+)
+def test_sharded_executor_matches_single_device(partitioner):
     corpus = make_corpus(n_docs=256, n_terms=80, seed=3)
     # generous budgets: both paths are exact → results must agree
     budgets = QueryBudgets(
@@ -178,7 +187,7 @@ def test_sharded_executor_matches_single_device(partition):
     single = SingleDeviceExecutor(eng)
     sharded = ShardedExecutor.build(
         corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
-        pagerank=corpus.pagerank, n_shards=4, partition=partition,
+        pagerank=corpus.pagerank, n_shards=4, partitioner=partitioner,
         grid=16, budgets=budgets,
     )
     from repro.corpus import make_query_trace
@@ -228,13 +237,13 @@ def test_executor_byte_counters_nonzero_and_consistent():
     # single-device engine, so measured counters must agree exactly
     sharded = ShardedExecutor.build(
         corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
-        pagerank=corpus.pagerank, n_shards=1, partition="hash",
+        pagerank=corpus.pagerank, n_shards=1, partitioner=HashPartitioner(),
         grid=16, budgets=budgets,
     )
     mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
     meshx = MeshExecutor.build(
         corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
-        pagerank=corpus.pagerank, mesh=mesh, partition="hash",
+        pagerank=corpus.pagerank, mesh=mesh, partitioner=HashPartitioner(),
         grid=16, budgets=budgets,
     )
     batch = make_query_trace(corpus, n_queries=8, seed=12)
