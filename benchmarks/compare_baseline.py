@@ -20,6 +20,12 @@ performance regressed beyond noise:
   query on the city trace) or when ``identical`` is 0.  Like the
   telemetry gate this is absolute on the fresh run, not relative to the
   baseline: the routing contract does not drift with machine noise.
+* **Compression ratio** — the ``serve_compress_int8_io`` row carries
+  ``bytes_compressed`` / ``bytes_uncompressed`` (postings + spatial
+  streamed on the identical zipf trace); fail when the compressed run
+  streams more than ``bytes_factor`` × the uncompressed bytes (default
+  0.5 — the compressed store must halve streamed bytes).  Absolute on the
+  fresh run: the storage layout does not drift with machine noise.
 * **Telemetry overhead** — the ``serve_telemetry_overhead`` row carries
   ``qps_ratio`` (telemetry-on QPS / telemetry-off QPS, best-of-3 each);
   fail when the *current* run's ratio drops below ``overhead_floor``
@@ -66,6 +72,7 @@ def compare(
     min_fail_ms: float = 250.0,
     overhead_floor: float = 0.95,
     fanout_factor: float = 0.5,
+    bytes_factor: float = 0.5,
 ) -> tuple[list[str], list[str]]:
     """Return ``(failures, warnings)`` — the gate passes iff no failures.
 
@@ -118,6 +125,17 @@ def compare(
                 "serve_routing_footprint_fanout: footprint-routed results "
                 "diverged bitwise from the broadcast twin"
             )
+    comp = current.get("serve_compress_int8_io")
+    if comp is not None:
+        b_c = comp.get("bytes_compressed")
+        b_u = comp.get("bytes_uncompressed")
+        if b_c is not None and b_u:
+            if b_c > bytes_factor * b_u:
+                failures.append(
+                    f"serve_compress_int8_io: bytes_compressed {b_c:.0f} > "
+                    f"{bytes_factor}x uncompressed {b_u:.0f} (the compressed "
+                    f"store stopped halving streamed bytes)"
+                )
     ratio = current.get("serve_telemetry_overhead", {}).get("qps_ratio")
     if ratio is not None and ratio < overhead_floor:
         failures.append(
@@ -142,6 +160,9 @@ def main() -> None:
     ap.add_argument("--fanout-factor", type=float, default=0.5,
                     help="max mean shards-touched as a fraction of shards "
                          "(footprint-routing prune gate)")
+    ap.add_argument("--bytes-factor", type=float, default=0.5,
+                    help="max compressed/uncompressed streamed-bytes ratio "
+                         "(compressed-store gate)")
     args = ap.parse_args()
 
     baseline = load_rows(args.baseline)
@@ -151,6 +172,7 @@ def main() -> None:
         p99_factor=args.p99_factor, qps_factor=args.qps_factor,
         slack_ms=args.slack_ms, min_fail_ms=args.min_fail_ms,
         overhead_floor=args.overhead_floor, fanout_factor=args.fanout_factor,
+        bytes_factor=args.bytes_factor,
     )
     for name in sorted(set(baseline) & set(current)):
         b, c = baseline[name], current[name]

@@ -15,6 +15,13 @@ Prints ``name,us_per_call,derived`` CSV rows:
                      on a padded zipf trace: recall, n_probes,
                      postings/spatial bytes, blocks skipped; the
                      ``_gain`` row prints the ratios.
+* ``core_compress_{f16,int8,gain}`` — compressed posting (delta +
+                     bit-packed) and toe-print (f16 / int8 + per-block
+                     scale) stores vs the uncompressed layout on the same
+                     zipf trace: recall vs the uncompressed engine and the
+                     streamed postings+spatial byte ratio (acceptance:
+                     ≥ 2× drop at recall@10 ≥ 0.99, the ``meets_2x``
+                     column).
 * ``planner_mixture_{auto,text_first,geo_first,ksweep}`` — the cost-based
                      per-query planner (``core/planner.py``) against every
                      fixed algorithm on the bimodal term-selectivity ×
@@ -206,6 +213,70 @@ def bench_block_prune(quick: bool) -> None:
         f"{mean(un, 'bytes_postings') / max(mean(pr, 'bytes_postings'), 1):.2f};"
         f"bytes_spatial_x="
         f"{mean(un, 'bytes_spatial') / max(mean(pr, 'bytes_spatial'), 1):.2f}",
+    )
+
+
+def bench_compress(quick: bool) -> None:
+    """Compressed posting/toe-print stores vs the uncompressed layout.
+
+    The ISSUE 8 acceptance rows: on the zipf smoke trace the compressed
+    store must stream ≤ 0.5× the postings+spatial bytes of the
+    uncompressed layout at recall@10 ≥ 0.99 vs it (``meets_2x`` column).
+    """
+    from repro.core import GeoSearchEngine, QueryBudgets
+    from repro.core.ranking import topk_recall_np
+    from repro.corpus import make_corpus, make_zipf_trace, pad_trace_batch
+
+    n_docs = 1200 if quick else 12000
+    corpus = make_corpus(n_docs, 400 if quick else 1500, seed=9)
+    budgets = QueryBudgets(
+        max_candidates=1024 if quick else 4096, max_tiles=256, k_sweeps=8,
+        sweep_budget=max(n_docs // 8, 256), top_k=10,
+    )
+    B = 64
+    trace = pad_trace_batch(
+        make_zipf_trace(corpus, n_queries=B, pool_size=48, seed=10)
+    )
+
+    def build(mode):
+        return GeoSearchEngine.build(
+            corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
+            pagerank=corpus.pagerank, grid=32 if quick else 64, budgets=budgets,
+            compress=mode,
+        )
+
+    def mean(r, key):
+        return float(np.asarray(r.stats[key], np.float64).mean())
+
+    eng_u = build("none")
+    dt_u, un = _time(lambda: eng_u.query(trace, "k_sweep"))
+    bytes_u = mean(un, "bytes_postings") + mean(un, "bytes_spatial")
+    rows = {}
+    for mode in ["f16", "int8"]:
+        eng_c = build(mode)
+        dt_c, co = _time(lambda e=eng_c: e.query(trace, "k_sweep"))
+        bytes_c = mean(co, "bytes_postings") + mean(co, "bytes_spatial")
+        rec = topk_recall_np(un.ids, co.ids)
+        rows[mode] = (bytes_c, rec)
+        _row(
+            f"core_compress_{mode}", dt_c / B * 1e6,
+            f"recall_vs_uncompressed={rec:.3f};"
+            f"bytes_postings={mean(co, 'bytes_postings'):.0f};"
+            f"bytes_spatial={mean(co, 'bytes_spatial'):.0f};"
+            f"posting_bytes_per_entry={eng_c.index.text.posting_bytes:.2f};"
+            f"tp_bytes_per_entry={eng_c.index.spatial.tp_bytes:.2f};"
+            f"n_docs={n_docs}",
+        )
+    meets = all(
+        bytes_u >= 2.0 * b and rec >= 0.99 for b, rec in rows.values()
+    )
+    _row(
+        "core_compress_gain", dt_u / B * 1e6,
+        f"bytes_x_f16={bytes_u / max(rows['f16'][0], 1e-9):.2f};"
+        f"bytes_x_int8={bytes_u / max(rows['int8'][0], 1e-9):.2f};"
+        f"bytes_postings_uncompressed={mean(un, 'bytes_postings'):.0f};"
+        f"bytes_spatial_uncompressed={mean(un, 'bytes_spatial'):.0f};"
+        f"meets_2x={int(meets)}",
     )
 
 
@@ -633,6 +704,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     bench_table1(args.quick)
     bench_block_prune(args.quick)
+    bench_compress(args.quick)
     bench_planner(args.quick)
     bench_k_sensitivity(args.quick)
     bench_scale(args.quick)

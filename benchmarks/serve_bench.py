@@ -17,6 +17,11 @@ but for the serving layer (``repro.serving``):
                           (``budgets.prune``) behind the same serving
                           stack: fewer inverted-index probes and streamed
                           bytes per executed batch.
+* ``serve_compress_int8`` — the int8-compressed posting/toe-print store
+                          behind the same stack on the same zipf trace;
+                          the ``_io`` row reports the streamed
+                          postings+spatial byte ratio vs the uncompressed
+                          engine (gated ≥ 2× in ``compare_baseline``).
 * ``serve_algo_auto``   — the cost-based per-query planner (``--algo
                           auto``) on the bimodal mixture trace: plan-
                           homogeneous buckets, one compile per plan×shape;
@@ -200,6 +205,33 @@ def main() -> None:
             f"{label}={n}" for label, n in sorted(rep.plan_queries.items())
         )
         + f";n_plans={len(rep.plan_queries)}",
+    )
+
+    # compressed stores behind the same stack: int8 posting + toe-print
+    # compression end to end through server → executor → engine.  No cache,
+    # so every query streams the compressed store; the `_io` row reports
+    # the postings+spatial byte ratio vs the uncompressed engine on the
+    # identical trace (the ISSUE 8 serving-layer gate).
+    eng_comp = GeoSearchEngine.build(
+        corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
+        pagerank=corpus.pagerank, grid=32, budgets=budgets, compress="int8",
+    )
+    server = GeoServer(
+        SingleDeviceExecutor(eng_comp), cache=None, batcher=batcher()
+    )
+    rep_c = server.run_trace(zipf)
+    rep_u = GeoServer(single, cache=None, batcher=batcher()).run_trace(zipf)
+    bytes_c = rep_c.stats.get("bytes_postings", 0.0) + rep_c.stats.get(
+        "bytes_spatial", 0.0
+    )
+    bytes_u = rep_u.stats.get("bytes_postings", 0.0) + rep_u.stats.get(
+        "bytes_spatial", 0.0
+    )
+    report_row("serve_compress_int8", rep_c)
+    _row(
+        "serve_compress_int8_io", 0.0,
+        f"bytes_compressed={bytes_c:.0f};bytes_uncompressed={bytes_u:.0f};"
+        f"bytes_x={bytes_u / max(bytes_c, 1e-9):.2f}",
     )
 
     # open-loop arrival sweep: deadline (max_wait_ms) trades padding +

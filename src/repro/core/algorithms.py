@@ -29,6 +29,11 @@ from repro.core import footprint as fp
 from repro.core import ranking, spatial_index as sidx, text_index as tidx
 from repro.core.spatial_index import INVALID
 
+# UNCOMPRESSED reference record sizes.  The live byte stats below use the
+# per-index properties instead (SpatialIndex.tp_bytes / doc_bytes,
+# TextIndex.posting_bytes), which report the *stored* — possibly
+# compressed — sizes; these constants remain the fixed uncompressed
+# baseline for compression-ratio reporting.
 TP_BYTES = 4 * 4 + 4 + 4  # rect + amp + docid per toe print
 POSTING_BYTES = 4 + 4  # docid + impact
 
@@ -146,26 +151,25 @@ def _count_unique(ids: jax.Array, valid: jax.Array) -> jax.Array:
     return jnp.sum(((s != nxt) & (s != big)).astype(jnp.int32))
 
 
-def _sorted_run_sums(ids: jax.Array, vals: jax.Array, valid: jax.Array):
-    """Per-run totals over a sorted id array (fixed-shape segment sum).
+def _sorted_dedupe(ids: jax.Array, valid: jax.Array):
+    """Sort ids (invalid → +inf sentinel) and mark the last element of each
+    run — a fixed-shape dedupe.
 
-    Returns (unique_ids, run_totals, is_last_of_run & valid) aligned to the
-    input positions; positions that are not the last element of their run are
-    masked out.
+    Deliberately cumsum-free: the old run-sum helper accumulated per-doc
+    values through an associative-scan prefix *difference* (``cs - before``),
+    whose rounding residue (~1e-10) could leak into docs whose exact total
+    was 0 — the documented ``require_geo`` leak.  Both callers only ever
+    needed the dedupe, and the final geo score is recomputed exactly from
+    each doc's own footprint rows (see step 6 of ``k_sweep``), so no
+    prefix-sum ever touches a score that feeds ``require_geo``.
+
+    Returns (sorted_ids, last_of_run & valid).
     """
     big = jnp.int32(2**31 - 1)
-    ids_s = jnp.where(valid, ids, big)
-    order = jnp.argsort(ids_s)
-    ids_s = ids_s[order]
-    vals_s = jnp.where(valid, vals, 0.0)[order]
-    cs = jnp.cumsum(vals_s)
-    n = ids.shape[0]
+    ids_s = jnp.sort(jnp.where(valid, ids, big))
     nxt = jnp.concatenate([ids_s[1:], jnp.full((1,), -2, jnp.int32)])
     last = (ids_s != nxt) & (ids_s != big)
-    start = jnp.searchsorted(ids_s, ids_s, side="left")
-    before = jnp.where(start > 0, cs[jnp.maximum(start - 1, 0)], 0.0)
-    totals = cs - before
-    return ids_s, totals, last
+    return ids_s, last
 
 
 # ---------------------------------------------------------------------------
@@ -204,17 +208,20 @@ def text_first(
         gap = cand_sorted[1:] - cand_sorted[:-1]
         new_run = (gap > 64) & (cand_sorted[1:] != jnp.int32(2**31 - 1))
         fetch_runs = jnp.sum(new_run.astype(jnp.int32)) + (n_c > 0).astype(jnp.int32)
+        # stored (possibly compressed) record sizes — static per index
+        pb = text.posting_bytes
+        db = spatial.doc_bytes
         stats = {
             "candidates": n_c,
             # footprints fetched for every textual candidate (doc-major file)
-            "bytes_spatial": n_c * R * (16 + 4),
-            "bytes_postings": n_c * POSTING_BYTES
-            + jnp.int32(budgets.max_candidates * POSTING_BYTES),
+            "bytes_spatial": n_c * jnp.float32(R * db),
+            "bytes_postings": n_c * jnp.float32(pb)
+            + jnp.float32(budgets.max_candidates * pb),
             "fetch_runs": fetch_runs,
             "seeks": fetch_runs + n_terms_real,  # + one seek per posting list
             "n_probes": n_c * jnp.maximum(n_terms_real - 1, 0),
-            "bytes_seq": jnp.int32(budgets.max_candidates * POSTING_BYTES),
-            "bytes_random": n_c * R * (16 + 4)
+            "bytes_seq": jnp.full((), budgets.max_candidates * pb, jnp.float32),
+            "bytes_random": n_c * jnp.float32(R * db)
             + n_c * jnp.maximum(n_terms_real - 1, 0) * 32,
         }
         return ids, vals, stats
@@ -246,9 +253,11 @@ def geo_first(
         # translate toe prints → doc ids (random access into the id column of
         # the toe-print store; the MBR table of the "R*-tree" is memory
         # resident so we charge only the id translation)
-        docs = jnp.where(ok, spatial.tp_doc_ids[tp_ids], jnp.int32(2**31 - 1))
+        docs = jnp.where(
+            ok, spatial.tp_doc_ids[tp_ids].astype(jnp.int32), jnp.int32(2**31 - 1)
+        )
         # dedupe docs (multiple toe prints per doc)
-        docs_s, _, last = _sorted_run_sums(docs, jnp.zeros_like(docs, jnp.float32), ok)
+        docs_s, last = _sorted_dedupe(docs, ok)
         dvalid = last
         docs_u = jnp.where(dvalid, docs_s, 0)
         # text filter via binary probes
@@ -266,19 +275,24 @@ def geo_first(
         n_uniq = jnp.sum(dvalid.astype(jnp.int32))
         n_keep = jnp.sum(keep.astype(jnp.int32))
         n_terms_real = jnp.sum((terms >= 0).astype(jnp.int32))
+        # stored (possibly compressed) record sizes — static per index
+        pb = text.posting_bytes
+        db = spatial.doc_bytes
+        idb = spatial.tp_doc_ids.dtype.itemsize
         stats = {
             "candidates": n_cand,
-            "bytes_spatial": n_cand * 4  # id translation
-            + n_keep * R * (16 + 4),  # survivor footprints
+            "bytes_spatial": n_cand * jnp.float32(idb)  # id translation
+            + n_keep * jnp.float32(R * db),  # survivor footprints
             "bytes_postings": n_uniq
-            * jnp.int32(jnp.ceil(jnp.log2(jnp.maximum(text.n_postings, 2))))
-            * POSTING_BYTES,
+            * jnp.ceil(jnp.log2(jnp.maximum(text.n_postings, 2)))
+            * jnp.float32(pb),
             # every candidate toe print is fetched INDIVIDUALLY (R*-tree
             # random access), every surviving footprint likewise
             "seeks": n_cand + n_keep,
             "n_probes": n_uniq * n_terms_real,
-            "bytes_seq": jnp.int32(0),
-            "bytes_random": n_cand * 4 + n_keep * R * (16 + 4)
+            "bytes_seq": jnp.float32(0),
+            "bytes_random": n_cand * jnp.float32(idb)
+            + n_keep * jnp.float32(R * db)
             + n_uniq * n_terms_real * 32,
         }
         return ids, vals, stats
@@ -372,6 +386,9 @@ def k_sweep(
                 budgets.max_candidates,
                 bs,
                 floor,
+                tp_amp_scale=(
+                    spatial.tp_amp_scale if spatial.tp_amp_scale.shape[0] else None
+                ),
             )
             part = part2d.reshape(-1)
             ok = ok2d.reshape(-1)
@@ -383,7 +400,6 @@ def k_sweep(
             val, sel = jax.lax.top_k(jnp.where(kept, part, -1.0), Cmax)
             docs_c = docs[sel]
             ok_c = kept[sel] & (val > floor)
-            part_c = jnp.where(ok_c, val, 0.0)
             streamed_tp = jnp.sum(st2d.astype(jnp.int32))
             blocks_total = blocks_active
             blocks_skipped = blocks_active - blocks_scored
@@ -402,6 +418,11 @@ def k_sweep(
                     q_rects,
                     q_amps,
                     budgets.sweep_budget,
+                    tp_amp_scale=(
+                        spatial.tp_amp_scale
+                        if spatial.tp_amp_scale.shape[0]
+                        else None
+                    ),
                 )
                 part = part2d.reshape(-1)
                 ok = ok2d.reshape(-1)
@@ -424,15 +445,14 @@ def k_sweep(
                 val, sel = jax.lax.top_k(jnp.where(ok, part, -1.0), Cmax)
                 docs_c = docs[sel]
                 ok_c = ok[sel] & (val > 0)
-                part_c = jnp.where(ok_c, val, 0.0)
             else:
-                docs_c, ok_c, part_c = docs, ok, part
+                docs_c, ok_c = docs, ok
             streamed_tp = n_sweeps * budgets.sweep_budget
             blocks_total = n_sweeps * ((budgets.sweep_budget + bs - 1) // bs)
             blocks_skipped = jnp.int32(0)
         # (4) translate to docIDs, sort, dedupe per doc (the partial scores
         # drove selection; they are not the final geo score)
-        docs_s, _, last = _sorted_run_sums(docs_c, part_c, ok_c)
+        docs_s, last = _sorted_dedupe(docs_c, ok_c)
         dvalid = last
         docs_u = jnp.where(dvalid, docs_s, 0)
         # (5) filter through the inverted index
@@ -463,25 +483,28 @@ def k_sweep(
             probes_saved = (_count_unique(docs, ok) - n_uniq) * n_terms_real
         else:
             probes_saved = jnp.int32(0)
+        # stored (possibly compressed) record sizes — static per index
+        tpb = spatial.tp_bytes
+        pb = text.posting_bytes
         stats = {
             "candidates": fetched,
             "sweeps": n_sweeps,
             # bytes actually streamed: ≤k contiguous streams, minus any
             # block-max-skipped blocks on the pruned path
-            "bytes_spatial": streamed_tp * TP_BYTES,
+            "bytes_spatial": streamed_tp * jnp.float32(tpb),
             "sweep_slack": n_sweeps * budgets.sweep_budget - fetched,
             # toe prints surviving to candidate aggregation (≠ streamed
             # when early termination or pruning drops candidates)
-            "bytes_scored": n_selected * TP_BYTES,
+            "bytes_scored": n_selected * jnp.float32(tpb),
             "blocks_total": blocks_total,
             "blocks_skipped": blocks_skipped,
             "probes_saved": probes_saved,
             "bytes_postings": n_uniq
-            * jnp.int32(jnp.ceil(jnp.log2(jnp.maximum(text.n_postings, 2))))
-            * POSTING_BYTES,
+            * jnp.ceil(jnp.log2(jnp.maximum(text.n_postings, 2)))
+            * jnp.float32(pb),
             "seeks": n_sweeps + n_terms_real,
             "n_probes": n_uniq * n_terms_real,
-            "bytes_seq": streamed_tp * TP_BYTES,
+            "bytes_seq": streamed_tp * jnp.float32(tpb),
             "bytes_random": n_uniq * n_terms_real * 32,
         }
         return ids, vals, stats

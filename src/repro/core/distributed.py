@@ -305,10 +305,19 @@ class ShardedGeoIndex:
     postings: jax.Array  # i32[S, P]
     impacts: jax.Array  # f32[S, P]
     offsets: jax.Array  # i32[S, M+1]
-    # spatial index
+    # text index: delta + bit-packed doc-id store ([S, 0] when uncompressed)
+    post_packed: jax.Array  # u32[S, W]
+    blk_first: jax.Array  # i32[S, NBp]
+    blk_bits: jax.Array  # i32[S, NBp]
+    blk_len: jax.Array  # i32[S, NBp]
+    blk_word_off: jax.Array  # i32[S, NBp]
+    blk_pos: jax.Array  # i32[S, NBp]
+    blk_term_off: jax.Array  # i32[S, M+1]
+    # spatial index (stored dtypes: f16/int8/i16 under compressed modes)
     tp_rects: jax.Array  # f32[S, T, 4]
     tp_amps: jax.Array  # f32[S, T]
     tp_doc_ids: jax.Array  # i32[S, T]
+    tp_amp_scale: jax.Array  # f32[S, ceil(T/SCALE_BLOCK)] ([S, 0] unless int8)
     tile_starts: jax.Array  # i32[S, G*G, m]
     tile_ends: jax.Array  # i32[S, G*G, m]
     doc_rects: jax.Array  # f32[S, N, R, 4]
@@ -344,10 +353,16 @@ def shard_corpus_np(
     grid: int = 64,
     m_intervals: int = 2,
     block_size: int = 128,
+    compress: "bool | str" = False,
 ) -> ShardedGeoIndex:
     """Partition a corpus with ``partitioner`` (default hash round-robin)
     and build one index per shard (host side), including each shard's
-    coverage SAT for footprint routing."""
+    coverage SAT for footprint routing.  ``compress`` takes the same
+    ``{none, f16, int8}`` modes as the single-index builders: every shard
+    stores bit-packed postings and quantized toe prints."""
+    from repro.core.spatial_index import SCALE_BLOCK, normalize_compress
+
+    mode = normalize_compress(compress)
     n_docs = len(doc_terms)
     partitioner = _require_partitioner(partitioner, default=HashPartitioner)
     shard_ids = np.asarray(partitioner.assign(doc_rects, n_shards))
@@ -368,19 +383,31 @@ def shard_corpus_np(
         # broadcast global term statistics (IDF) so shards rank like the
         # single-index engine would — built in directly (not rescaled after
         # the fact) so impacts are bit-identical across partitionings
-        text = build_text_index_np(terms, n_terms, idf=idf_global)
+        text = build_text_index_np(
+            terms, n_terms, idf=idf_global, compress=(mode != "none")
+        )
         spatial = build_spatial_index_np(
-            doc_rects[sel], doc_amps[sel], grid, m_intervals, block_size=block_size
+            doc_rects[sel], doc_amps[sel], grid, m_intervals,
+            block_size=block_size, compress=mode,
         )
         shards.append((text, spatial, pagerank[sel], sel))
+        # routing coverage wants decoded f32 amps (int8 stores are scaled)
+        cov_amps = np.asarray(spatial.tp_amps).astype(np.float32)
+        if spatial.tp_amp_scale.shape[0]:
+            sc = np.asarray(spatial.tp_amp_scale)
+            cov_amps = cov_amps * np.repeat(sc, SCALE_BLOCK)[: cov_amps.shape[0]]
         occ = partitioner.coverage(
-            np.asarray(spatial.tp_rects), np.asarray(spatial.tp_amps), COVERAGE_GRID
+            np.asarray(spatial.tp_rects).astype(np.float32), cov_amps, COVERAGE_GRID
         )
         coverage.append(coverage_sat_np(occ))
 
     # pad to uniform shapes and stack
-    P_max = max(s[0].postings.shape[0] for s in shards)
+    P_max = max(s[0].impacts.shape[0] for s in shards)
+    Pp_max = max(s[0].postings.shape[0] for s in shards)  # 0 when compressed
+    W_max = max(s[0].post_packed.shape[0] for s in shards)
+    NBp_max = max(s[0].blk_first.shape[0] for s in shards)
     T_max = max(s[1].tp_rects.shape[0] for s in shards)
+    SB_max = max(s[1].tp_amp_scale.shape[0] for s in shards)
     N_max = max(len(s[3]) for s in shards)
     R = doc_rects.shape[1]
 
@@ -392,10 +419,26 @@ def shard_corpus_np(
 
     stacked = {}
     stacked["postings"] = np.stack(
-        [padded(s[0].postings, P_max, 2**31 - 1) for s in shards]
+        [padded(s[0].postings, Pp_max, 2**31 - 1) for s in shards]
     )
     stacked["impacts"] = np.stack([padded(s[0].impacts, P_max, 0.0) for s in shards])
     stacked["offsets"] = np.stack([np.asarray(s[0].offsets) for s in shards])
+    # packed posting columns (all width-0 when uncompressed); padded blocks
+    # are unreachable (every probe is bounded by its term's blk_term_off
+    # slice) — bits pad 1 so even an accidental decode stays well-defined
+    stacked["post_packed"] = np.stack(
+        [padded(s[0].post_packed, W_max, 0) for s in shards]
+    )
+    stacked["blk_first"] = np.stack([padded(s[0].blk_first, NBp_max, 0) for s in shards])
+    stacked["blk_bits"] = np.stack([padded(s[0].blk_bits, NBp_max, 1) for s in shards])
+    stacked["blk_len"] = np.stack([padded(s[0].blk_len, NBp_max, 0) for s in shards])
+    stacked["blk_word_off"] = np.stack(
+        [padded(s[0].blk_word_off, NBp_max, 0) for s in shards]
+    )
+    stacked["blk_pos"] = np.stack([padded(s[0].blk_pos, NBp_max, 0) for s in shards])
+    stacked["blk_term_off"] = np.stack(
+        [np.asarray(s[0].blk_term_off) for s in shards]
+    )
     stacked["tp_rects"] = np.stack(
         [
             padded(s[1].tp_rects, T_max, 0.0) for s in shards
@@ -408,6 +451,10 @@ def shard_corpus_np(
     stacked["tp_amps"] = np.stack([padded(s[1].tp_amps, T_max, 0.0) for s in shards])
     stacked["tp_doc_ids"] = np.stack(
         [padded(s[1].tp_doc_ids, T_max, 0) for s in shards]
+    )
+    # int8 amp scales: pad with 1.0 (decode of zero-padded amps stays 0)
+    stacked["tp_amp_scale"] = np.stack(
+        [padded(s[1].tp_amp_scale, SB_max, 1.0) for s in shards]
     )
     stacked["tile_starts"] = np.stack([np.asarray(s[1].tile_starts) for s in shards])
     stacked["tile_ends"] = np.stack([np.asarray(s[1].tile_ends) for s in shards])
@@ -438,9 +485,17 @@ def shard_corpus_np(
         postings=jnp.asarray(stacked["postings"]),
         impacts=jnp.asarray(stacked["impacts"]),
         offsets=jnp.asarray(stacked["offsets"]),
+        post_packed=jnp.asarray(stacked["post_packed"]),
+        blk_first=jnp.asarray(stacked["blk_first"]),
+        blk_bits=jnp.asarray(stacked["blk_bits"]),
+        blk_len=jnp.asarray(stacked["blk_len"]),
+        blk_word_off=jnp.asarray(stacked["blk_word_off"]),
+        blk_pos=jnp.asarray(stacked["blk_pos"]),
+        blk_term_off=jnp.asarray(stacked["blk_term_off"]),
         tp_rects=jnp.asarray(stacked["tp_rects"]),
         tp_amps=jnp.asarray(stacked["tp_amps"]),
         tp_doc_ids=jnp.asarray(stacked["tp_doc_ids"]),
+        tp_amp_scale=jnp.asarray(stacked["tp_amp_scale"]),
         tile_starts=jnp.asarray(stacked["tile_starts"]),
         tile_ends=jnp.asarray(stacked["tile_ends"]),
         doc_rects=jnp.asarray(stacked["doc_rects"]),
@@ -471,7 +526,9 @@ def sharded_index_specs(
     lead = P(doc_axes)
     return ShardedGeoIndex(
         postings=lead, impacts=lead, offsets=lead,
-        tp_rects=lead, tp_amps=lead, tp_doc_ids=lead,
+        post_packed=lead, blk_first=lead, blk_bits=lead, blk_len=lead,
+        blk_word_off=lead, blk_pos=lead, blk_term_off=lead,
+        tp_rects=lead, tp_amps=lead, tp_doc_ids=lead, tp_amp_scale=lead,
         tile_starts=lead, tile_ends=lead,
         doc_rects=lead, doc_amps=lead, doc_mbr=lead, doc_mass=lead,
         blk_mbr=lead, blk_max_amp=lead, blk_max_mass=lead,
@@ -542,11 +599,15 @@ def make_serve_fn(
             postings=idx.postings[0], impacts=idx.impacts[0], offsets=idx.offsets[0],
             bitmaps=jnp.zeros((0, 4), jnp.uint32),
             bitmap_term_ids=jnp.zeros((0,), jnp.int32),
+            post_packed=idx.post_packed[0], blk_first=idx.blk_first[0],
+            blk_bits=idx.blk_bits[0], blk_len=idx.blk_len[0],
+            blk_word_off=idx.blk_word_off[0], blk_pos=idx.blk_pos[0],
+            blk_term_off=idx.blk_term_off[0],
             n_docs=idx.doc_rects.shape[1], n_terms=idx.n_terms,
         )
         spatial = SpatialIndex(
             tp_rects=idx.tp_rects[0], tp_amps=idx.tp_amps[0],
-            tp_doc_ids=idx.tp_doc_ids[0],
+            tp_doc_ids=idx.tp_doc_ids[0], tp_amp_scale=idx.tp_amp_scale[0],
             tile_starts=idx.tile_starts[0], tile_ends=idx.tile_ends[0],
             doc_rects=idx.doc_rects[0], doc_amps=idx.doc_amps[0],
             doc_mbr=idx.doc_mbr[0], doc_mass=idx.doc_mass[0],

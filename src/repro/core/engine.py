@@ -66,18 +66,24 @@ class GeoSearchEngine:
         n_bitmap_terms: int = 0,
         budgets: alg.QueryBudgets | None = None,
         weights: ranking.RankWeights | None = None,
-        compress: bool = False,
+        compress: "bool | str" = False,
         block_size: int = 128,
         idf: np.ndarray | None = None,
     ) -> "GeoSearchEngine":
         # idf: corpus-global IDF override for shard engines (see
         # build_text_index_np — keeps impacts partition-independent)
-        text = build_text_index_np(doc_terms, n_terms, n_bitmap_terms, idf=idf)
+        from repro.core.spatial_index import normalize_compress
+
+        mode = normalize_compress(compress)
+        text = build_text_index_np(
+            doc_terms, n_terms, n_bitmap_terms, idf=idf,
+            compress=(mode != "none"),
+        )
         spatial = build_spatial_index_np(
-            doc_rects, doc_amps, grid, m_intervals, compress=compress,
+            doc_rects, doc_amps, grid, m_intervals, compress=mode,
             block_size=block_size,
         )
-        if compress:
+        if mode != "none":
             from repro.core.text_index import quantize_impacts
 
             text = quantize_impacts(text, jnp.float16)

@@ -134,6 +134,13 @@ class CostModel:
     n_docs: int
     rect_slots: int  # R of the doc-major footprint mirror
     budgets: alg.QueryBudgets
+    # per-record byte sizes of the index actually being served — read from
+    # the index properties at build so compressed stores shrink the
+    # predicted bytes_* exactly like they shrink the measured counters
+    posting_bytes: float = float(alg.POSTING_BYTES)
+    tp_bytes: float = float(alg.TP_BYTES)
+    doc_bytes: float = 20.0  # doc-major rect + amp slot
+    tp_id_bytes: float = 4.0  # toe-print doc-id column entry
     # (algorithm, counter) -> multiplicative calibration scale
     scales: dict = field(default_factory=dict)
     # metrics registry (repro.obs) attached by the serving layer; None =
@@ -220,6 +227,10 @@ class CostModel:
             n_docs=int(spatial.n_docs),
             rect_slots=int(spatial.doc_rects.shape[1]),
             budgets=budgets,
+            posting_bytes=float(text.posting_bytes),
+            tp_bytes=float(spatial.tp_bytes),
+            doc_bytes=float(spatial.doc_bytes),
+            tp_id_bytes=float(spatial.tp_doc_ids.dtype.itemsize),
         )
 
     @staticmethod
@@ -231,6 +242,8 @@ class CostModel:
         whole corpus.
         """
         parts = [CostModel.from_geo_index(ix, budgets) for ix in indexes]
+        tot_p = max(sum(p.n_postings for p in parts), 1)
+        tot_t = max(sum(p.n_toeprints for p in parts), 1)
         return CostModel(
             df=np.sum([p.df for p in parts], axis=0),
             blk_mbr=np.concatenate([p.blk_mbr for p in parts], axis=0),
@@ -242,15 +255,25 @@ class CostModel:
             n_docs=sum(p.n_docs for p in parts),
             rect_slots=parts[0].rect_slots,
             budgets=budgets,
+            # record sizes are near-identical across shards (same compress
+            # mode); weight the amortized per-posting metadata anyway
+            posting_bytes=sum(p.posting_bytes * p.n_postings for p in parts) / tot_p,
+            tp_bytes=sum(p.tp_bytes * p.n_toeprints for p in parts) / tot_t,
+            doc_bytes=parts[0].doc_bytes,
+            tp_id_bytes=parts[0].tp_id_bytes,
         )
 
     @staticmethod
     def from_sharded_index(sharded, budgets: alg.QueryBudgets) -> "CostModel":
         """Build from a stacked :class:`ShardedGeoIndex` (mesh executor)."""
+        from repro.core.spatial_index import SCALE_BLOCK
+
         offsets = np.asarray(sharded.offsets, np.int64)  # [S, M+1]
         df = np.diff(offsets, axis=1).sum(axis=0).astype(np.float64)
         blk_mbr = np.asarray(sharded.blk_mbr).reshape(-1, 4)
-        amps = np.asarray(sharded.tp_amps)
+        # int8 amp stores keep the sign (positive scales), so the validity
+        # count needs no dequantization — just a widening cast
+        amps = np.asarray(sharded.tp_amps).astype(np.float32)
         n_tp = int((amps > 0).sum())
         # padded blocks carry zero max-amp → zero occupancy
         blk_amp = np.asarray(sharded.blk_max_amp).reshape(-1)
@@ -269,6 +292,21 @@ class CostModel:
             ],
             axis=0,
         )
+        # record sizes from the stacked stores (cross-shard padding inflates
+        # the packed-word count marginally; fine for a cost estimate)
+        P_tot = max(int(df.sum()), 1)
+        imp_b = sharded.impacts.dtype.itemsize
+        if sharded.blk_first.shape[1] > 0:  # compressed posting store
+            packed = 4 * sharded.post_packed.size + 16 * sharded.blk_first.size
+            posting_bytes = packed / P_tot + imp_b
+        else:
+            posting_bytes = 4.0 + imp_b
+        scale_b = 4.0 / SCALE_BLOCK if sharded.tp_amp_scale.shape[1] else 0.0
+        plane_b = (
+            4 * sharded.tp_rects.dtype.itemsize
+            + sharded.tp_amps.dtype.itemsize
+            + scale_b
+        )
         return CostModel(
             df=df,
             blk_mbr=blk_mbr,
@@ -280,6 +318,13 @@ class CostModel:
             n_docs=n_docs,
             rect_slots=int(sharded.doc_rects.shape[2]),
             budgets=budgets,
+            posting_bytes=float(posting_bytes),
+            tp_bytes=float(plane_b + sharded.tp_doc_ids.dtype.itemsize),
+            doc_bytes=float(
+                4 * sharded.doc_rects.dtype.itemsize
+                + sharded.doc_amps.dtype.itemsize
+            ),
+            tp_id_bytes=float(sharded.tp_doc_ids.dtype.itemsize),
         )
 
     # ------------------------------------------------------------------
@@ -350,7 +395,7 @@ class CostModel:
         d = max(f.n_terms, 1)
         mc = bud.max_candidates
         logp = float(np.ceil(np.log2(max(self.n_postings, 2))))
-        pb, tpb = alg.POSTING_BYTES, alg.TP_BYTES
+        pb, tpb, db = self.posting_bytes, self.tp_bytes, self.doc_bytes
         R = self.rect_slots
         tp_per_doc = max(self.n_toeprints / max(self.n_docs, 1), 1.0)
         if plan.algorithm == "text_first":
@@ -358,7 +403,7 @@ class CostModel:
             est = {
                 "n_probes": n_c * max(d - 1, 0),
                 "bytes_postings": n_c * pb + mc * pb,
-                "bytes_spatial": n_c * R * (16 + 4),
+                "bytes_spatial": n_c * R * db,
             }
         elif plan.algorithm == "geo_first":
             n_cand = min(f.tp_est, mc)
@@ -367,7 +412,7 @@ class CostModel:
             est = {
                 "n_probes": n_uniq * d,
                 "bytes_postings": n_uniq * logp * pb,
-                "bytes_spatial": n_cand * 4 + keep * R * (16 + 4),
+                "bytes_spatial": n_cand * self.tp_id_bytes + keep * R * db,
             }
         elif plan.algorithm == "k_sweep":
             # sweeps stream whole sweep_budget chunks over the Morton span

@@ -34,6 +34,19 @@ def combine_scores(
 
     The paper's semantics: a result must contain all keywords AND its
     footprint must intersect the query footprint (geo score > 0).
+
+    Exactness contract for the ``require_geo`` gate: callers must pass a
+    ``geo_score`` computed *directly* from interval endpoints (e.g.
+    ``footprint.geo_score`` over the doc's own rect rows, where a disjoint
+    rect pair contributes ``max(min(x1,qx1) - max(x0,qx0), 0) == 0.0``
+    exactly) — never a value reconstructed through an associative-scan
+    prefix difference.  A cumsum residue of ~1e-10 on a true-zero overlap
+    would flip this gate and leak a non-overlapping doc into the top-k
+    (the historical pruned-vs-unpruned equivalence leak).  All in-repo
+    query paths recompute the final geo score per doc from ``doc_rects``
+    (see ``algorithms.k_sweep`` step 6 and ``_sorted_dedupe``), which
+    makes the ``> 0.0`` comparison exact and the gate safe without any
+    epsilon.
     """
     norm = jnp.maximum(query_mass, 1e-12)
     score = (

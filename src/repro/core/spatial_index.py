@@ -56,15 +56,21 @@ from repro.core import geometry
 from repro.core.footprint import footprint_mbr_np
 
 INVALID = np.int32(2**31 - 1)
+SCALE_BLOCK = 128  # toe prints per int8 amplitude-scale block (= kernel lanes)
+COMPRESS_MODES = ("none", "f16", "int8")
 
 
 @jax.tree_util.register_dataclass
 @dataclass(frozen=True)
 class SpatialIndex:
     # --- Morton-sorted toe-print store (the k-sweep "disk file") ---
-    tp_rects: jax.Array  # f32[T, 4]
-    tp_amps: jax.Array  # f32[T]
-    tp_doc_ids: jax.Array  # i32[T]
+    # compressed builds store rects/amps in f16 (or amps in int8 with a
+    # per-SCALE_BLOCK f32 scale) and doc ids in i16 when they fit — the
+    # sweep kernels stream the stored dtypes and decode in-register
+    tp_rects: jax.Array  # f32[T, 4] (f16 when compressed)
+    tp_amps: jax.Array  # f32[T] (f16 / int8 when compressed)
+    tp_doc_ids: jax.Array  # i32[T] (i16 when compressed and n_docs fits)
+    tp_amp_scale: jax.Array  # f32[ceil(T/SCALE_BLOCK)] ([0] unless int8)
     # --- tile grid: per tile, m toe-print-ID intervals [start, end) ---
     tile_starts: jax.Array  # i32[G*G, m]
     tile_ends: jax.Array  # i32[G*G, m]
@@ -93,16 +99,81 @@ class SpatialIndex:
     def m_intervals(self) -> int:
         return self.tile_starts.shape[1]
 
+    @property
+    def plane_bytes(self) -> float:
+        """Bytes per toe print the sweep kernels stream (coordinate planes +
+        amplitude + amortized scale column, NOT the doc-id column)."""
+        scale = 4.0 / SCALE_BLOCK if self.tp_amp_scale.shape[0] else 0.0
+        return (
+            4 * self.tp_rects.dtype.itemsize
+            + self.tp_amps.dtype.itemsize
+            + scale
+        )
+
+    @property
+    def tp_bytes(self) -> float:
+        """Modeled bytes per full toe-print record (planes + doc id) — the
+        unit behind ``bytes_spatial``/``bytes_scored``.  24 uncompressed."""
+        return self.plane_bytes + self.tp_doc_ids.dtype.itemsize
+
+    @property
+    def doc_bytes(self) -> float:
+        """Bytes per doc-major footprint slot (rect + amp); 20 uncompressed."""
+        return 4 * self.doc_rects.dtype.itemsize + self.doc_amps.dtype.itemsize
+
+
+def normalize_compress(compress) -> str:
+    """Accept the legacy bool flag or a mode string; return the mode."""
+    if compress is True:
+        return "f16"
+    if compress is False or compress is None:
+        return "none"
+    if compress not in COMPRESS_MODES:
+        raise ValueError(f"compress must be one of {COMPRESS_MODES}, got {compress!r}")
+    return compress
+
+
+def quantize_amps_np(amps: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Symmetric per-SCALE_BLOCK int8 quantization of the amp column.
+
+    Returns (q int8[T], scale f32[ceil(T/SB)]); decode is
+    ``q.astype(f32) * scale[t // SCALE_BLOCK]`` — the exact expression the
+    kernels and references evaluate, so quantized values round-trip
+    bit-identically everywhere.  Handles negative amps (symmetric range)
+    and all-zero blocks (scale 1.0, q 0).
+    """
+    T = amps.shape[0]
+    nb = max((T + SCALE_BLOCK - 1) // SCALE_BLOCK, 1)
+    pad = nb * SCALE_BLOCK - T
+    a = np.concatenate([amps.astype(np.float32), np.zeros((pad,), np.float32)])
+    a = a.reshape(nb, SCALE_BLOCK)
+    max_abs = np.abs(a).max(axis=1)
+    scale = np.where(max_abs > 0, max_abs / 127.0, 1.0).astype(np.float32)
+    q = np.clip(np.round(a / scale[:, None]), -127, 127).astype(np.int8)
+    return q.reshape(-1)[:T], scale
+
+
+def _id_dtype(n_docs: int, mode: str):
+    return np.int16 if (mode != "none" and n_docs <= np.iinfo(np.int16).max) else np.int32
+
 
 def build_spatial_index_np(
     doc_rects: np.ndarray,  # f32[N, R, 4] (padded with EMPTY_RECT)
     doc_amps: np.ndarray,  # f32[N, R]
     grid: int = 64,
     m_intervals: int = 2,
-    compress: bool = False,  # f16 footprint data (paper: lossy compression)
+    compress: bool | str = False,  # "none"|"f16"|"int8" (paper: lossy compression)
     block_size: int = 128,  # toe prints per block-max metadata block
 ) -> SpatialIndex:
-    """Host-side index build (the paper's offline preprocessing)."""
+    """Host-side index build (the paper's offline preprocessing).
+
+    ``compress="f16"`` stores footprint rects/amps in f16; ``"int8"``
+    additionally quantizes the toe-print amp column to int8 with a
+    per-:data:`SCALE_BLOCK` f32 scale.  Both narrow the streamed doc-id
+    column to i16 when ``n_docs`` fits.  Block-max metadata is always
+    computed from the decoded (post-quantization) values so the pruning
+    bounds stay safe.
+    """
     N, R, _ = doc_rects.shape
     valid = doc_rects[:, :, 2] > doc_rects[:, :, 0]
     doc_idx, rect_idx = np.nonzero(valid)
@@ -146,18 +217,30 @@ def build_spatial_index_np(
     )
     mass = (area * doc_amps).sum(axis=1).astype(np.float32)
 
-    ft = np.float16 if compress else np.float32
+    mode = normalize_compress(compress)
+    ft = np.float16 if mode != "none" else np.float32
+    if mode == "int8":
+        tp_amps_store, tp_amp_scale = quantize_amps_np(amps)
+        dec_amps = tp_amps_store.astype(np.float32) * np.repeat(
+            tp_amp_scale, SCALE_BLOCK
+        )[: len(tp_amps_store)]
+    else:
+        tp_amps_store = amps.astype(ft)
+        tp_amp_scale = np.zeros((0,), np.float32)
+        dec_amps = tp_amps_store.astype(np.float32)
     # block-max metadata is computed from the values the query path will
-    # actually score (post-cast), so the bounds stay safe under compression
+    # actually score (post-cast / dequantized), so the bounds stay safe
+    # under lossy compression
     blk_mbr, blk_max_amp, blk_max_mass = block_metadata_np(
         rects.astype(ft).astype(np.float32),
-        amps.astype(ft).astype(np.float32),
+        dec_amps,
         block_size,
     )
     return SpatialIndex(
         tp_rects=jnp.asarray(rects.astype(ft)),
-        tp_amps=jnp.asarray(amps.astype(ft)),
-        tp_doc_ids=jnp.asarray(doc_idx.astype(np.int32)),
+        tp_amps=jnp.asarray(tp_amps_store),
+        tp_doc_ids=jnp.asarray(doc_idx.astype(_id_dtype(N, mode))),
+        tp_amp_scale=jnp.asarray(tp_amp_scale),
         tile_starts=jnp.asarray(tile_starts),
         tile_ends=jnp.asarray(tile_ends),
         doc_rects=jnp.asarray(doc_rects.astype(ft)),
@@ -380,8 +463,13 @@ def fetch_sweeps(
         a = jax.lax.dynamic_slice(index.tp_amps, (start,), (sweep_budget,))
         d = jax.lax.dynamic_slice(index.tp_doc_ids, (start,), (sweep_budget,))
         pos = start + jnp.arange(sweep_budget, dtype=jnp.int32)
+        # decode: same astype-then-multiply order the kernels use, so the
+        # dequantized values bit-match the in-kernel decode
+        a = a.astype(jnp.float32)
+        if index.tp_amp_scale.shape[0]:
+            a = a * index.tp_amp_scale[pos // SCALE_BLOCK]
         ok = (s != INVALID) & (pos >= s) & (pos < e)
-        return r, a, d, ok
+        return r.astype(jnp.float32), a, d.astype(jnp.int32), ok
 
     rects, amps, docs, ok = jax.vmap(fetch_one)(sweep_starts, sweep_ends)
     return (
@@ -412,7 +500,7 @@ def fetch_sweep_ids(
         idx = jnp.clip(
             shift + jnp.arange(sweep_budget, dtype=jnp.int32), 0, sweep_budget - 1
         )
-        return d[idx]
+        return d[idx].astype(jnp.int32)
 
     docs = jax.vmap(fetch_one)(sweep_starts, sweep_ends)
     return docs.reshape(k * sweep_budget)

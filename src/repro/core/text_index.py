@@ -16,9 +16,31 @@ Layout (paper §II.B, adapted to HBM-resident fixed-shape arrays):
 Membership probing at query time is a vectorized binary search
 (``searchsorted``) into the term slice — the TPU analogue of DAAT list
 merging.
+
+Compressed posting storage (paper §II.B: "compressed index formats")
+--------------------------------------------------------------------
+
+``build_text_index_np(compress=True)`` replaces the raw ``postings i32[P]``
+column with a delta + bit-packed store cut into 128-posting blocks that
+never straddle a term slice:
+
+* ``post_packed u32[W]`` — little-endian bit-packed doc-id deltas; each
+  block is word-aligned and uses a fixed per-block width
+  ``blk_bits[b] = max(1, bit_length(max delta))`` (128·bits/32 = 4·bits
+  words per block, exactly).
+* ``blk_first/blk_bits/blk_len/blk_word_off/blk_pos i32[NB]`` — per-block
+  first doc id, bit width, valid count, start word, and absolute CSR
+  position of the block's first posting (impacts stay CSR-addressed).
+* ``blk_term_off i32[M+1]`` — CSR of blocks per term.
+
+Query-time probes binary-search the block heads (``blk_first``) and decode
+exactly one block per key (shift/mask + prefix sum) — the compressed words
+are the only doc-id bytes the query path touches, so the modeled
+``posting_bytes`` (see the property) is what actually streams.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 
 import jax
@@ -27,6 +49,7 @@ import numpy as np
 
 BLOCK = 128  # docs per bitmap block
 WORDS_PER_BLOCK = BLOCK // 32
+POSTING_BLOCK = 128  # postings per delta/bit-pack compression block
 
 
 @jax.tree_util.register_dataclass
@@ -34,17 +57,129 @@ WORDS_PER_BLOCK = BLOCK // 32
 class TextIndex:
     """HBM-resident inverted index (a pytree of arrays)."""
 
-    postings: jax.Array  # i32[P] docIDs
+    postings: jax.Array  # i32[P] docIDs ([0] when compressed — see post_packed)
     impacts: jax.Array  # f32[P] precomputed impact scores
     offsets: jax.Array  # i32[M+1]
     bitmaps: jax.Array  # u32[n_bitmap_terms, n_words]  (may be [0, n_words])
     bitmap_term_ids: jax.Array  # i32[n_bitmap_terms] term id per bitmap row
+    # --- delta + bit-packed doc-id store (all [0] when uncompressed) ---
+    post_packed: jax.Array  # u32[W] packed deltas, word-aligned blocks
+    blk_first: jax.Array  # i32[NB] first doc id per block
+    blk_bits: jax.Array  # i32[NB] delta bit width per block
+    blk_len: jax.Array  # i32[NB] valid postings per block (≤ POSTING_BLOCK)
+    blk_word_off: jax.Array  # i32[NB] start word of each block in post_packed
+    blk_pos: jax.Array  # i32[NB] absolute CSR position of block's 1st posting
+    blk_term_off: jax.Array  # i32[M+1] CSR of blocks per term
     n_docs: int = field(metadata=dict(static=True))
     n_terms: int = field(metadata=dict(static=True))
 
     @property
     def n_postings(self) -> int:
-        return self.postings.shape[0]
+        # impacts stay CSR-addressed in both layouts, so P comes from them
+        return self.impacts.shape[0]
+
+    @property
+    def is_compressed(self) -> bool:
+        return self.blk_first.shape[0] > 0
+
+    @property
+    def posting_bytes(self) -> float:
+        """Modeled bytes per posting: doc id (+ block metadata) + impact.
+
+        Uncompressed this is the classic ``4 + impact_itemsize`` (= 8 at
+        f32); compressed it is the bit-packed words plus the 16 B/block of
+        metadata plus the (possibly quantized) impact, amortized per
+        posting.  The planner and the per-query ``bytes_postings`` counters
+        both read this property, so compressed bytes are what the cost
+        model optimizes end to end.
+        """
+        P = max(self.n_postings, 1)
+        imp = self.impacts.dtype.itemsize
+        if self.is_compressed:
+            packed = 4 * self.post_packed.shape[0] + 16 * self.blk_first.shape[0]
+            return packed / P + imp
+        return 4.0 + imp
+
+
+def _empty_pack(n_terms: int) -> dict[str, np.ndarray]:
+    """Zero-width compressed columns (the uncompressed layout's sentinel)."""
+    z = np.zeros((0,), np.int32)
+    return dict(
+        post_packed=np.zeros((0,), np.uint32), blk_first=z, blk_bits=z,
+        blk_len=z, blk_word_off=z, blk_pos=z,
+        blk_term_off=np.zeros((n_terms + 1,), np.int32),
+    )
+
+
+def pack_postings_np(postings: np.ndarray, offsets: np.ndarray) -> dict[str, np.ndarray]:
+    """Delta + bit-pack each term's posting slice into 128-posting blocks.
+
+    Blocks never straddle terms; within a block the first element stores
+    delta 0 (its doc id lives in ``blk_first``) and subsequent deltas are
+    strictly ≥ 1 (postings are sorted unique doc ids within a term).  A
+    block stores only ``ceil(len·bits/32)`` words — the tail padding a
+    ragged last block would need is not materialized (``blk_word_off`` is
+    explicit, so blocks are variable-width), which is what makes short
+    posting lists actually compress.  Decoded slots past ``blk_len`` are
+    therefore garbage (they read into the next block's words) and every
+    consumer masks them before trusting membership.
+    """
+    M = len(offsets) - 1
+    blk_term_off = np.zeros((M + 1,), np.int32)
+    firsts: list[int] = []
+    bits_l: list[int] = []
+    lens: list[int] = []
+    poss: list[int] = []
+    word_off: list[int] = []
+    chunks: list[np.ndarray] = []
+    w = 0
+    j64 = np.arange(POSTING_BLOCK, dtype=np.int64)
+    for t in range(M):
+        lo, hi = int(offsets[t]), int(offsets[t + 1])
+        nb = (hi - lo + POSTING_BLOCK - 1) // POSTING_BLOCK
+        blk_term_off[t + 1] = blk_term_off[t] + nb
+        for b in range(nb):
+            s = lo + b * POSTING_BLOCK
+            e = min(s + POSTING_BLOCK, hi)
+            ids = postings[s:e].astype(np.int64)
+            deltas = np.ones((POSTING_BLOCK,), np.int64)
+            deltas[0] = 0
+            deltas[1:e - s] = np.diff(ids)
+            bits = max(int(deltas.max()).bit_length(), 1)
+            nw = (POSTING_BLOCK * bits) // 32  # 128·bits/32 = 4·bits exactly
+            buf = np.zeros((nw,), np.uint64)
+            bitpos = j64 * bits
+            wi = bitpos >> 5
+            off = (bitpos & 31).astype(np.uint64)
+            lo64 = deltas.astype(np.uint64) << off
+            np.bitwise_or.at(buf, wi, lo64 & np.uint64(0xFFFFFFFF))
+            spill = lo64 >> np.uint64(32)
+            # a nonzero spill always lands inside the block (the last delta
+            # ends exactly at the block's word boundary), so the clamp only
+            # ever redirects zero-valued ORs
+            np.bitwise_or.at(buf, np.minimum(wi + 1, nw - 1), spill)
+            # store only the words real postings reach: a ragged last block
+            # keeps ceil(len·bits/32) words instead of the full 4·bits
+            nw_t = max(-(-(e - s) * bits // 32), 1)
+            chunks.append(buf[:nw_t].astype(np.uint32))
+            firsts.append(int(ids[0]))
+            bits_l.append(bits)
+            lens.append(e - s)
+            poss.append(s)
+            word_off.append(w)
+            w += nw_t
+    if not firsts:  # empty posting store: one degenerate empty block
+        chunks.append(np.zeros((4,), np.uint32))
+        firsts, bits_l, lens, poss, word_off = [0], [1], [0], [0], [0]
+    return dict(
+        post_packed=np.concatenate(chunks),
+        blk_first=np.asarray(firsts, np.int32),
+        blk_bits=np.asarray(bits_l, np.int32),
+        blk_len=np.asarray(lens, np.int32),
+        blk_word_off=np.asarray(word_off, np.int32),
+        blk_pos=np.asarray(poss, np.int32),
+        blk_term_off=blk_term_off,
+    )
 
 
 def build_text_index_np(
@@ -52,6 +187,7 @@ def build_text_index_np(
     n_terms: int,
     n_bitmap_terms: int = 0,
     idf: np.ndarray | None = None,
+    compress: bool = False,
 ) -> TextIndex:
     """Build from per-doc term-id arrays (with repetitions = frequencies).
 
@@ -110,12 +246,16 @@ def build_text_index_np(
         top_terms = np.zeros((0,), dtype=np.int32)
         bitmaps = np.zeros((0, n_words), dtype=np.uint32)
 
+    pack = pack_postings_np(postings, offsets) if compress else _empty_pack(n_terms)
+    if compress:
+        postings = np.zeros((0,), np.int32)  # packed words are the store
     return TextIndex(
         postings=jnp.asarray(postings),
         impacts=jnp.asarray(impacts),
         offsets=jnp.asarray(offsets),
         bitmaps=jnp.asarray(bitmaps),
         bitmap_term_ids=jnp.asarray(top_terms),
+        **{k: jnp.asarray(v) for k, v in pack.items()},
         n_docs=n_docs,
         n_terms=n_terms,
     )
@@ -123,15 +263,7 @@ def build_text_index_np(
 
 def quantize_impacts(index: TextIndex, dtype=jnp.float16) -> TextIndex:
     """Lossy-compress impact scores (paper: compressed index formats)."""
-    return TextIndex(
-        postings=index.postings,
-        impacts=index.impacts.astype(dtype),
-        offsets=index.offsets,
-        bitmaps=index.bitmaps,
-        bitmap_term_ids=index.bitmap_term_ids,
-        n_docs=index.n_docs,
-        n_terms=index.n_terms,
-    )
+    return dataclasses.replace(index, impacts=index.impacts.astype(dtype))
 
 
 def global_idf_np(doc_terms: list[np.ndarray], n_terms: int) -> np.ndarray:
@@ -156,15 +288,7 @@ def rescale_impacts_to_global(index: TextIndex, idf_global: np.ndarray) -> TextI
     idf_local = np.log(1.0 + index.n_docs / np.maximum(counts.astype(np.float64), 1.0))
     ratio = np.where(counts > 0, idf_global / idf_local, 1.0)
     impacts = np.asarray(index.impacts) * np.repeat(ratio, counts).astype(np.float32)
-    return TextIndex(
-        postings=index.postings,
-        impacts=jnp.asarray(impacts),
-        offsets=index.offsets,
-        bitmaps=index.bitmaps,
-        bitmap_term_ids=index.bitmap_term_ids,
-        n_docs=index.n_docs,
-        n_terms=index.n_terms,
-    )
+    return dataclasses.replace(index, impacts=jnp.asarray(impacts))
 
 
 # ---------------------------------------------------------------------------
@@ -178,6 +302,60 @@ def term_slice(index: TextIndex, term: jax.Array) -> tuple[jax.Array, jax.Array]
     return lo, hi - lo
 
 
+def decode_posting_blocks(index: TextIndex, blocks: jax.Array) -> jax.Array:
+    """Decode compressed blocks to doc ids — i32[..., POSTING_BLOCK].
+
+    Pure shift/mask extraction of each block's 128 fixed-width deltas from
+    the packed words, then a prefix sum from ``blk_first``.  Slots past
+    ``blk_len`` are garbage — blocks are stored tail-trimmed, so those
+    reads fall into the next block's words; mask with ``blk_len`` before
+    trusting membership.
+    """
+    bits = index.blk_bits[blocks]  # [...]
+    w0 = index.blk_word_off[blocks]
+    j = jnp.arange(POSTING_BLOCK, dtype=jnp.int32)
+    bitpos = j * bits[..., None]  # [..., 128]
+    word = w0[..., None] + (bitpos >> 5)
+    off = (bitpos & 31).astype(jnp.uint32)
+    W = max(index.post_packed.shape[0], 1)
+    lo_w = index.post_packed[jnp.clip(word, 0, W - 1)]
+    hi_w = index.post_packed[jnp.clip(word + 1, 0, W - 1)]
+    # two-word extraction; the hi shift amount stays < 32 via the mask and
+    # the off == 0 case (where 32 - off would be 32) selects 0 anyway
+    hi_part = jnp.where(
+        off > 0, hi_w << ((jnp.uint32(32) - off) & jnp.uint32(31)), jnp.uint32(0)
+    )
+    mask = (jnp.uint32(1) << bits[..., None].astype(jnp.uint32)) - 1  # bits ≤ 31
+    delta = (((lo_w >> off) | hi_part) & mask).astype(jnp.int32)
+    delta = jnp.where(j == 0, 0, delta)
+    return index.blk_first[blocks][..., None] + jnp.cumsum(delta, axis=-1)
+
+
+def _probe_term_packed(
+    index: TextIndex, term: jax.Array, doc_ids: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Compressed-layout probe: block-head binary search + one-block decode."""
+    b0 = index.blk_term_off[term]
+    nb = index.blk_term_off[term + 1] - b0
+    NB = index.blk_first.shape[0]
+    # containing block = last block whose first doc id is ≤ the key
+    pos = _searchsorted_slice(index.blk_first, b0, nb, doc_ids)
+    exact = (pos < b0 + nb) & (
+        index.blk_first[jnp.clip(pos, 0, NB - 1)] == doc_ids
+    )
+    blk = jnp.where(exact, pos, pos - 1)
+    in_range = (blk >= b0) & (blk < b0 + nb) & (nb > 0)
+    blk_s = jnp.clip(blk, 0, NB - 1)
+    decoded = decode_posting_blocks(index, blk_s)  # [..., 128]
+    j = jnp.arange(POSTING_BLOCK, dtype=jnp.int32)
+    hit = (decoded == doc_ids[..., None]) & (j < index.blk_len[blk_s][..., None])
+    member = in_range & hit.any(axis=-1)
+    jpos = jnp.argmax(hit, axis=-1).astype(jnp.int32)
+    apos = jnp.clip(index.blk_pos[blk_s] + jpos, 0, index.n_postings - 1)
+    impact = jnp.where(member, index.impacts[apos].astype(jnp.float32), 0.0)
+    return member, impact
+
+
 def probe_term(
     index: TextIndex, term: jax.Array, doc_ids: jax.Array
 ) -> tuple[jax.Array, jax.Array]:
@@ -186,6 +364,8 @@ def probe_term(
     Vectorized binary search over the whole posting array restricted to the
     term slice.  Returns (member bool[...], impact f32[...]).
     """
+    if index.is_compressed:
+        return _probe_term_packed(index, term, doc_ids)
     lo, n = term_slice(index, term)
     # searchsorted over the full array with translated bounds: postings within
     # a slice are sorted, and slices are disjoint, so search the slice via
@@ -256,15 +436,31 @@ def conjunction_candidates(
     lo, n = term_slice(index, t0)
     n = jnp.minimum(n, max_candidates)
     idx = jnp.arange(max_candidates, dtype=jnp.int32)
-    pos = lo + idx
     valid = (idx < n) & any_real
-    cand = index.postings[jnp.clip(pos, 0, index.n_postings - 1)]
+    if index.is_compressed:
+        # stream the driver's blocks: decode ceil(mc/128) consecutive blocks
+        # once and flatten, instead of per-element block decodes
+        NB = index.blk_first.shape[0]
+        nbd = (max_candidates + POSTING_BLOCK - 1) // POSTING_BLOCK
+        blocks = jnp.clip(
+            index.blk_term_off[t0] + jnp.arange(nbd, dtype=jnp.int32), 0, NB - 1
+        )
+        cand = decode_posting_blocks(index, blocks).reshape(-1)[:max_candidates]
+        apos = jnp.clip(
+            index.blk_pos[blocks][:, None]
+            + jnp.arange(POSTING_BLOCK, dtype=jnp.int32)[None, :],
+            0,
+            index.n_postings - 1,
+        ).reshape(-1)[:max_candidates]
+        imp = index.impacts[apos].astype(jnp.float32)
+    else:
+        pos = lo + idx
+        cand = index.postings[jnp.clip(pos, 0, index.n_postings - 1)]
+        imp = index.impacts[jnp.clip(pos, 0, index.n_postings - 1)].astype(
+            jnp.float32
+        )
     cand = jnp.where(valid, cand, jnp.int32(2**31 - 1))
-    score = jnp.where(
-        valid,
-        index.impacts[jnp.clip(pos, 0, index.n_postings - 1)].astype(jnp.float32),
-        0.0,
-    )
+    score = jnp.where(valid, imp, 0.0)
 
     def probe_one(i, carry):
         valid, score = carry

@@ -52,13 +52,18 @@ Q_MAX = 8
 
 
 def _kernel(
-    starts_ref, qr_ref, qa_ref, x0_ref, y0_ref, x1_ref, y1_ref, amp_ref, out_ref
+    starts_ref, qr_ref, qa_ref, x0_ref, y0_ref, x1_ref, y1_ref, amp_ref, sc_ref,
+    out_ref,
 ):
-    # starts_ref is scalar-prefetch (used only by the index maps)
-    x0 = x0_ref[...]
-    y0 = y0_ref[...]
-    x1 = x1_ref[...]
-    y1 = y1_ref[...]
+    # starts_ref is scalar-prefetch (used only by the index maps).  The
+    # planes arrive in their STORED dtype (f32/f16 coords, f32/f16/int8
+    # amps) and are decoded in-register: astype f32, then × the per-row
+    # amp scale (all-ones for non-int8 stores — ×1.0 is bitwise exact).
+    x0 = x0_ref[...].astype(jnp.float32)
+    y0 = y0_ref[...].astype(jnp.float32)
+    x1 = x1_ref[...].astype(jnp.float32)
+    y1 = y1_ref[...].astype(jnp.float32)
+    amp = amp_ref[...].astype(jnp.float32) * sc_ref[...]
     acc = jnp.zeros_like(x0)
     for j in range(Q_MAX):  # static unroll over query rects
         qx0 = qr_ref[j, 0]
@@ -68,7 +73,7 @@ def _kernel(
         w = jnp.maximum(jnp.minimum(x1, qx1) - jnp.maximum(x0, qx0), 0.0)
         h = jnp.maximum(jnp.minimum(y1, qy1) - jnp.maximum(y0, qy0), 0.0)
         acc = acc + (w * h) * qa_ref[j]
-    out_ref[...] = acc * amp_ref[...]
+    out_ref[...] = acc * amp
 
 
 @functools.partial(jax.jit, static_argnames=("n_sweeps", "budget", "interpret"))
@@ -76,11 +81,12 @@ def sweep_score_planar(
     block_starts: jax.Array,  # i32[k] sweep starts in BLOCK units (rows/BLOCK_ROWS)
     q_rects: jax.Array,  # f32[Q_MAX, 4]
     q_amps: jax.Array,  # f32[Q_MAX]
-    x0: jax.Array,  # f32[rows, 128] — the ENTIRE toe-print store, planar
-    y0: jax.Array,
+    x0: jax.Array,  # [rows, 128] — the ENTIRE toe-print store, planar,
+    y0: jax.Array,  # in its stored dtype (f32/f16 coords, f32/f16/int8 amps)
     x1: jax.Array,
     y1: jax.Array,
     amp: jax.Array,
+    scale: jax.Array,  # f32[rows, 1] per-row amp scale (ones unless int8)
     n_sweeps: int,
     budget: int,  # toe prints fetched per sweep; multiple of TILE
     interpret: bool = True,
@@ -107,21 +113,22 @@ def sweep_score_planar(
             pl.BlockSpec((Q_MAX, 4), lambda i, j, s: (0, 0)),
             pl.BlockSpec((Q_MAX,), lambda i, j, s: (0,)),
             plane, plane, plane, plane, plane,
+            pl.BlockSpec((BLOCK_ROWS, 1), in_map),
         ],
         out_specs=pl.BlockSpec(
             (1, BLOCK_ROWS, LANES), lambda i, j, s: (i, j, 0)
         ),
     )
     out = pl.pallas_call(
-        lambda s_ref, qr, qa, a, b, c, d, e, o: _kernel(
-            s_ref, qr, qa, a, b, c, d, e, o.at[0]
+        lambda s_ref, qr, qa, a, b, c, d, e, sc, o: _kernel(
+            s_ref, qr, qa, a, b, c, d, e, sc, o.at[0]
         ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(
             (n_sweeps, budget // LANES, LANES), jnp.float32
         ),
         interpret=interpret,
-    )(block_starts, q_rects, q_amps, x0, y0, x1, y1, amp)
+    )(block_starts, q_rects, q_amps, x0, y0, x1, y1, amp, scale)
     return out
 
 
@@ -132,14 +139,22 @@ def _pruned_kernel(
     ub_ref,  # SMEM f32[k, n_tiles*bpt]: per-metadata-block upper bounds
     qr_ref,
     qa_ref,
-    x0_ref,
-    y0_ref,
-    x1_ref,
-    y1_ref,
-    amp_ref,
+    x0_hbm,  # ANY-space planar store (full arrays; copied per block below)
+    y0_hbm,
+    x1_hbm,
+    y1_hbm,
+    amp_hbm,
+    sc_hbm,
     out_ref,  # VMEM f32[BLOCK_ROWS, LANES] tile of the score output
     scored_ref,  # SMEM i32[1, bpt] per-metadata-block scored flags
     buf_ref,  # VMEM scratch f32[cb*BLOCK_ROWS, LANES]: partial top-C heap
+    x0_s,  # VMEM scratch [BLOCK_ROWS, LANES] in the store dtypes: the
+    y0_s,  # manually-DMA'd tile (only scored blocks' rows are copied in)
+    x1_s,
+    y1_s,
+    amp_s,
+    sc_s,  # VMEM scratch f32[BLOCK_ROWS, 1]
+    copy_sem,  # DMA semaphore for the per-block copies
     *,
     n_tiles: int,
     cb: int,
@@ -158,6 +173,7 @@ def _pruned_kernel(
     theta = jnp.min(buf_ref[...])
     rows_per_block = (BLOCK_ROWS + bpt - 1) // bpt  # bpt divides BLOCK_ROWS
     rows = jax.lax.broadcasted_iota(jnp.int32, (BLOCK_ROWS, LANES), 0)
+    row0 = (starts_ref[i] + j) * BLOCK_ROWS  # planar row of this tile
     # per-row scored mask assembled from the bpt per-block decisions
     mask = jnp.zeros((BLOCK_ROWS, LANES), dtype=bool)
     any_scored = False
@@ -167,12 +183,38 @@ def _pruned_kernel(
         mask = mask | (sb & (rows // rows_per_block == b))
         any_scored = sb | any_scored
 
+        # a θ-skipped block issues NO copy: zero bytes move for it.  Its
+        # scratch rows keep stale data from earlier tiles, which is safe —
+        # every consumer below selects through ``mask`` (jnp.where), so
+        # garbage (even NaN) in never-copied rows cannot propagate.
+        @pl.when(sb)
+        def _fetch(b=b):
+            src_row = row0 + b * rows_per_block
+            dst_row = b * rows_per_block
+            for src, dst in (
+                (x0_hbm, x0_s),
+                (y0_hbm, y0_s),
+                (x1_hbm, x1_s),
+                (y1_hbm, y1_s),
+                (amp_hbm, amp_s),
+                (sc_hbm, sc_s),
+            ):
+                cp = pltpu.make_async_copy(
+                    src.at[pl.ds(src_row, rows_per_block), :],
+                    dst.at[pl.ds(dst_row, rows_per_block), :],
+                    copy_sem,
+                )
+                cp.start()
+                cp.wait()
+
     @pl.when(any_scored)
     def _score():
-        x0 = x0_ref[...]
-        y0 = y0_ref[...]
-        x1 = x1_ref[...]
-        y1 = y1_ref[...]
+        # in-register decode of the stored dtypes (see _kernel)
+        x0 = x0_s[...].astype(jnp.float32)
+        y0 = y0_s[...].astype(jnp.float32)
+        x1 = x1_s[...].astype(jnp.float32)
+        y1 = y1_s[...].astype(jnp.float32)
+        amp = amp_s[...].astype(jnp.float32) * sc_s[...]
         acc = jnp.zeros_like(x0)
         for q in range(Q_MAX):  # static unroll over query rects
             qx0 = qr_ref[q, 0]
@@ -182,7 +224,7 @@ def _pruned_kernel(
             w = jnp.maximum(jnp.minimum(x1, qx1) - jnp.maximum(x0, qx0), 0.0)
             h = jnp.maximum(jnp.minimum(y1, qy1) - jnp.maximum(y0, qy0), 0.0)
             acc = acc + (w * h) * qa_ref[q]
-        sc = jnp.where(mask, acc * amp_ref[...], 0.0)
+        sc = jnp.where(mask, acc * amp, 0.0)
         out_ref[...] = sc
         # absolute toe-print positions of this tile, for the validity mask —
         # only genuine [start, end) candidates may feed the θ buffer
@@ -211,11 +253,12 @@ def sweep_score_pruned_planar(
     block_ub: jax.Array,  # f32[k, (budget // TILE) * bpt] per-block bounds
     q_rects: jax.Array,  # f32[Q_MAX, 4]
     q_amps: jax.Array,  # f32[Q_MAX]
-    x0: jax.Array,  # f32[rows, 128] — the ENTIRE toe-print store, planar
-    y0: jax.Array,
+    x0: jax.Array,  # [rows, 128] — the ENTIRE toe-print store, planar,
+    y0: jax.Array,  # in its stored dtype (f32/f16 coords, f32/f16/int8 amps)
     x1: jax.Array,
     y1: jax.Array,
     amp: jax.Array,
+    scale: jax.Array,  # f32[rows, 1] per-row amp scale (ones unless int8)
     n_sweeps: int,
     budget: int,  # toe prints fetched per sweep; multiple of TILE
     max_candidates: int,  # C of the partial top-C threshold buffer
@@ -229,6 +272,13 @@ def sweep_score_pruned_planar(
     across all tiles of all sweeps of one query; under ``vmap`` the batch
     axis becomes the outermost grid dimension and the (0, 0) re-init gives
     every query a fresh threshold.
+
+    Unlike the unpruned kernel, the store planes are NOT auto-DMA'd by a
+    BlockSpec: they stay in ``ANY`` memory space and the kernel issues a
+    manual ``make_async_copy`` per *metadata block* that survives the θ
+    test, so a skipped block truly moves zero bytes (the PR 4 caveat —
+    previously the whole tile streamed and skipped blocks were only
+    masked after the fetch).
     """
     assert budget % TILE == 0
     assert BLOCK_ROWS % bpt == 0
@@ -236,10 +286,8 @@ def sweep_score_pruned_planar(
     # C rounded up to whole tiles: a larger buffer only lowers θ (safer)
     cb = max(1, -(-max_candidates // TILE))
 
-    def in_map(i, j, starts):
-        return (starts[i] + j, 0)
-
-    plane = pl.BlockSpec((BLOCK_ROWS, LANES), in_map)
+    # store planes: full arrays, manually copied block-wise in-kernel
+    plane = pl.BlockSpec(memory_space=pltpu.ANY)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(n_sweeps, n_tiles),
@@ -260,17 +308,28 @@ def sweep_score_pruned_planar(
             plane,
             plane,
             plane,
+            plane,
         ],
         out_specs=[
             pl.BlockSpec((1, BLOCK_ROWS, LANES), lambda i, j, s: (i, j, 0)),
             pl.BlockSpec((1, bpt), lambda i, j, s: (i, j), memory_space=pltpu.SMEM),
         ],
-        scratch_shapes=[pltpu.VMEM((cb * BLOCK_ROWS, LANES), jnp.float32)],
+        scratch_shapes=[
+            pltpu.VMEM((cb * BLOCK_ROWS, LANES), jnp.float32),
+            pltpu.VMEM((BLOCK_ROWS, LANES), x0.dtype),
+            pltpu.VMEM((BLOCK_ROWS, LANES), y0.dtype),
+            pltpu.VMEM((BLOCK_ROWS, LANES), x1.dtype),
+            pltpu.VMEM((BLOCK_ROWS, LANES), y1.dtype),
+            pltpu.VMEM((BLOCK_ROWS, LANES), amp.dtype),
+            pltpu.VMEM((BLOCK_ROWS, 1), jnp.float32),
+            pltpu.SemaphoreType.DMA,
+        ],
     )
     kernel = functools.partial(_pruned_kernel, n_tiles=n_tiles, cb=cb, bpt=bpt)
     scores, scored = pl.pallas_call(
-        lambda s_ref, bd, fl, ub, qr, qa, a, b, c, d, e, o, f, buf: kernel(
-            s_ref, bd, fl, ub, qr, qa, a, b, c, d, e, o.at[0], f, buf
+        lambda s_ref, bd, fl, ub, qr, qa, a, b, c, d, e, g, o, f, buf, sa, sb, sc_, sd, se, sg, sem: kernel(
+            s_ref, bd, fl, ub, qr, qa, a, b, c, d, e, g,
+            o.at[0], f, buf, sa, sb, sc_, sd, se, sg, sem
         ),
         grid_spec=grid_spec,
         out_shape=[
@@ -278,5 +337,8 @@ def sweep_score_pruned_planar(
             jax.ShapeDtypeStruct((n_sweeps, n_tiles * bpt), jnp.int32),
         ],
         interpret=interpret,
-    )(block_starts, bounds, floor, block_ub, q_rects, q_amps, x0, y0, x1, y1, amp)
+    )(
+        block_starts, bounds, floor, block_ub, q_rects, q_amps,
+        x0, y0, x1, y1, amp, scale,
+    )
     return scores, scored

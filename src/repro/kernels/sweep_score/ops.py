@@ -14,6 +14,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.spatial_index import SCALE_BLOCK
 from repro.kernels.sweep_score.kernel import (
     LANES,
     Q_MAX,
@@ -31,27 +32,41 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _planarize(tp_rects, tp_amps, budget):
-    """Planar [rows, 128] f32 views of the store, padded for alignment slop.
+def _planarize(tp_rects, tp_amps, tp_amp_scale, budget):
+    """Planar [rows, 128] views of the store in its STORED dtype, padded
+    for alignment slop, plus a per-row f32 amp-scale plane [rows, 1].
 
-    Returns (planes, pad_budget): 5 planes (x0, y0, x1, y1, amp) and the
-    per-sweep in-kernel budget (the requested budget rounded up to whole
-    tiles plus one tile of alignment slop).
+    Compressed stores keep their narrow dtypes here — the kernels stream
+    the stored bytes and decode in-register (astype f32, × row scale).
+    One planar row is exactly one amp-scale block (SCALE_BLOCK == LANES);
+    stores without a scale column get an all-ones plane, and ×1.0 keeps
+    the uncompressed path bit-identical.
+
+    Returns (planes, pad_budget): 6 planes (x0, y0, x1, y1, amp, scale)
+    and the per-sweep in-kernel budget (the requested budget rounded up to
+    whole tiles plus one tile of alignment slop).
     """
+    assert SCALE_BLOCK == LANES
     T = tp_rects.shape[0]
     pad_budget = (budget + TILE - 1) // TILE * TILE + TILE
     Tp = (T + TILE - 1) // TILE * TILE + pad_budget  # tail room for last sweep
+    rows = Tp // LANES
 
     def plane(v, fill):
-        v = jnp.pad(v.astype(jnp.float32), (0, Tp - T), constant_values=fill)
-        return v.reshape(Tp // LANES, LANES)
+        v = jnp.pad(v, (0, Tp - T), constant_values=fill)
+        return v.reshape(rows, LANES)
 
+    ns = tp_amp_scale.shape[0] if tp_amp_scale is not None else 0
+    scale = jnp.ones((rows, 1), jnp.float32)
+    if ns:
+        scale = scale.at[:ns, 0].set(tp_amp_scale.astype(jnp.float32))
     planes = (
         plane(tp_rects[:, 0], 1.0),  # empty-rect padding
         plane(tp_rects[:, 1], 1.0),
         plane(tp_rects[:, 2], 0.0),
         plane(tp_rects[:, 3], 0.0),
-        plane(tp_amps, 0.0),
+        plane(tp_amps, 0),
+        scale,
     )
     return planes, pad_budget
 
@@ -166,6 +181,7 @@ def sweep_score(
     q_amps: jax.Array,  # [Q]
     budget: int,
     interpret: bool | None = None,
+    tp_amp_scale: jax.Array | None = None,  # f32[ceil(T/SCALE_BLOCK)] (int8 store)
 ) -> tuple[jax.Array, jax.Array]:
     """Fused fetch+score: (scores f32[k, budget], valid bool[k, budget])."""
     if interpret is None:
@@ -173,7 +189,9 @@ def sweep_score(
     T = tp_rects.shape[0]
     k = sweep_starts.shape[0]
     qr, qa = _pad_query(q_rects, q_amps)
-    (x0, y0, x1, y1, am), pad_budget = _planarize(tp_rects, tp_amps, budget)
+    (x0, y0, x1, y1, am, sc), pad_budget = _planarize(
+        tp_rects, tp_amps, tp_amp_scale, budget
+    )
 
     safe = jnp.where(sweep_starts == INVALID, 0, sweep_starts)
     aligned = (safe // TILE) * TILE  # align down to tile
@@ -188,6 +206,7 @@ def sweep_score(
         x1,
         y1,
         am,
+        sc,
         n_sweeps=k,
         budget=pad_budget,
         interpret=interpret,
@@ -225,6 +244,7 @@ def sweep_score_pruned(
     block_size: int,
     floor: jax.Array | float = 0.0,  # select-stage score floor (scalar)
     interpret: bool | None = None,
+    tp_amp_scale: jax.Array | None = None,  # f32[ceil(T/SCALE_BLOCK)] (int8 store)
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """Fused fetch+score+select with block-max pruning.
 
@@ -243,7 +263,9 @@ def sweep_score_pruned(
     k = sweep_starts.shape[0]
     bpt = TILE // block_size
     qr, qa = _pad_query(q_rects, q_amps)
-    (x0, y0, x1, y1, am), pad_budget = _planarize(tp_rects, tp_amps, budget)
+    (x0, y0, x1, y1, am, sc), pad_budget = _planarize(
+        tp_rects, tp_amps, tp_amp_scale, budget
+    )
     n_tiles = pad_budget // TILE
 
     safe, aligned, block_starts, bounds = sweep_window_offsets(
@@ -266,6 +288,7 @@ def sweep_score_pruned(
         x1,
         y1,
         am,
+        sc,
         n_sweeps=k,
         budget=pad_budget,
         max_candidates=max_candidates,

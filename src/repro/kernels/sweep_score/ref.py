@@ -23,11 +23,15 @@ def sweep_score_ref(
     q_rects: jax.Array,  # f32[Q, 4]
     q_amps: jax.Array,  # f32[Q]
     budget: int,
+    tp_amp_scale: jax.Array | None = None,  # f32[ceil(T/128)] (int8 store)
 ) -> tuple[jax.Array, jax.Array]:
     """Fetch-then-score reference: returns (scores f32[k, budget],
     valid bool[k, budget]) for each sweep's [start, start+budget) window,
     masked to [start, end)."""
+    from repro.core.spatial_index import SCALE_BLOCK
+
     T = tp_rects.shape[0]
+    has_scale = tp_amp_scale is not None and tp_amp_scale.shape[0] > 0
 
     def one(s, e):
         start = jnp.where(s == jnp.int32(2**31 - 1), 0, s)
@@ -35,6 +39,8 @@ def sweep_score_ref(
         safe = jnp.clip(pos, 0, T - 1)
         r = tp_rects[safe].astype(jnp.float32)
         a = tp_amps[safe].astype(jnp.float32)
+        if has_scale:  # same astype-then-multiply order as the kernel decode
+            a = a * tp_amp_scale[safe // SCALE_BLOCK]
         ok = (s != jnp.int32(2**31 - 1)) & (pos >= s) & (pos < e) & (pos < T)
         ix0 = jnp.maximum(r[:, None, 0], q_rects[None, :, 0])
         iy0 = jnp.maximum(r[:, None, 1], q_rects[None, :, 1])
@@ -64,10 +70,12 @@ def sweep_score_pruned_ref(
     max_candidates: int,
     block_size: int,
     floor: jax.Array | float = 0.0,
+    tp_amp_scale: jax.Array | None = None,  # f32[ceil(T/128)] (int8 store)
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """Block-max pruned sweep oracle; same contract as
     ``ops.sweep_score_pruned`` (scores, valid, streamed, blocks_scored,
     blocks_active)."""
+    from repro.core.spatial_index import SCALE_BLOCK
     from repro.kernels.sweep_score.kernel import Q_MAX, TILE
     from repro.kernels.sweep_score.ops import (
         block_upper_bounds,
@@ -108,7 +116,11 @@ def sweep_score_pruned_ref(
     y0 = jnp.where(in_store, r[..., 1], 1.0)
     x1 = jnp.where(in_store, r[..., 2], 0.0)
     y1 = jnp.where(in_store, r[..., 3], 0.0)
-    a = jnp.where(in_store, tp_amps[gp].astype(jnp.float32), 0.0)
+    a_dec = tp_amps[gp].astype(jnp.float32)
+    if tp_amp_scale is not None and tp_amp_scale.shape[0] > 0:
+        # same astype-then-multiply order as the in-kernel decode
+        a_dec = a_dec * tp_amp_scale[gp // SCALE_BLOCK]
+    a = jnp.where(in_store, a_dec, 0.0)
     qr = q_rects.astype(jnp.float32)
     qa = q_amps.astype(jnp.float32)
     acc = jnp.zeros_like(x0)

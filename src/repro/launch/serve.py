@@ -154,6 +154,7 @@ def build_stack(args, corpus):
         m_intervals=args.m_intervals,
         fused=args.fused,
         use_pallas=args.use_pallas,
+        compress=args.compress,
     )
 
     cache = make_cache(args.cache, args.cache_capacity, max_bytes=args.cache_max_bytes)
@@ -277,6 +278,13 @@ def main() -> None:
         "interpret mode on CPU)",
     )
     ap.add_argument(
+        "--compress", default="none", choices=["none", "f16", "int8"],
+        help="compressed index storage: bit-packed posting deltas plus "
+        "f16 (or int8 + per-block scale) toe-print stores, decoded "
+        "inside the sweep kernels — the byte counters report the "
+        "compressed sizes that actually stream",
+    )
+    ap.add_argument(
         "--no-recall", action="store_true",
         help="skip the oracle recall check (slow on big corpora)",
     )
@@ -355,6 +363,7 @@ def main() -> None:
                 corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
                 pagerank=corpus.pagerank, grid=args.grid,
                 m_intervals=args.m_intervals, budgets=budgets,
+                compress=args.compress,
             )
         )
         if args.trace == "mixture":

@@ -471,18 +471,39 @@ def build_geoweb_cell(spec: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
     def sh(shape_, dtype, logical):
         return _sds(shape_, dtype, mesh, logical)
 
-    ft = jnp.float16 if getattr(cfg, "compress", False) else jnp.float32
+    from repro.core.spatial_index import SCALE_BLOCK, normalize_compress
+    from repro.core.text_index import POSTING_BLOCK
+
+    mode = normalize_compress(getattr(cfg, "compress", False))
+    ft = jnp.float16 if mode != "none" else jnp.float32
+    at = jnp.int8 if mode == "int8" else ft  # amp store dtype
+    it = jnp.int16 if (mode != "none" and N <= 2**15 - 1) else jnp.int32
+    # compressed posting store widths: one block per POSTING_BLOCK postings,
+    # delta width bounded by the per-shard doc-id range
+    NBp = max(-(-Pp // POSTING_BLOCK), 1) if mode != "none" else 0
+    d_bits = max(int(N - 1).bit_length(), 1) if N > 1 else 1
+    Wp = NBp * (POSTING_BLOCK * d_bits // 32)
+    Pp_store = 0 if mode != "none" else Pp  # raw doc-id column
+    SBn = max(-(-Tt // SCALE_BLOCK), 1) if mode == "int8" else 0
     # block-max metadata columns (always f32; see core/spatial_index.py)
     block_size = getattr(cfg, "block_size", 128)
     NB = max((Tt + block_size - 1) // block_size, 1)
     lead = ("docs",)  # leading shard dim over doc axes
     idx = ShardedGeoIndex(
-        postings=sh((S, Pp), jnp.int32, lead + (None,)),
+        postings=sh((S, Pp_store), jnp.int32, lead + (None,)),
         impacts=sh((S, Pp), ft, lead + (None,)),
         offsets=sh((S, M + 1), jnp.int32, lead + (None,)),
+        post_packed=sh((S, Wp), jnp.uint32, lead + (None,)),
+        blk_first=sh((S, NBp), jnp.int32, lead + (None,)),
+        blk_bits=sh((S, NBp), jnp.int32, lead + (None,)),
+        blk_len=sh((S, NBp), jnp.int32, lead + (None,)),
+        blk_word_off=sh((S, NBp), jnp.int32, lead + (None,)),
+        blk_pos=sh((S, NBp), jnp.int32, lead + (None,)),
+        blk_term_off=sh((S, M + 1), jnp.int32, lead + (None,)),
         tp_rects=sh((S, Tt, 4), ft, lead + (None, None)),
-        tp_amps=sh((S, Tt), ft, lead + (None,)),
-        tp_doc_ids=sh((S, Tt), jnp.int32, lead + (None,)),
+        tp_amps=sh((S, Tt), at, lead + (None,)),
+        tp_doc_ids=sh((S, Tt), it, lead + (None,)),
+        tp_amp_scale=sh((S, SBn), jnp.float32, lead + (None,)),
         tile_starts=sh((S, G2, cfg.m_intervals), jnp.int32, lead + (None, None)),
         tile_ends=sh((S, G2, cfg.m_intervals), jnp.int32, lead + (None, None)),
         doc_rects=sh((S, N, R, 4), ft, lead + (None, None, None)),

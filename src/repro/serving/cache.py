@@ -103,6 +103,13 @@ class LandlordCache(_CacheStats):
     budget is never admitted (admitting it would evict everything for a
     result too big to keep).  Without ``max_bytes`` the cache is count-
     bounded only and ``size`` just scales credit, as before.
+
+    **Exact byte accounting**: entry sizes are whole bytes (``int(size)``,
+    floored at 1) and ``bytes_used`` is an integer — the running total is
+    ``sum(entry sizes)`` exactly, through any sequence of admissions,
+    replacements and eviction storms.  (The accounting used to accumulate
+    float residue and paper over it with a reset-to-zero-when-empty hack;
+    only the *credit* math ``cost / size`` is float now.)
     """
 
     def __init__(self, capacity: int, max_bytes: float | None = None):
@@ -113,7 +120,7 @@ class LandlordCache(_CacheStats):
             raise ValueError("max_bytes must be > 0 (or None for unbounded)")
         self.capacity = capacity
         self.max_bytes = max_bytes
-        self.bytes_used = 0.0
+        self.bytes_used = 0
         self.rejected = 0  # oversized entries refused admission
         self.clock = 0.0
         # key -> [value, cost, size, expiry, generation]
@@ -153,7 +160,7 @@ class LandlordCache(_CacheStats):
         self, key: Hashable, value: Any, cost: float = 1.0, size: float = 1.0
     ) -> None:
         cost = max(float(cost), 1e-12)
-        size = max(float(size), 1e-12)
+        size = max(int(size), 1)  # whole bytes: accounting stays exact
         if self.max_bytes is not None and size > self.max_bytes:
             self.rejected += 1
             return
@@ -174,8 +181,6 @@ class LandlordCache(_CacheStats):
             # may evict the entry just admitted if its credit is the minimum
             while self._data and self.bytes_used > self.max_bytes:
                 self._evict_one()
-            if not self._data:
-                self.bytes_used = 0.0  # clear any float residue
 
     def _evict_one(self) -> None:
         while self._heap:

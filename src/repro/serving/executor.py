@@ -49,6 +49,7 @@ from __future__ import annotations
 
 from dataclasses import replace
 
+import jax
 import numpy as np
 
 from repro.core import algorithms as alg
@@ -137,7 +138,17 @@ class SingleDeviceExecutor:
 
 
 class ShardedExecutor:
-    """Doc-sharded scatter-gather execution over per-shard engines."""
+    """Doc-sharded scatter-gather execution over per-shard engines.
+
+    Shard dispatch is *overlapped* by default: every routed shard's query
+    is submitted back-to-back (jax dispatch is asynchronous, so the device
+    work for shard ``s+1`` starts while shard ``s`` still computes) and the
+    host synchronizes exactly once, when the merge pulls the per-shard
+    top-k lists.  ``overlap=False`` restores the strictly sequential loop
+    (each shard runs to completion before the next is dispatched) — the
+    two paths are bit-identical in results and per-stage counters, which
+    ``tests/test_serving.py`` pins.
+    """
 
     def __init__(
         self,
@@ -145,6 +156,7 @@ class ShardedExecutor:
         global_ids,
         algorithm: str = "k_sweep",
         routing: str = "broadcast",
+        overlap: bool = True,
         **kw,
     ):
         _reject_partition_kwarg(kw)
@@ -152,6 +164,7 @@ class ShardedExecutor:
         self.global_ids: list[np.ndarray] = global_ids  # per shard: local → global
         self.algorithm = algorithm
         self.routing = _check_routing(routing)
+        self.overlap = overlap
         self._coverage_sats: np.ndarray | None = None  # lazy f32[S, G+1, G+1]
         self.kw = kw
         self.telemetry = None
@@ -205,6 +218,8 @@ class ShardedExecutor:
         weights: ranking.RankWeights | None = None,
         algorithm: str = "k_sweep",
         routing: str = "broadcast",
+        compress: "bool | str" = False,
+        overlap: bool = True,
         **kw,
     ) -> "ShardedExecutor":
         _reject_partition_kwarg(kw)
@@ -229,26 +244,35 @@ class ShardedExecutor:
                 budgets=budgets,
                 weights=weights,
                 idf=idf_global,
+                compress=compress,
             )
             engines.append(eng)
             gids.append(sel.astype(np.int32))
-        return ShardedExecutor(engines, gids, algorithm, routing=routing, **kw)
+        return ShardedExecutor(
+            engines, gids, algorithm, routing=routing, overlap=overlap, **kw
+        )
 
     # ------------------------------------------------------------------
     def _coverage(self) -> np.ndarray:
         """Stacked per-shard coverage SATs ``f32[S, G+1, G+1]`` (lazy)."""
         if self._coverage_sats is None:
-            self._coverage_sats = np.stack(
-                [
+            from repro.core.spatial_index import SCALE_BLOCK
+
+            sats = []
+            for eng in self.engines:
+                sp = eng.index.spatial
+                amps = np.asarray(sp.tp_amps).astype(np.float32)
+                if sp.tp_amp_scale.shape[0]:  # decode int8 amp stores
+                    sc = np.asarray(sp.tp_amp_scale)
+                    amps = amps * np.repeat(sc, SCALE_BLOCK)[: amps.shape[0]]
+                sats.append(
                     coverage_sat_np(
                         coverage_grid_np(
-                            np.asarray(eng.index.spatial.tp_rects),
-                            np.asarray(eng.index.spatial.tp_amps),
+                            np.asarray(sp.tp_rects).astype(np.float32), amps
                         )
                     )
-                    for eng in self.engines
-                ]
-            )
+                )
+            self._coverage_sats = np.stack(sats)
         return self._coverage_sats
 
     def route_batch(self, batch: alg.QueryBatch) -> tuple[np.ndarray, np.ndarray]:
@@ -287,6 +311,10 @@ class ShardedExecutor:
                 )
         tracer = self.telemetry.tracer if self.telemetry else None
         label = plan.label if plan is not None else self.algorithm
+        # phase 1 — scatter: dispatch every routed shard's query.  jax
+        # dispatch is asynchronous, so with overlap the device work of all
+        # shards is in flight before any result is pulled to host
+        pending = []
         for shard, (eng, gid) in enumerate(zip(self.engines, self.global_ids)):
             if not visit[shard]:
                 continue
@@ -297,6 +325,13 @@ class ShardedExecutor:
                 res = eng.query(batch, plan=plan, **self.kw)
             else:
                 res = eng.query(batch, self.algorithm, **self.kw)
+            if not self.overlap:
+                # sequential reference path: shard s completes before
+                # shard s+1 dispatches
+                jax.block_until_ready((res.ids, res.scores))
+            pending.append((shard, gid, res, t0))
+        # phase 2 — gather: the single host sync point per shard result
+        for shard, gid, res, t0 in pending:
             ids = np.asarray(res.ids)
             scores = np.asarray(res.scores).copy()
             valid = ids >= 0
@@ -308,8 +343,8 @@ class ShardedExecutor:
                 v = np.asarray(v, dtype=np.float64)
                 stats_acc[key] = stats_acc.get(key, 0.0) + v
             if tracer is not None:
-                # ids/scores were just pulled to host, so the span covers
-                # this shard's real execution, not only its dispatch
+                # span runs from this shard's dispatch to its host pull —
+                # under overlap, shard spans legitimately overlap in time
                 tracer.span(
                     f"shard {shard}", f"query[{label}]", t0, tracer.wall_now(),
                     args={"batch": int(batch.terms.shape[0])},
@@ -404,6 +439,7 @@ class MeshExecutor:
         algorithm: str = "k_sweep",
         fused: bool = False,
         routing: str = "broadcast",
+        compress: "bool | str" = False,
         **kw,
     ) -> "MeshExecutor":
         from repro.core.distributed import make_serve_fn, shard_corpus_np
@@ -421,7 +457,7 @@ class MeshExecutor:
             n_shards *= mesh.shape[a]
         sharded = shard_corpus_np(
             doc_terms, doc_rects, doc_amps, pagerank, n_terms,
-            n_shards, partitioner, grid=grid,
+            n_shards, partitioner, grid=grid, compress=compress,
         )
         # sweeps cannot exceed a shard's toe-print store (same clamp as
         # GeoSearchEngine.build applies for the single-index case)

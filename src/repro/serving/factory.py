@@ -48,6 +48,7 @@ def make_executor(
     m_intervals: int = 2,
     fused: bool = False,
     use_pallas: bool = False,
+    compress: "bool | str" = False,
     telemetry=None,
 ):
     """Build an executor of ``kind`` over ``corpus``; see module docstring.
@@ -60,7 +61,9 @@ def make_executor(
       the shard count comes from the mesh's doc axes, not ``n_shards``.
 
     ``routing="footprint"`` (sharded/mesh) skips/masks shards no query
-    footprint touches; ``telemetry`` is attached before returning.
+    footprint touches; ``compress`` selects the index storage mode
+    (``"none"``/``"f16"``/``"int8"``, bool accepted for compatibility);
+    ``telemetry`` is attached before returning.
     """
     if kind not in EXECUTOR_KINDS:
         raise ValueError(f"kind must be one of {EXECUTOR_KINDS}, got {kind!r}")
@@ -95,7 +98,7 @@ def make_executor(
         eng = GeoSearchEngine.build(
             corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
             pagerank=corpus.pagerank, grid=grid, m_intervals=m_intervals,
-            budgets=budgets, weights=weights,
+            budgets=budgets, weights=weights, compress=compress,
         )
         executor = SingleDeviceExecutor(eng, algorithm, **kw)
     elif kind == "sharded":
@@ -103,7 +106,8 @@ def make_executor(
             corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
             pagerank=corpus.pagerank, n_shards=n_shards,
             partitioner=partitioner, grid=grid, budgets=budgets,
-            weights=weights, algorithm=algorithm, routing=routing, **kw,
+            weights=weights, algorithm=algorithm, routing=routing,
+            compress=compress, **kw,
         )
     else:  # mesh
         if mesh is None:
@@ -112,7 +116,7 @@ def make_executor(
             corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
             pagerank=corpus.pagerank, mesh=mesh, partitioner=partitioner,
             grid=grid, budgets=budgets, weights=weights, algorithm=algorithm,
-            fused=fused, routing=routing,
+            fused=fused, routing=routing, compress=compress,
         )
     if telemetry is not None:
         executor.attach_telemetry(telemetry)

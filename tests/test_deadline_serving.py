@@ -343,6 +343,35 @@ def test_landlord_fresh_clone_copies_budget():
     assert d.capacity == 7 and d.max_bytes == 123.0 and len(d) == 0
 
 
+def test_landlord_byte_accounting_exact_after_eviction_storms():
+    """Property: ``bytes_used`` equals the integer sum of resident entry
+    sizes after ANY interleaving of admissions, replacements, renewals and
+    byte-pressure eviction storms.
+
+    The accounting used to run on floats and reset itself to zero whenever
+    the cache drained ("clear any float residue") — masking drift instead
+    of preventing it.  Sizes are now whole bytes and the invariant is
+    exact equality, not approx.
+    """
+    rng = np.random.default_rng(42)
+    budget = 4096
+    c = LandlordCache(capacity=64, max_bytes=budget)
+    for i in range(3000):
+        key = int(rng.integers(0, 160))
+        op = rng.random()
+        if op < 0.25:
+            c.get(key)  # renewals must not perturb accounting
+        else:
+            # sizes up to ~budget/2 force frequent multi-entry storms;
+            # occasional oversized entries exercise the rejection path
+            size = int(rng.integers(1, budget // 2 if op < 0.9 else 2 * budget))
+            c.put(key, i, cost=float(rng.random() * 10 + 1e-3), size=size)
+        assert isinstance(c.bytes_used, int)
+        assert c.bytes_used == sum(e[2] for e in c._data.values())
+        assert c.bytes_used <= budget
+    assert c.evictions > 100  # the storms actually happened
+
+
 def test_serve_loop_fills_cache_with_payload_sizes():
     """The server passes result payload bytes as the Landlord entry size."""
     trace = _stamped_trace(n=100)
