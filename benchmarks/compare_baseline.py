@@ -26,6 +26,13 @@ performance regressed beyond noise:
   streams more than ``bytes_factor`` × the uncompressed bytes (default
   0.5 — the compressed store must halve streamed bytes).  Absolute on the
   fresh run: the storage layout does not drift with machine noise.
+* **Text-prune I/O** — the ``serve_text_prune_io`` row carries
+  ``probes_x`` / ``bytes_x`` (unpruned ÷ pruned probes and streamed
+  postings bytes on the planted hot-pair trace) and
+  ``recall_vs_unpruned``; fail when either ratio drops below
+  ``textprune_factor`` (default 2.0) or recall@10 drops below 0.99.
+  Absolute on the fresh run: the skip construction is deterministic and
+  does not drift with machine noise.
 * **Telemetry overhead** — the ``serve_telemetry_overhead`` row carries
   ``qps_ratio`` (telemetry-on QPS / telemetry-off QPS, best-of-3 each);
   fail when the *current* run's ratio drops below ``overhead_floor``
@@ -73,6 +80,7 @@ def compare(
     overhead_floor: float = 0.95,
     fanout_factor: float = 0.5,
     bytes_factor: float = 0.5,
+    textprune_factor: float = 2.0,
 ) -> tuple[list[str], list[str]]:
     """Return ``(failures, warnings)`` — the gate passes iff no failures.
 
@@ -136,6 +144,22 @@ def compare(
                     f"{bytes_factor}x uncompressed {b_u:.0f} (the compressed "
                     f"store stopped halving streamed bytes)"
                 )
+    tp = current.get("serve_text_prune_io")
+    if tp is not None:
+        for key in ("probes_x", "bytes_x"):
+            val = tp.get(key)
+            if val is not None and val < textprune_factor:
+                failures.append(
+                    f"serve_text_prune_io: {key} {val:.2f} < "
+                    f"{textprune_factor} (block-max pruning stopped cutting "
+                    f"text traversal I/O)"
+                )
+        rec = tp.get("recall_vs_unpruned")
+        if rec is not None and rec < 0.99:
+            failures.append(
+                f"serve_text_prune_io: recall_vs_unpruned {rec:.3f} < 0.99 "
+                f"(pruned text_first diverged from the unpruned top-k)"
+            )
     ratio = current.get("serve_telemetry_overhead", {}).get("qps_ratio")
     if ratio is not None and ratio < overhead_floor:
         failures.append(
@@ -163,6 +187,9 @@ def main() -> None:
     ap.add_argument("--bytes-factor", type=float, default=0.5,
                     help="max compressed/uncompressed streamed-bytes ratio "
                          "(compressed-store gate)")
+    ap.add_argument("--textprune-factor", type=float, default=2.0,
+                    help="min unpruned/pruned probes and postings-bytes "
+                         "ratios (block-max text-pruning gate)")
     args = ap.parse_args()
 
     baseline = load_rows(args.baseline)
@@ -172,7 +199,7 @@ def main() -> None:
         p99_factor=args.p99_factor, qps_factor=args.qps_factor,
         slack_ms=args.slack_ms, min_fail_ms=args.min_fail_ms,
         overhead_floor=args.overhead_floor, fanout_factor=args.fanout_factor,
-        bytes_factor=args.bytes_factor,
+        bytes_factor=args.bytes_factor, textprune_factor=args.textprune_factor,
     )
     for name in sorted(set(baseline) & set(current)):
         b, c = baseline[name], current[name]

@@ -15,6 +15,15 @@ Prints ``name,us_per_call,derived`` CSV rows:
                      on a padded zipf trace: recall, n_probes,
                      postings/spatial bytes, blocks skipped; the
                      ``_gain`` row prints the ratios.
+* ``core_textprune_{unpruned,pruned,gain}`` — block-max pruned TEXT-FIRST
+                     (impact-ordered posting skipping with in-kernel DMA
+                     elision) vs the unpruned traversal that needs
+                     ``max_candidates ≥ df`` for the same answers, on the
+                     planted impact-bimodal hot-pair corpus: recall vs the
+                     unpruned top-k, probes, streamed postings bytes,
+                     text blocks skipped (acceptance: ≥ 2× drop in both
+                     ``n_probes`` and ``bytes_postings`` at recall@10
+                     ≥ 0.99, the ``meets_2x`` column).
 * ``core_compress_{f16,int8,gain}`` — compressed posting (delta +
                      bit-packed) and toe-print (f16 / int8 + per-block
                      scale) stores vs the uncompressed layout on the same
@@ -213,6 +222,79 @@ def bench_block_prune(quick: bool) -> None:
         f"{mean(un, 'bytes_postings') / max(mean(pr, 'bytes_postings'), 1):.2f};"
         f"bytes_spatial_x="
         f"{mean(un, 'bytes_spatial') / max(mean(pr, 'bytes_spatial'), 1):.2f}",
+    )
+
+
+def bench_text_prune(quick: bool) -> None:
+    """Block-max pruned TEXT-FIRST vs the unpruned traversal (ISSUE 9).
+
+    The acceptance rows: on the planted impact-bimodal hot-pair corpus
+    (``benchmarks.serve_bench.make_textprune_corpus``) the pruned
+    ``text_first`` path must cut ``n_probes`` and ``bytes_postings`` ≥ 2×
+    at recall@10 ≥ 0.99 vs the unpruned path run at a covering candidate
+    budget (``max_candidates ≥ df``), with text blocks actually skipped.
+    """
+    from dataclasses import replace
+
+    from repro.core import GeoSearchEngine, QueryBudgets
+    from repro.core.ranking import topk_recall_np
+    from repro.corpus import pad_trace_batch
+
+    from benchmarks.serve_bench import make_textprune_corpus, textprune_trace
+
+    n_docs = 3072 if quick else 8192
+    docs, rects, amps, n_terms, hot = make_textprune_corpus(n_docs)
+    budgets = QueryBudgets(
+        max_candidates=n_docs, max_tiles=256, k_sweeps=8,
+        sweep_budget=max(n_docs // 8, 256), top_k=10,
+    )
+    eng_un = GeoSearchEngine.build(
+        docs, rects, amps, n_terms, grid=32, budgets=budgets
+    )
+    # pruned twin shares the built index but walks the driver list with the
+    # fused probe→score→select kernel at a small θ-buffer budget; `prune`
+    # and `max_candidates` are static budgets, so a fresh engine instance
+    # gets its own compiled-fn cache
+    eng_pr = GeoSearchEngine(
+        index=eng_un.index,
+        budgets=replace(eng_un.budgets, max_candidates=1024, prune=True),
+        weights=eng_un.weights,
+    )
+    B = 64
+    trace = pad_trace_batch(textprune_trace(hot, B))
+    dt_u, un = _time(lambda: eng_un.query(trace, "text_first"))
+    dt_p, pr = _time(lambda: eng_pr.query(trace, "text_first"))
+    dt_f, prf = _time(lambda: eng_pr.query(trace, "text_first", fused=True))
+    fused_same = bool((np.asarray(prf.ids) == np.asarray(pr.ids)).all())
+    rec_vs_un = topk_recall_np(un.ids, pr.ids)
+
+    def mean(r, key):
+        return float(np.asarray(r.stats[key], np.float64).mean())
+
+    probes_x = mean(un, "n_probes") / max(mean(pr, "n_probes"), 1)
+    bytes_x = mean(un, "bytes_postings") / max(mean(pr, "bytes_postings"), 1)
+    _row(
+        "core_textprune_unpruned", dt_u / B * 1e6,
+        f"n_probes={mean(un, 'n_probes'):.0f};"
+        f"bytes_postings={mean(un, 'bytes_postings'):.0f};"
+        f"blocks_skipped={mean(un, 'text_blocks_skipped'):.1f};"
+        f"n_docs={n_docs}",
+    )
+    _row(
+        "core_textprune_pruned", dt_p / B * 1e6,
+        f"n_probes={mean(pr, 'n_probes'):.0f};"
+        f"bytes_postings={mean(pr, 'bytes_postings'):.0f};"
+        f"blocks_skipped={mean(pr, 'text_blocks_skipped'):.1f};"
+        f"blocks_total={mean(pr, 'text_blocks_total'):.1f};"
+        f"probes_saved={mean(pr, 'probes_saved'):.0f};"
+        f"ids_match_ref_path={int(fused_same)};"
+        f"interpret_mode={int(jax.default_backend() != 'tpu')}",
+    )
+    meets = int(probes_x >= 2.0 and bytes_x >= 2.0 and rec_vs_un >= 0.99)
+    _row(
+        "core_textprune_gain", 0.0,
+        f"recall_vs_unpruned={rec_vs_un:.3f};n_probes_x={probes_x:.2f};"
+        f"bytes_postings_x={bytes_x:.2f};meets_2x={meets}",
     )
 
 
@@ -704,6 +786,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     bench_table1(args.quick)
     bench_block_prune(args.quick)
+    bench_text_prune(args.quick)
     bench_compress(args.quick)
     bench_planner(args.quick)
     bench_k_sensitivity(args.quick)

@@ -22,6 +22,13 @@ but for the serving layer (``repro.serving``):
                           the ``_io`` row reports the streamed
                           postings+spatial byte ratio vs the uncompressed
                           engine (gated ≥ 2× in ``compare_baseline``).
+* ``serve_algo_textprune`` — the block-max pruned TEXT-FIRST engine
+                          (fused probe→score→select kernel) on a planted
+                          impact-bimodal hot-pair trace; the
+                          ``serve_text_prune_io`` row reports probe and
+                          postings-byte ratios plus recall@10 vs the
+                          unpruned covering-budget twin (gated ≥ 2× at
+                          recall ≥ 0.99 in ``compare_baseline``).
 * ``serve_algo_auto``   — the cost-based per-query planner (``--algo
                           auto``) on the bimodal mixture trace: plan-
                           homogeneous buckets, one compile per plan×shape;
@@ -68,6 +75,55 @@ from repro.serving import (
 )
 
 ROWS: dict[str, dict] = {}  # name -> parsed row (for --json / baseline compare)
+
+
+def make_textprune_corpus(n_docs: int, n_short: int = 1024, seed: int = 9):
+    """Zipf corpus with a planted impact-bimodal hot term pair (ISSUE 9).
+
+    Two extra terms appear in EVERY document, so their docID-ordered
+    posting lists span the whole corpus: the first ``n_short`` docs repeat
+    them 16× inside short (len-64) documents (high impact), the rest
+    mention them once inside long (len-130) documents (low impact).  The
+    driver list's first posting blocks therefore hold exactly the
+    high-impact docs, so a block-max pruned traversal fills its θ buffer
+    from the first tile and deterministically skips every later block,
+    while an unpruned traversal needs ``max_candidates ≥ df = n_docs`` to
+    return the same top-k.  Footprints are identical and pagerank constant,
+    so text strictly decides the ranking and recall vs the unpruned twin
+    is exact.  Also used by ``benchmarks.run`` for the core rows.
+    """
+    assert n_docs > n_short
+    n_terms_base = 400
+    base = make_corpus(n_docs, n_terms_base, seed=seed)
+    hot = np.array([n_terms_base, n_terms_base + 1], dtype=np.int32)
+    rng = np.random.default_rng(seed + 1)
+    doc_terms = []
+    for d, terms in enumerate(base.doc_terms):
+        terms = np.asarray(terms, dtype=np.int32)[:32]
+        if d < n_short:
+            doc_terms.append(np.concatenate([terms, np.repeat(hot, 16)]))
+        else:
+            fill = rng.integers(0, n_terms_base, size=96).astype(np.int32)
+            doc_terms.append(np.concatenate([terms, hot, fill]))
+    rects = np.tile(
+        np.array([[[0.05, 0.05, 0.95, 0.95]]], np.float32), (n_docs, 1, 1)
+    )
+    amps = np.ones((n_docs, 1), np.float32)
+    return doc_terms, rects, amps, n_terms_base + 2, hot
+
+
+def textprune_trace(hot: np.ndarray, n_queries: int) -> list:
+    """Hot-pair conjunction queries for :func:`make_textprune_corpus`."""
+    from repro.corpus import TraceQuery
+
+    return [
+        TraceQuery(
+            terms=hot.copy(),
+            rects=np.array([[0.2, 0.2, 0.8, 0.8]], np.float32),
+            amps=np.ones((1,), np.float32),
+        )
+        for _ in range(n_queries)
+    ]
 
 
 def _row(name: str, us: float, derived: str = "") -> None:
@@ -232,6 +288,56 @@ def main() -> None:
         "serve_compress_int8_io", 0.0,
         f"bytes_compressed={bytes_c:.0f};bytes_uncompressed={bytes_u:.0f};"
         f"bytes_x={bytes_u / max(bytes_c, 1e-9):.2f}",
+    )
+
+    # block-max pruned TEXT-FIRST behind the same stack (ISSUE 9): the
+    # planted impact-bimodal hot pair means the fused probe kernel fills θ
+    # from the driver's first tile and skips every later block, while the
+    # unpruned twin needs max_candidates >= df for the same answers.  No
+    # cache, so every query streams postings; the `_io` row is gated in
+    # compare_baseline (probe and postings-byte ratios must stay >= 2× at
+    # recall@10 >= 0.99).
+    from repro.core.ranking import topk_recall_np
+
+    tp_docs, tp_rects, tp_amps, tp_nt, tp_hot = make_textprune_corpus(
+        3072 if smoke else 8192
+    )
+    tp_trace = textprune_trace(tp_hot, n_q // 4)
+    eng_tp_un = GeoSearchEngine.build(
+        tp_docs, tp_rects, tp_amps, tp_nt, grid=32,
+        budgets=_replace(budgets, max_candidates=len(tp_docs)),
+    )
+    eng_tp_pr = GeoSearchEngine(
+        index=eng_tp_un.index,
+        budgets=_replace(budgets, prune=True),
+        weights=eng_tp_un.weights,
+    )
+    rep_tp_un = GeoServer(
+        SingleDeviceExecutor(eng_tp_un, "text_first"),
+        cache=None, batcher=batcher("fixed"),
+    ).run_trace(tp_trace, collect_results=True)
+    rep_tp_pr = GeoServer(
+        SingleDeviceExecutor(eng_tp_pr, "text_first", fused=True),
+        cache=None, batcher=batcher("fixed"),
+    ).run_trace(tp_trace, collect_results=True)
+    rec_tp = topk_recall_np(
+        np.stack([r.ids for r in rep_tp_un.results]),
+        np.stack([r.ids for r in rep_tp_pr.results]),
+    )
+    un_probes = rep_tp_un.stats.get("n_probes", 0.0)
+    pr_probes = rep_tp_pr.stats.get("n_probes", 0.0)
+    un_bytes = rep_tp_un.stats.get("bytes_postings", 0.0)
+    pr_bytes = rep_tp_pr.stats.get("bytes_postings", 0.0)
+    report_row("serve_algo_textprune", rep_tp_pr)
+    _row(
+        "serve_text_prune_io", 0.0,
+        f"n_probes_unpruned={un_probes:.0f};n_probes_pruned={pr_probes:.0f};"
+        f"probes_x={un_probes / max(pr_probes, 1e-9):.2f};"
+        f"bytes_unpruned={un_bytes:.0f};bytes_pruned={pr_bytes:.0f};"
+        f"bytes_x={un_bytes / max(pr_bytes, 1e-9):.2f};"
+        f"recall_vs_unpruned={rec_tp:.3f};"
+        f"blocks_skipped={rep_tp_pr.stats.get('text_blocks_skipped', 0.0):.0f};"
+        f"blocks_total={rep_tp_pr.stats.get('text_blocks_total', 0.0):.0f}",
     )
 
     # open-loop arrival sweep: deadline (max_wait_ms) trades padding +

@@ -9,9 +9,9 @@ cd "$(dirname "$0")/.."
 if command -v ruff >/dev/null 2>&1; then
   echo "== ruff lint =="
   ruff check .
-  echo "== ruff format check (serving + core + kernels + launch + corpus + obs) =="
+  echo "== ruff format check (src + tests + benchmarks) =="
   ruff format --check src/repro/serving src/repro/core src/repro/kernels \
-    src/repro/launch src/repro/corpus src/repro/obs benchmarks/compare_baseline.py
+    src/repro/launch src/repro/corpus src/repro/obs tests benchmarks
 else
   echo "== ruff not installed; skipping lint (CI runs it) =="
 fi

@@ -185,7 +185,29 @@ def text_first(
     budgets: QueryBudgets,
     weights: ranking.RankWeights = ranking.RankWeights(),
     geo_scorer=_default_doc_scorer,
+    fused: bool = False,  # Pallas fused probe+score+select (kernels/text_probe)
 ) -> TopKResult:
+    """TEXT-FIRST: drive the intersection with the shortest posting list,
+    probe the other terms, fetch footprints for the survivors.
+
+    ``budgets.prune`` switches the driver traversal to the block-max
+    pruned probe → score → select pipeline (the text-side twin of the
+    pruned K-SWEEP): each 128-posting driver block's upper bound
+    ``w_text · blk_max_impact + rest_ub`` (rest = other terms' max
+    impacts + geo + pagerank bounds) is tested against a running partial
+    top-``max_candidates`` threshold θ, and blocks that cannot beat it
+    are skipped before their bytes stream.  ``fused=True`` runs it as one
+    Pallas kernel (``kernels/text_probe``) with per-block DMA elision;
+    otherwise the bit-matching pure-jnp oracle is used.  The unpruned
+    path is kept bit-identical as the correctness reference, with
+    ``bytes_postings`` counting only the blocks actually streamed and
+    ``text_blocks_skipped`` / ``text_blocks_total`` / ``probes_saved``
+    reporting the pruning yield.
+    """
+    if budgets.prune:
+        return _text_first_pruned(
+            text, spatial, pagerank, query, budgets, weights, geo_scorer, fused
+        )
     R = spatial.doc_rects.shape[1]
 
     def one(terms, q_rects, q_amps):
@@ -220,9 +242,186 @@ def text_first(
             "fetch_runs": fetch_runs,
             "seeks": fetch_runs + n_terms_real,  # + one seek per posting list
             "n_probes": n_c * jnp.maximum(n_terms_real - 1, 0),
+            # unpruned baseline: the full max_candidates driver window
+            # streams, nothing is skipped (pruned-path counterparts)
+            "text_blocks_total": jnp.full(
+                (),
+                -(-budgets.max_candidates // tidx.POSTING_BLOCK),
+                jnp.int32,
+            ),
+            "text_blocks_skipped": jnp.int32(0),
+            "probes_saved": jnp.int32(0),
             "bytes_seq": jnp.full((), budgets.max_candidates * pb, jnp.float32),
             "bytes_random": n_c * jnp.float32(R * db)
             + n_c * jnp.maximum(n_terms_real - 1, 0) * 32,
+        }
+        return ids, vals, stats
+
+    ids, vals, stats = jax.vmap(one)(query.terms, query.rects, query.amps)
+    return TopKResult(ids, vals, stats)
+
+
+def _text_first_pruned(
+    text: tidx.TextIndex,
+    spatial: sidx.SpatialIndex,
+    pagerank: jax.Array,
+    query: QueryBatch,
+    budgets: QueryBudgets,
+    weights: ranking.RankWeights,
+    geo_scorer,
+    fused: bool,
+) -> TopKResult:
+    """Block-max pruned TEXT-FIRST (see ``text_first``'s docstring).
+
+    Walks the *whole* driver posting list in 128-posting blocks (not just
+    the first ``max_candidates`` postings), skipping blocks whose
+    optimistic bound cannot beat the running top-C threshold, then selects
+    the top-``max_candidates`` streamed postings by optimistic score —
+    so hot-term queries both move fewer bytes and keep better candidates
+    than the unpruned head-of-list truncation.
+    """
+    from repro.kernels.text_probe.ops import impact_planes, window_size
+
+    if fused:
+        from repro.kernels.text_probe.ops import text_probe_pruned as _pr
+    else:
+        from repro.kernels.text_probe.ref import text_probe_pruned_ref as _pr
+
+    R = spatial.doc_rects.shape[1]
+    NB = text.blk_pos.shape[0]
+    P = text.n_postings
+    mtb = text.max_term_blocks
+    n_win = window_size(mtb)
+    Cs = min(budgets.max_candidates, n_win * tidx.POSTING_BLOCK)
+    # query-independent inputs, hoisted out of the per-query vmap: the
+    # block-major impact plane and the geo/pagerank remainder bounds.
+    # geo: combine_scores adds w_geo·g/max(qm, ε) with g ≤ qm·Σ_r amp_r
+    # (area(r ∩ q_s) ≤ area(q_s)), so the normalized term is ≤ w_geo·Σ amps.
+    plane = impact_planes(text.impacts, text.blk_pos, text.blk_len)
+    amp_sum_max = jnp.max(
+        jnp.sum(spatial.doc_amps.astype(jnp.float32), axis=-1), initial=0.0
+    )
+    const_ub = weights.w_geo * amp_sum_max + weights.w_pr * jnp.max(
+        pagerank.astype(jnp.float32), initial=0.0
+    )
+    w_text = jnp.float32(weights.w_text)
+
+    def one(terms, q_rects, q_amps):
+        d = terms.shape[0]
+        safe_terms = jnp.maximum(terms, 0)
+        tlens = text.offsets[safe_terms + 1] - text.offsets[safe_terms]
+        tlens = jnp.where(terms >= 0, tlens, jnp.int32(2**31 - 1))
+        driver = jnp.argmin(tlens).astype(jnp.int32)
+        t0 = safe_terms[driver]
+        any_real = terms[0] >= 0
+        # per-term max impact from the block metadata: bounds what the
+        # non-driver terms can add to any candidate's text score
+        tb0 = text.blk_term_off[safe_terms]
+        tnb = text.blk_term_off[safe_terms + 1] - tb0
+        wi = jnp.arange(n_win, dtype=jnp.int32)
+        bidx = jnp.clip(tb0[:, None] + wi[None, :], 0, NB - 1)
+        tmax = jnp.max(
+            jnp.where(
+                wi[None, :] < tnb[:, None], text.blk_max_impact[bidx], 0.0
+            ),
+            axis=1,
+        )
+        others = (terms >= 0) & (jnp.arange(d, dtype=jnp.int32) != driver)
+        rest_ub = w_text * jnp.sum(jnp.where(others, tmax, 0.0)) + const_ub
+        b0 = text.blk_term_off[t0]
+        nb = jnp.where(any_real, text.blk_term_off[t0 + 1] - b0, 0)
+        # select floor: prune_eps × the best possible optimistic score —
+        # candidates below it are dropped by the select stage, so the θ
+        # buffer may be seeded with it (skipping provably unselectable
+        # blocks even before C candidates have streamed)
+        floor = jnp.maximum(
+            jnp.float32(budgets.prune_eps) * (w_text * tmax[driver] + rest_ub),
+            0.0,
+        )
+        opt, valid, streamed, blocks_scored, blocks_active = _pr(
+            plane,
+            text.blk_max_impact,
+            text.blk_len,
+            b0,
+            nb,
+            w_text,
+            rest_ub,
+            floor,
+            max_candidates=budgets.max_candidates,
+            max_term_blocks=mtb,
+        )
+        # select: partial top-C cut by optimistic score over the streamed
+        # survivors (the pruned twin of the unpruned head-of-list cap)
+        kept = valid & streamed
+        val, sel = jax.lax.top_k(jnp.where(kept, opt, -1.0), Cs)
+        ok_c = kept[sel] & (val > floor)
+        # translate selected lattice positions → doc ids + driver impacts;
+        # only the selected candidates' blocks are decoded
+        w_sel = sel // tidx.POSTING_BLOCK
+        lane = sel % tidx.POSTING_BLOCK
+        gb = jnp.clip(b0 + w_sel, 0, NB - 1)
+        apos = jnp.clip(text.blk_pos[gb] + lane, 0, max(P - 1, 0))
+        if text.is_compressed:
+            dec = tidx.decode_posting_blocks(text, gb)  # [Cs, 128]
+            cand = jnp.take_along_axis(dec, lane[:, None], axis=1)[:, 0]
+        else:
+            cand = text.postings[apos]
+        cand = jnp.where(ok_c, cand, jnp.int32(2**31 - 1))
+        imp_d = jnp.where(ok_c, text.impacts[apos].astype(jnp.float32), 0.0)
+
+        def probe_one(i, carry):
+            valid_c, score = carry
+            t = terms[i]
+            is_real = (t >= 0) & (i != driver)
+            member, imp = tidx.probe_term(text, jnp.maximum(t, 0), cand)
+            valid_c = valid_c & (member | ~is_real)
+            score = score + jnp.where(is_real, imp, 0.0)
+            return valid_c, score
+
+        valid_c, tscore = jax.lax.fori_loop(0, d, probe_one, (ok_c, imp_d))
+        cand = jnp.where(valid_c, cand, jnp.int32(2**31 - 1))
+        tscore = jnp.where(valid_c, tscore, 0.0)
+        g = _geo_score_docs(spatial, cand, valid_c, q_rects, q_amps, geo_scorer)
+        qm = fp.query_mass(q_rects, q_amps)
+        score = ranking.combine_scores(
+            weights, tscore, g, pagerank[jnp.where(valid_c, cand, 0)], qm
+        )
+        score = jnp.where(valid_c, score, -jnp.inf)
+        ids, vals = ranking.top_k(score, cand, budgets.top_k)
+        n_sel = jnp.sum(ok_c.astype(jnp.int32))  # candidates probed
+        n_c = jnp.sum(valid_c.astype(jnp.int32))  # intersection survivors
+        streamed_valid = jnp.sum((valid & streamed).astype(jnp.int32))
+        n_terms_real = jnp.sum((terms >= 0).astype(jnp.int32))
+        probes_per = jnp.maximum(n_terms_real - 1, 0)
+        cand_sorted = jnp.sort(jnp.where(valid_c, cand, jnp.int32(2**31 - 1)))
+        gap = cand_sorted[1:] - cand_sorted[:-1]
+        new_run = (gap > 64) & (cand_sorted[1:] != jnp.int32(2**31 - 1))
+        fetch_runs = jnp.sum(new_run.astype(jnp.int32)) + (n_c > 0).astype(
+            jnp.int32
+        )
+        # stored (possibly compressed) record sizes — static per index
+        pb = text.posting_bytes
+        db = spatial.doc_bytes
+        stats = {
+            "candidates": n_c,
+            "bytes_spatial": n_c * jnp.float32(R * db),
+            # ONLY the streamed driver blocks count (skipped blocks move
+            # zero bytes), plus the selected candidates' random reads
+            "bytes_postings": streamed_valid * jnp.float32(pb)
+            + n_sel * jnp.float32(pb),
+            "fetch_runs": fetch_runs,
+            "seeks": fetch_runs + n_terms_real,
+            "n_probes": n_c * probes_per,
+            "text_blocks_total": blocks_active,
+            "text_blocks_skipped": blocks_active - blocks_scored,
+            # probes avoided by the select stage vs. probing every
+            # streamed driver posting
+            "probes_saved": jnp.maximum(streamed_valid - n_sel, 0)
+            * probes_per,
+            "bytes_seq": streamed_valid * jnp.float32(pb),
+            "bytes_random": n_c * jnp.float32(R * db)
+            + n_c * probes_per * 32
+            + n_sel * jnp.float32(pb),
         }
         return ids, vals, stats
 
@@ -455,8 +654,17 @@ def k_sweep(
         docs_s, last = _sorted_dedupe(docs_c, ok_c)
         dvalid = last
         docs_u = jnp.where(dvalid, docs_s, 0)
-        # (5) filter through the inverted index
-        match, tscore = tidx.text_score_of_docs(text, terms, docs_u)
+        # (5) filter through the inverted index.  Under pruning the
+        # counted variant reports the probes a short-circuiting evaluator
+        # issues (earlier terms' misses spare later terms' probes) —
+        # same match/score math, outputs bit-identical.
+        if budgets.prune:
+            match, tscore, text_probes = tidx.text_score_of_docs_counted(
+                text, terms, docs_u, dvalid
+            )
+        else:
+            match, tscore = tidx.text_score_of_docs(text, terms, docs_u)
+            text_probes = None
         keep = dvalid & match
         # (6) final geo score from each survivor's own footprint slots —
         # the same doc-major scorer as geo_first/oracle, summed in the
@@ -503,7 +711,10 @@ def k_sweep(
             * jnp.ceil(jnp.log2(jnp.maximum(text.n_postings, 2)))
             * jnp.float32(pb),
             "seeks": n_sweeps + n_terms_real,
-            "n_probes": n_uniq * n_terms_real,
+            # honest short-circuit count when the pruned text filter ran
+            "n_probes": (
+                text_probes if text_probes is not None else n_uniq * n_terms_real
+            ),
             "bytes_seq": streamed_tp * jnp.float32(tpb),
             "bytes_random": n_uniq * n_terms_real * 32,
         }

@@ -309,9 +309,11 @@ class ShardedGeoIndex:
     post_packed: jax.Array  # u32[S, W]
     blk_first: jax.Array  # i32[S, NBp]
     blk_bits: jax.Array  # i32[S, NBp]
-    blk_len: jax.Array  # i32[S, NBp]
     blk_word_off: jax.Array  # i32[S, NBp]
-    blk_pos: jax.Array  # i32[S, NBp]
+    # logical 128-posting block framing (both layouts; see text_index.py)
+    blk_len: jax.Array  # i32[S, NBt]
+    blk_pos: jax.Array  # i32[S, NBt]
+    blk_max_impact: jax.Array  # f32[S, NBt] post-quantization block maxima
     blk_term_off: jax.Array  # i32[S, M+1]
     # spatial index (stored dtypes: f16/int8/i16 under compressed modes)
     tp_rects: jax.Array  # f32[S, T, 4]
@@ -336,6 +338,8 @@ class ShardedGeoIndex:
     n_terms: int = field(metadata=dict(static=True))
     block_size: int = field(default=128, metadata=dict(static=True))
     coverage_grid: int = field(default=COVERAGE_GRID, metadata=dict(static=True))
+    # max posting blocks of any term on any shard (pruned-text window bound)
+    max_term_blocks: int = field(default=1, metadata=dict(static=True))
 
     @property
     def n_shards(self) -> int:
@@ -405,7 +409,8 @@ def shard_corpus_np(
     P_max = max(s[0].impacts.shape[0] for s in shards)
     Pp_max = max(s[0].postings.shape[0] for s in shards)  # 0 when compressed
     W_max = max(s[0].post_packed.shape[0] for s in shards)
-    NBp_max = max(s[0].blk_first.shape[0] for s in shards)
+    NBp_max = max(s[0].blk_first.shape[0] for s in shards)  # 0 uncompressed
+    NBt_max = max(s[0].blk_len.shape[0] for s in shards)  # logical framing
     T_max = max(s[1].tp_rects.shape[0] for s in shards)
     SB_max = max(s[1].tp_amp_scale.shape[0] for s in shards)
     N_max = max(len(s[3]) for s in shards)
@@ -431,11 +436,17 @@ def shard_corpus_np(
     )
     stacked["blk_first"] = np.stack([padded(s[0].blk_first, NBp_max, 0) for s in shards])
     stacked["blk_bits"] = np.stack([padded(s[0].blk_bits, NBp_max, 1) for s in shards])
-    stacked["blk_len"] = np.stack([padded(s[0].blk_len, NBp_max, 0) for s in shards])
     stacked["blk_word_off"] = np.stack(
         [padded(s[0].blk_word_off, NBp_max, 0) for s in shards]
     )
-    stacked["blk_pos"] = np.stack([padded(s[0].blk_pos, NBp_max, 0) for s in shards])
+    # logical framing columns exist in both layouts; padded blocks are
+    # empty (len 0) with a zero impact bound, so they can never be probed
+    # or beat a pruning threshold
+    stacked["blk_len"] = np.stack([padded(s[0].blk_len, NBt_max, 0) for s in shards])
+    stacked["blk_pos"] = np.stack([padded(s[0].blk_pos, NBt_max, 0) for s in shards])
+    stacked["blk_max_impact"] = np.stack(
+        [padded(s[0].blk_max_impact, NBt_max, 0.0) for s in shards]
+    )
     stacked["blk_term_off"] = np.stack(
         [np.asarray(s[0].blk_term_off) for s in shards]
     )
@@ -488,9 +499,10 @@ def shard_corpus_np(
         post_packed=jnp.asarray(stacked["post_packed"]),
         blk_first=jnp.asarray(stacked["blk_first"]),
         blk_bits=jnp.asarray(stacked["blk_bits"]),
-        blk_len=jnp.asarray(stacked["blk_len"]),
         blk_word_off=jnp.asarray(stacked["blk_word_off"]),
+        blk_len=jnp.asarray(stacked["blk_len"]),
         blk_pos=jnp.asarray(stacked["blk_pos"]),
+        blk_max_impact=jnp.asarray(stacked["blk_max_impact"]),
         blk_term_off=jnp.asarray(stacked["blk_term_off"]),
         tp_rects=jnp.asarray(stacked["tp_rects"]),
         tp_amps=jnp.asarray(stacked["tp_amps"]),
@@ -512,6 +524,7 @@ def shard_corpus_np(
         n_terms=n_terms,
         block_size=shards[0][1].block_size,
         coverage_grid=COVERAGE_GRID,
+        max_term_blocks=max(s[0].max_term_blocks for s in shards),
     )
 
 
@@ -521,20 +534,22 @@ def sharded_index_specs(
     n_terms: int,
     block_size: int = 128,
     coverage_grid: int = COVERAGE_GRID,
+    max_term_blocks: int = 1,
 ) -> ShardedGeoIndex:
     """PartitionSpecs for every field (leading dim over the doc axes)."""
     lead = P(doc_axes)
     return ShardedGeoIndex(
         postings=lead, impacts=lead, offsets=lead,
         post_packed=lead, blk_first=lead, blk_bits=lead, blk_len=lead,
-        blk_word_off=lead, blk_pos=lead, blk_term_off=lead,
+        blk_word_off=lead, blk_pos=lead, blk_max_impact=lead,
+        blk_term_off=lead,
         tp_rects=lead, tp_amps=lead, tp_doc_ids=lead, tp_amp_scale=lead,
         tile_starts=lead, tile_ends=lead,
         doc_rects=lead, doc_amps=lead, doc_mbr=lead, doc_mass=lead,
         blk_mbr=lead, blk_max_amp=lead, blk_max_mass=lead,
         pagerank=lead, doc_offset=lead, coverage_sat=lead,
         grid=grid, n_terms=n_terms, block_size=block_size,
-        coverage_grid=coverage_grid,
+        coverage_grid=coverage_grid, max_term_blocks=max_term_blocks,
     )
 
 
@@ -551,6 +566,7 @@ def make_serve_fn(
     block_size: int = 128,
     with_stats: bool = False,
     with_routing: bool = False,
+    max_term_blocks: int = 1,
 ):
     """Build the jit'd distributed serve step for a mesh.
 
@@ -579,11 +595,13 @@ def make_serve_fn(
     if with_routing and not with_stats:
         raise ValueError("with_routing requires with_stats=True")
     fn = alg.get_algorithm(algorithm)
-    if algorithm == "k_sweep" and fused:
+    if algorithm in ("k_sweep", "text_first") and fused:
         from functools import partial as _partial
 
         fn = _partial(fn, fused=True)
-    idx_specs = sharded_index_specs(doc_axes, grid, n_terms, block_size)
+    idx_specs = sharded_index_specs(
+        doc_axes, grid, n_terms, block_size, max_term_blocks=max_term_blocks
+    )
     q_spec = alg.QueryBatch(
         terms=P(query_axis), rects=P(query_axis), amps=P(query_axis)
     )
@@ -602,8 +620,10 @@ def make_serve_fn(
             post_packed=idx.post_packed[0], blk_first=idx.blk_first[0],
             blk_bits=idx.blk_bits[0], blk_len=idx.blk_len[0],
             blk_word_off=idx.blk_word_off[0], blk_pos=idx.blk_pos[0],
+            blk_max_impact=idx.blk_max_impact[0],
             blk_term_off=idx.blk_term_off[0],
             n_docs=idx.doc_rects.shape[1], n_terms=idx.n_terms,
+            max_term_blocks=idx.max_term_blocks,
         )
         spatial = SpatialIndex(
             tp_rects=idx.tp_rects[0], tp_amps=idx.tp_amps[0],

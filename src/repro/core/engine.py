@@ -75,18 +75,18 @@ class GeoSearchEngine:
         from repro.core.spatial_index import normalize_compress
 
         mode = normalize_compress(compress)
+        # one compression entry point: the builder quantizes impacts (f16
+        # under any compressed mode) BEFORE computing blk_max_impact, so
+        # pruning bounds are taken over the stored values
         text = build_text_index_np(
             doc_terms, n_terms, n_bitmap_terms, idf=idf,
             compress=(mode != "none"),
+            impact_dtype=(np.float16 if mode != "none" else None),
         )
         spatial = build_spatial_index_np(
             doc_rects, doc_amps, grid, m_intervals, compress=mode,
             block_size=block_size,
         )
-        if mode != "none":
-            from repro.core.text_index import quantize_impacts
-
-            text = quantize_impacts(text, jnp.float16)
         n = len(doc_terms)
         if pagerank is None:
             pagerank = np.full((n,), 0.1, dtype=np.float32)
@@ -151,9 +151,12 @@ class GeoSearchEngine:
         """
         fused = bool(kw.pop("fused", False))
         plans = self.planner.plan_rows(batch)
-        if fused:  # route K-SWEEP rows through the fused Pallas kernel
+        if fused:  # route rows with a fused Pallas pipeline through it
             plans = [
-                replace(p, fused=True) if p.algorithm == "k_sweep" else p
+                replace(p, fused=True)
+                if p.algorithm == "k_sweep"
+                or (p.algorithm == "text_first" and p.budgets.prune)
+                else p
                 for p in plans
             ]
         uniq: list[QueryPlan] = []

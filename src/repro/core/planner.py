@@ -89,15 +89,15 @@ class QueryPlan:
     def label(self) -> str:
         """Human-readable plan name for reports (``k_sweep+prune+fused``)."""
         out = self.algorithm
-        if self.algorithm == "k_sweep" and self.budgets.prune:
+        if self.algorithm in ("k_sweep", "text_first") and self.budgets.prune:
             out += "+prune"
-        if self.algorithm == "k_sweep" and self.fused:
+        if self.algorithm in ("k_sweep", "text_first") and self.fused:
             out += "+fused"
         return out
 
     def engine_kw(self) -> dict:
         """Extra keyword args the engine forwards to the algorithm fn."""
-        if self.algorithm == "k_sweep" and self.fused:
+        if self.algorithm in ("k_sweep", "text_first") and self.fused:
             return {"fused": True}
         return {}
 
@@ -400,11 +400,23 @@ class CostModel:
         tp_per_doc = max(self.n_toeprints / max(self.n_docs, 1), 1.0)
         if plan.algorithm == "text_first":
             n_c = min(f.df_min, mc)  # driver-list bound on survivors
-            est = {
-                "n_probes": n_c * max(d - 1, 0),
-                "bytes_postings": n_c * pb + mc * pb,
-                "bytes_spatial": n_c * R * db,
-            }
+            if bud.prune:
+                # block-max pruned traversal: the whole driver list streams
+                # at worst (block skips are modeled as zero, a safe upper
+                # bound like K-SWEEP's — calibration learns the skip rate),
+                # then the select stage caps candidates at mc, so hot-term
+                # queries probe/fetch far fewer docs than they stream
+                est = {
+                    "n_probes": n_c * max(d - 1, 0),
+                    "bytes_postings": f.df_min * pb + n_c * pb,
+                    "bytes_spatial": n_c * R * db,
+                }
+            else:
+                est = {
+                    "n_probes": n_c * max(d - 1, 0),
+                    "bytes_postings": n_c * pb + mc * pb,
+                    "bytes_spatial": n_c * R * db,
+                }
         elif plan.algorithm == "geo_first":
             n_cand = min(f.tp_est, mc)
             n_uniq = n_cand / tp_per_doc
@@ -453,6 +465,11 @@ class CostModel:
         """
         bud = plan.budgets
         if plan.algorithm == "text_first":
+            if bud.prune:
+                # pruned traversal sees the WHOLE driver list and keeps the
+                # best-bound ``max_candidates`` — a score-aware cut, not a
+                # blind head-of-list truncation, so no coverage charge
+                return 0.0
             return max(0.0, f.df_min - bud.max_candidates)
         if plan.algorithm == "geo_first":
             return max(0.0, f.tp_est - bud.max_candidates)
@@ -519,7 +536,8 @@ class Planner:
         budgets: alg.QueryBudgets, fused: bool = False
     ) -> tuple[QueryPlan, ...]:
         return (
-            QueryPlan("text_first", budgets),
+            # pruned TEXT-FIRST has a fused Pallas pipeline too
+            QueryPlan("text_first", budgets, fused=fused and budgets.prune),
             QueryPlan("geo_first", budgets),
             QueryPlan("k_sweep", budgets, fused=fused),
         )

@@ -33,6 +33,11 @@ never straddle a term slice:
   position of the block's first posting (impacts stay CSR-addressed).
 * ``blk_term_off i32[M+1]`` — CSR of blocks per term.
 
+The *logical* 128-posting framing (``blk_term_off``/``blk_pos``/``blk_len``)
+plus the block-max metadata ``blk_max_impact f32[NB]`` are built in BOTH
+layouts: they are the skip unit of the WAND-style pruned traversal
+(kernels/text_probe), which is independent of how doc ids are stored.
+
 Query-time probes binary-search the block heads (``blk_first``) and decode
 exactly one block per key (shift/mask + prefix sum) — the compressed words
 are the only doc-id bytes the query path touches, so the modeled
@@ -62,16 +67,25 @@ class TextIndex:
     offsets: jax.Array  # i32[M+1]
     bitmaps: jax.Array  # u32[n_bitmap_terms, n_words]  (may be [0, n_words])
     bitmap_term_ids: jax.Array  # i32[n_bitmap_terms] term id per bitmap row
-    # --- delta + bit-packed doc-id store (all [0] when uncompressed) ---
+    # --- delta + bit-packed doc-id store ([0] when uncompressed) ---
     post_packed: jax.Array  # u32[W] packed deltas, word-aligned blocks
     blk_first: jax.Array  # i32[NB] first doc id per block
     blk_bits: jax.Array  # i32[NB] delta bit width per block
+    # --- logical 128-posting block addressing (BOTH layouts: blocks never
+    # straddle terms, so compressed and uncompressed share one framing) ---
     blk_len: jax.Array  # i32[NB] valid postings per block (≤ POSTING_BLOCK)
-    blk_word_off: jax.Array  # i32[NB] start word of each block in post_packed
+    blk_word_off: jax.Array  # i32[NB] start word in post_packed ([0] raw)
     blk_pos: jax.Array  # i32[NB] absolute CSR position of block's 1st posting
     blk_term_off: jax.Array  # i32[M+1] CSR of blocks per term
+    # block-max impact metadata (both layouts; see block_max_impacts_np):
+    # per-block max of the *stored* impacts, decoded to f32 — computed
+    # post-quantization so WAND-style upper bounds stay safe under f16
+    blk_max_impact: jax.Array  # f32[NB]
     n_docs: int = field(metadata=dict(static=True))
     n_terms: int = field(metadata=dict(static=True))
+    # max blocks owned by any single term (static: sizes the pruned-probe
+    # kernel's per-query block lattice)
+    max_term_blocks: int = field(default=1, metadata=dict(static=True))
 
     @property
     def n_postings(self) -> int:
@@ -101,17 +115,70 @@ class TextIndex:
         return 4.0 + imp
 
 
-def _empty_pack(n_terms: int) -> dict[str, np.ndarray]:
-    """Zero-width compressed columns (the uncompressed layout's sentinel)."""
+def logical_posting_blocks_np(
+    offsets: np.ndarray,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """128-posting block framing of a CSR posting store.
+
+    Returns ``(blk_term_off i32[M+1], blk_pos i32[NB], blk_len i32[NB])``
+    with blocks that never straddle a term slice — the exact framing
+    :func:`pack_postings_np` uses, so compressed and uncompressed indexes
+    address the same logical blocks (the pruned traversal's skip unit).
+    An all-empty store yields one degenerate empty block (matching the
+    packed layout's sentinel) so block columns are never zero-width.
+    """
+    M = len(offsets) - 1
+    counts = np.diff(offsets.astype(np.int64))
+    nb = (counts + POSTING_BLOCK - 1) // POSTING_BLOCK
+    blk_term_off = np.zeros((M + 1,), np.int32)
+    blk_term_off[1:] = np.cumsum(nb).astype(np.int32)
+    NB = int(blk_term_off[-1])
+    if NB == 0:
+        return blk_term_off, np.zeros((1,), np.int32), np.zeros((1,), np.int32)
+    term_of_blk = np.repeat(np.arange(M), nb)
+    k = np.arange(NB, dtype=np.int64) - np.repeat(blk_term_off[:-1], nb)
+    poss = offsets[term_of_blk].astype(np.int64) + k * POSTING_BLOCK
+    lens = np.minimum(counts[term_of_blk] - k * POSTING_BLOCK, POSTING_BLOCK)
+    return blk_term_off, poss.astype(np.int32), lens.astype(np.int32)
+
+
+def block_max_impacts_np(
+    impacts: np.ndarray, blk_pos: np.ndarray, blk_len: np.ndarray
+) -> np.ndarray:
+    """Per-block max of the *stored* impacts, decoded to f32 — f32[NB].
+
+    Computed from the stored (possibly f16-quantized) values so the bound
+    stays an upper bound after lossy compression: round-to-nearest can
+    round a value *up*, so a max taken pre-quantization would be unsafe.
+    Empty blocks get 0.0 (vacuous — no posting ever reads their bound).
+    """
+    NB = blk_pos.shape[0]
+    out = np.zeros((NB,), np.float32)
+    P = int(np.sum(blk_len))
+    if P > 0:
+        # blocks tile the CSR contiguously and in order in both layouts,
+        # so posting p belongs to the block repeated at position p
+        bid = np.repeat(np.arange(NB), blk_len)
+        np.maximum.at(out, bid, np.asarray(impacts[:P]).astype(np.float32))
+    return out
+
+
+def _empty_pack(offsets: np.ndarray) -> dict[str, np.ndarray]:
+    """Uncompressed layout: zero-width packed columns + logical blocks."""
     z = np.zeros((0,), np.int32)
+    blk_term_off, blk_pos, blk_len = logical_posting_blocks_np(offsets)
     return dict(
         post_packed=np.zeros((0,), np.uint32), blk_first=z, blk_bits=z,
-        blk_len=z, blk_word_off=z, blk_pos=z,
-        blk_term_off=np.zeros((n_terms + 1,), np.int32),
+        blk_len=blk_len, blk_word_off=z, blk_pos=blk_pos,
+        blk_term_off=blk_term_off,
     )
 
 
-def pack_postings_np(postings: np.ndarray, offsets: np.ndarray) -> dict[str, np.ndarray]:
+def pack_postings_np(
+    postings: np.ndarray,
+    offsets: np.ndarray,
+    impacts: np.ndarray | None = None,
+) -> dict[str, np.ndarray]:
     """Delta + bit-pack each term's posting slice into 128-posting blocks.
 
     Blocks never straddle terms; within a block the first element stores
@@ -123,6 +190,12 @@ def pack_postings_np(postings: np.ndarray, offsets: np.ndarray) -> dict[str, np.
     posting lists actually compress.  Decoded slots past ``blk_len`` are
     therefore garbage (they read into the next block's words) and every
     consumer masks them before trusting membership.
+
+    When ``impacts`` is given (the *stored*, possibly quantized, values)
+    the dict additionally carries ``blk_max_impact`` — the per-block score
+    upper bound driving the pruned traversal (see
+    :func:`block_max_impacts_np` for why it must be computed
+    post-quantization).
     """
     M = len(offsets) - 1
     blk_term_off = np.zeros((M + 1,), np.int32)
@@ -171,7 +244,7 @@ def pack_postings_np(postings: np.ndarray, offsets: np.ndarray) -> dict[str, np.
     if not firsts:  # empty posting store: one degenerate empty block
         chunks.append(np.zeros((4,), np.uint32))
         firsts, bits_l, lens, poss, word_off = [0], [1], [0], [0], [0]
-    return dict(
+    out = dict(
         post_packed=np.concatenate(chunks),
         blk_first=np.asarray(firsts, np.int32),
         blk_bits=np.asarray(bits_l, np.int32),
@@ -180,6 +253,11 @@ def pack_postings_np(postings: np.ndarray, offsets: np.ndarray) -> dict[str, np.
         blk_pos=np.asarray(poss, np.int32),
         blk_term_off=blk_term_off,
     )
+    if impacts is not None:
+        out["blk_max_impact"] = block_max_impacts_np(
+            impacts, out["blk_pos"], out["blk_len"]
+        )
+    return out
 
 
 def build_text_index_np(
@@ -188,6 +266,7 @@ def build_text_index_np(
     n_bitmap_terms: int = 0,
     idf: np.ndarray | None = None,
     compress: bool = False,
+    impact_dtype: np.dtype | str | None = None,
 ) -> TextIndex:
     """Build from per-doc term-id arrays (with repetitions = frequencies).
 
@@ -197,6 +276,11 @@ def build_text_index_np(
     posting's impact is rounded to f32 exactly once from statistics that
     do not depend on the partitioning, making per-doc scores bit-identical
     across shard layouts (the routing equivalence gate relies on this).
+
+    ``impact_dtype`` lossy-compresses the impact column at build time (the
+    one compression entry point — ``normalize_compress`` modes pass f16
+    here), so ``blk_max_impact`` is computed from the values that are
+    actually stored and the pruning bound survives quantization.
     """
     n_docs = len(doc_terms)
     # term frequencies per doc, collection document frequencies
@@ -246,9 +330,17 @@ def build_text_index_np(
         top_terms = np.zeros((0,), dtype=np.int32)
         bitmaps = np.zeros((0, n_words), dtype=np.uint32)
 
-    pack = pack_postings_np(postings, offsets) if compress else _empty_pack(n_terms)
+    if impact_dtype is not None:
+        impacts = impacts.astype(impact_dtype)
     if compress:
+        pack = pack_postings_np(postings, offsets, impacts=impacts)
         postings = np.zeros((0,), np.int32)  # packed words are the store
+    else:
+        pack = _empty_pack(offsets)
+        pack["blk_max_impact"] = block_max_impacts_np(
+            impacts, pack["blk_pos"], pack["blk_len"]
+        )
+    term_blocks = np.diff(pack["blk_term_off"])
     return TextIndex(
         postings=jnp.asarray(postings),
         impacts=jnp.asarray(impacts),
@@ -258,12 +350,29 @@ def build_text_index_np(
         **{k: jnp.asarray(v) for k, v in pack.items()},
         n_docs=n_docs,
         n_terms=n_terms,
+        max_term_blocks=int(max(term_blocks.max(initial=0), 1)),
+    )
+
+
+def _with_impacts(index: TextIndex, impacts: jax.Array) -> TextIndex:
+    """Replace the impact column and refresh ``blk_max_impact`` to match."""
+    bm = block_max_impacts_np(
+        np.asarray(impacts), np.asarray(index.blk_pos), np.asarray(index.blk_len)
+    )
+    return dataclasses.replace(
+        index, impacts=impacts, blk_max_impact=jnp.asarray(bm)
     )
 
 
 def quantize_impacts(index: TextIndex, dtype=jnp.float16) -> TextIndex:
-    """Lossy-compress impact scores (paper: compressed index formats)."""
-    return dataclasses.replace(index, impacts=index.impacts.astype(dtype))
+    """Deprecated shim: quantize impacts post-build.
+
+    Prefer ``build_text_index_np(..., impact_dtype=...)`` — the one
+    compression entry point (engine builders route every ``compress`` mode
+    through it).  Kept for callers holding an already-built index; it
+    refreshes ``blk_max_impact`` so pruning bounds stay safe.
+    """
+    return _with_impacts(index, index.impacts.astype(dtype))
 
 
 def global_idf_np(doc_terms: list[np.ndarray], n_terms: int) -> np.ndarray:
@@ -288,7 +397,7 @@ def rescale_impacts_to_global(index: TextIndex, idf_global: np.ndarray) -> TextI
     idf_local = np.log(1.0 + index.n_docs / np.maximum(counts.astype(np.float64), 1.0))
     ratio = np.where(counts > 0, idf_global / idf_local, 1.0)
     impacts = np.asarray(index.impacts) * np.repeat(ratio, counts).astype(np.float32)
-    return dataclasses.replace(index, impacts=jnp.asarray(impacts))
+    return _with_impacts(index, jnp.asarray(impacts))
 
 
 # ---------------------------------------------------------------------------
@@ -502,3 +611,40 @@ def text_score_of_docs(
     score0 = jnp.zeros(doc_ids.shape, dtype=jnp.float32)
     match, score = jax.lax.fori_loop(0, d, probe_one, (match0, score0))
     return match, score
+
+
+def text_score_of_docs_counted(
+    index: TextIndex,
+    terms: jax.Array,  # i32[d] padded with -1
+    doc_ids: jax.Array,  # i32[C]
+    valid: jax.Array,  # bool[C] — candidates that are live before term 0
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """``text_score_of_docs`` plus an honest probe counter.
+
+    Same match/score math (bit-identical outputs), but additionally counts
+    the probes a term-at-a-time short-circuiting evaluator would issue:
+    before each term only the candidates still matching every earlier term
+    are probed, so the count shrinks as terms eliminate candidates.
+    Returns (match bool[C], score f32[C], probes i32 scalar).
+    """
+    d = terms.shape[0]
+
+    def probe_one(i, carry):
+        match, score, probes = carry
+        t = terms[i]
+        is_real = t >= 0
+        live = match & valid
+        probes = probes + jnp.where(
+            is_real, jnp.sum(live.astype(jnp.int32)), 0
+        )
+        member, imp = probe_term(index, jnp.maximum(t, 0), doc_ids)
+        match = match & (member | ~is_real)
+        score = score + jnp.where(is_real, imp, 0.0)
+        return match, score, probes
+
+    match0 = jnp.ones(doc_ids.shape, dtype=bool)
+    score0 = jnp.zeros(doc_ids.shape, dtype=jnp.float32)
+    match, score, probes = jax.lax.fori_loop(
+        0, d, probe_one, (match0, score0, jnp.int32(0))
+    )
+    return match, score, probes

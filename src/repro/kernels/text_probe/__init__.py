@@ -1,0 +1,4 @@
+from repro.kernels.text_probe.ops import (  # noqa: F401
+    impact_planes,
+    text_probe_pruned,
+)

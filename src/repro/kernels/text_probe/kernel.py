@@ -1,0 +1,168 @@
+"""Pallas TPU kernel: block-max pruned text probe (probe → score → select).
+
+The text-side twin of ``kernels/sweep_score``'s pruned sweep.  TEXT-FIRST
+walks the driver term's posting list; unpruned it streams every posting.
+This kernel walks the driver's 128-posting *blocks* and tests each block's
+precomputed score upper bound
+
+    ub[b] = w_text · blk_max_impact[b] + rest_ub
+
+(``rest_ub`` = the query-constant bound on everything a posting's final
+score can gain beyond its own impact: the other query terms' max impacts,
+the geo contribution, and pagerank) against a running threshold θ.  Blocks
+that cannot beat θ are *skipped before their bytes move*: the impact plane
+stays in ``ANY`` memory space and the kernel issues one manual
+``make_async_copy`` per surviving block under ``pl.when``, so a skipped
+block truly streams zero bytes — the same DMA-elision discipline as the
+spatial pruned sweep.
+
+θ approximates the partial top-``max_candidates`` optimistic score: a
+persistent VMEM scratch buffer of ``cb·TILE ≥ max_candidates`` slots, each
+holding the max over a disjoint cyclically-assigned subset of the streamed
+candidates (seeded with the select floor), with θ = min(buffer).  min over
+disjoint-subset maxima never exceeds the true C-th largest optimistic
+score, so a skipped block cannot contain a candidate the top-C select
+stage would keep (above the floor).
+
+One planar row = one posting block (LANES = 128 postings), so the DMA
+unit is a single ``[1, 128]`` row and no tile alignment of the driver's
+first block is needed.  Grid = (n_win // BLOCK_ROWS,) walked sequentially;
+under ``vmap`` the batch axis becomes the outer grid dimension and the
+``j == 0`` re-init gives every query a fresh θ.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128  # postings per block = one planar row
+BLOCK_ROWS = 8  # blocks fetched per grid step
+TILE = BLOCK_ROWS * LANES
+
+
+def _pruned_kernel(
+    start_ref,  # scalar prefetch: i32[1] driver's first block (plane row)
+    ub_ref,  # SMEM f32[n_win] per-window-block optimistic upper bounds
+    len_ref,  # SMEM i32[n_win] valid postings per window block
+    wb_ref,  # SMEM f32[2]: (w_text, rest_ub) — the optimistic-score affine
+    floor_ref,  # SMEM f32[1]: select-stage score floor
+    imp_hbm,  # ANY-space impact plane [rows, LANES] (stored dtype)
+    out_ref,  # VMEM f32[BLOCK_ROWS, LANES] tile of optimistic scores
+    scored_ref,  # SMEM i32[1, BLOCK_ROWS] per-block scored flags
+    buf_ref,  # VMEM scratch f32[cb*BLOCK_ROWS, LANES]: partial top-C heap
+    imp_s,  # VMEM scratch [BLOCK_ROWS, LANES] stored dtype: fetched rows
+    copy_sem,  # DMA semaphore for the per-block copies
+    *,
+    cb: int,
+):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        # seed every slot with the selection floor: θ never drops below it,
+        # so blocks whose bound cannot clear the floor are skipped — their
+        # candidates would be dropped by the select stage regardless
+        buf_ref[...] = jnp.full_like(buf_ref, floor_ref[0])
+
+    theta = jnp.min(buf_ref[...])
+    rows = jax.lax.broadcasted_iota(jnp.int32, (BLOCK_ROWS, LANES), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (BLOCK_ROWS, LANES), 1)
+    mask = jnp.zeros((BLOCK_ROWS, LANES), dtype=bool)
+    any_scored = False
+    for b in range(BLOCK_ROWS):  # static unroll over the tile's blocks
+        w = j * BLOCK_ROWS + b
+        sb = ub_ref[w] > theta  # -inf beyond the driver's blocks
+        scored_ref[0, b] = sb.astype(jnp.int32)
+        mask = mask | (sb & (rows == b) & (cols < len_ref[w]))
+        any_scored = sb | any_scored
+
+        # a θ-skipped block issues NO copy: zero bytes move for it.  Its
+        # scratch row keeps stale data, which is safe — everything below
+        # selects through ``mask``, so garbage cannot propagate.
+        @pl.when(sb)
+        def _fetch(b=b, w=w):
+            cp = pltpu.make_async_copy(
+                imp_hbm.at[pl.ds(start_ref[0] + w, 1), :],
+                imp_s.at[pl.ds(b, 1), :],
+                copy_sem,
+            )
+            cp.start()
+            cp.wait()
+
+    @pl.when(any_scored)
+    def _score():
+        # in-register decode of the stored dtype, then the optimistic
+        # affine: every posting's best possible final score
+        opt = imp_s[...].astype(jnp.float32) * wb_ref[0] + wb_ref[1]
+        sc = jnp.where(mask, opt, 0.0)
+        out_ref[...] = sc
+        # cyclic top-C approximation: fold this tile into its buffer slice
+        r0 = (j % cb) * BLOCK_ROWS
+        sl = buf_ref[pl.ds(r0, BLOCK_ROWS), :]
+        buf_ref[pl.ds(r0, BLOCK_ROWS), :] = jnp.maximum(sl, sc)
+
+    @pl.when(jnp.logical_not(any_scored))
+    def _skip():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_win", "max_candidates", "interpret")
+)
+def text_probe_pruned_planar(
+    start: jax.Array,  # i32[1] driver's first block (plane row)
+    ub: jax.Array,  # f32[n_win] per-window-block bounds (-inf padded)
+    lens: jax.Array,  # i32[n_win] valid postings per window block
+    wb: jax.Array,  # f32[2]: (w_text, rest_ub)
+    floor: jax.Array,  # f32[1] select-stage score floor
+    imp_plane: jax.Array,  # [rows, LANES] impact plane in its stored dtype
+    n_win: int,  # window blocks; multiple of BLOCK_ROWS
+    max_candidates: int,  # C of the partial top-C threshold buffer
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Pruned driver-block walk: (opt f32[n_tiles, BLOCK_ROWS, LANES],
+    scored i32[n_tiles, BLOCK_ROWS] per-block flags)."""
+    assert n_win % BLOCK_ROWS == 0
+    n_tiles = n_win // BLOCK_ROWS
+    # C rounded up to whole tiles: a larger buffer only lowers θ (safer)
+    cb = max(1, -(-max_candidates // TILE))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((n_win,), lambda j, s: (0,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((n_win,), lambda j, s: (0,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((2,), lambda j, s: (0,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1,), lambda j, s: (0,), memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.ANY),  # impact plane
+        ],
+        out_specs=[
+            pl.BlockSpec((1, BLOCK_ROWS, LANES), lambda j, s: (j, 0, 0)),
+            pl.BlockSpec(
+                (1, BLOCK_ROWS), lambda j, s: (j, 0), memory_space=pltpu.SMEM
+            ),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((cb * BLOCK_ROWS, LANES), jnp.float32),
+            pltpu.VMEM((BLOCK_ROWS, LANES), imp_plane.dtype),
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    kernel = functools.partial(_pruned_kernel, cb=cb)
+    opt, scored = pl.pallas_call(
+        lambda s_ref, ub_r, ln_r, wb_r, fl_r, plane, o, f, buf, sc_, sem: kernel(
+            s_ref, ub_r, ln_r, wb_r, fl_r, plane, o.at[0], f, buf, sc_, sem
+        ),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_tiles, BLOCK_ROWS, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((n_tiles, BLOCK_ROWS), jnp.int32),
+        ],
+        interpret=interpret,
+    )(start, ub, lens, wb, floor, imp_plane)
+    return opt, scored

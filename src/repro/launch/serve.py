@@ -28,11 +28,14 @@ Replay discipline (``--arrival``):
   re-executing (reported in the ``coalesced`` counter).
 
 ``--prune`` (old spelling ``--algo-prune`` still accepted) switches the
-K-SWEEP engine to the block-max pruned sweep→score→select pipeline
-(``--fused`` runs it as the Pallas kernel; interpret mode on CPU): whole
-sweep blocks whose precomputed upper bound cannot beat the running top-C
-threshold are skipped before scoring, which shrinks the inverted-index
-probes and the streamed spatial bytes in the reported counters.
+engines to their block-max pruned pipelines (``--fused`` runs them as
+Pallas kernels; interpret mode on CPU).  K-SWEEP: whole sweep blocks
+whose precomputed upper bound cannot beat the running top-C threshold are
+skipped before scoring.  TEXT-FIRST: the driver term's 128-posting blocks
+are tested against a partial top-``max_candidates`` impact threshold and
+skipped before their bytes stream (probe→score→select in
+``kernels/text_probe``).  Both shrink the inverted-index probes and the
+streamed bytes in the reported counters.
 
 Sharded serving (``--shards N``) is configured by two grouped flags:
 ``--partition {hash,morton,region}`` picks the document
@@ -262,8 +265,9 @@ def main() -> None:
     )
     ap.add_argument(
         "--prune", action="store_true",
-        help="block-max pruned K-SWEEP: skip sweep blocks whose "
-        "upper bound cannot beat the running top-C threshold "
+        help="block-max pruning: K-SWEEP skips sweep blocks and "
+        "TEXT-FIRST skips driver posting blocks whose upper bound "
+        "cannot beat the running top-C threshold "
         "(fewer index probes + bytes streamed)",
     )
     # deprecated spelling, kept for one release; hidden from --help
@@ -273,9 +277,9 @@ def main() -> None:
     )
     ap.add_argument(
         "--fused", action="store_true",
-        help="run K-SWEEP through the fused Pallas sweep kernel "
-        "(with --prune: in-kernel sweep→score→select; "
-        "interpret mode on CPU)",
+        help="run K-SWEEP through the fused Pallas sweep kernel and, "
+        "with --prune, TEXT-FIRST through the fused text-probe kernel "
+        "(in-kernel probe→score→select; interpret mode on CPU)",
     )
     ap.add_argument(
         "--compress", default="none", choices=["none", "f16", "int8"],
@@ -376,7 +380,11 @@ def main() -> None:
             )
         kw = (
             {"fused": True}
-            if args.fused and args.algorithm in ("k_sweep", "auto")
+            if args.fused
+            and (
+                args.algorithm in ("k_sweep", "auto")
+                or (args.algorithm == "text_first" and args.prune)
+            )
             else {}
         )
         rec = eng.recall_at_k(probe, args.algorithm, **kw)

@@ -481,6 +481,9 @@ def build_geoweb_cell(spec: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
     # compressed posting store widths: one block per POSTING_BLOCK postings,
     # delta width bounded by the per-shard doc-id range
     NBp = max(-(-Pp // POSTING_BLOCK), 1) if mode != "none" else 0
+    # logical 128-posting framing exists in BOTH layouts (block-max text
+    # pruning metadata rides on it)
+    NBt = max(-(-Pp // POSTING_BLOCK), 1)
     d_bits = max(int(N - 1).bit_length(), 1) if N > 1 else 1
     Wp = NBp * (POSTING_BLOCK * d_bits // 32)
     Pp_store = 0 if mode != "none" else Pp  # raw doc-id column
@@ -496,9 +499,10 @@ def build_geoweb_cell(spec: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
         post_packed=sh((S, Wp), jnp.uint32, lead + (None,)),
         blk_first=sh((S, NBp), jnp.int32, lead + (None,)),
         blk_bits=sh((S, NBp), jnp.int32, lead + (None,)),
-        blk_len=sh((S, NBp), jnp.int32, lead + (None,)),
         blk_word_off=sh((S, NBp), jnp.int32, lead + (None,)),
-        blk_pos=sh((S, NBp), jnp.int32, lead + (None,)),
+        blk_len=sh((S, NBt), jnp.int32, lead + (None,)),
+        blk_pos=sh((S, NBt), jnp.int32, lead + (None,)),
+        blk_max_impact=sh((S, NBt), jnp.float32, lead + (None,)),
         blk_term_off=sh((S, M + 1), jnp.int32, lead + (None,)),
         tp_rects=sh((S, Tt, 4), ft, lead + (None, None)),
         tp_amps=sh((S, Tt), at, lead + (None,)),
@@ -524,6 +528,8 @@ def build_geoweb_cell(spec: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
         n_terms=M,
         block_size=block_size,
         coverage_grid=COVERAGE_GRID,
+        # synthetic hot-term bound: a term may touch every shard doc
+        max_term_blocks=max(-(-N // POSTING_BLOCK), 1),
     )
     B, d, Qr = cfg.query_batch, cfg.d_terms, cfg.q_rects
     query = alg.QueryBatch(
@@ -534,6 +540,7 @@ def build_geoweb_cell(spec: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
     serve = make_serve_fn(
         mesh, cfg.budgets, cfg.weights, doc_axes=doc_axes, query_axis=q_axis,
         algorithm=shape.params["algorithm"], grid=cfg.grid, n_terms=M,
+        max_term_blocks=idx.max_term_blocks,
     )
     # geo-score flops: ~14 flops per (toeprint, query-rect) pair per query
     kb = cfg.budgets

@@ -473,6 +473,7 @@ class MeshExecutor:
             algorithm=serve_algorithm, grid=grid, n_terms=n_terms,
             fused=fused, block_size=sharded.block_size,
             with_stats=True, with_routing=routing == "footprint",
+            max_term_blocks=sharded.max_term_blocks,
         )
         return MeshExecutor(
             mesh, serve, sharded, budgets.top_k,
@@ -519,6 +520,7 @@ class MeshExecutor:
             n_terms=self._index.n_terms, fused=plan.fused,
             block_size=self._index.block_size, with_stats=True,
             with_routing=self.routing == "footprint",
+            max_term_blocks=self._index.max_term_blocks,
         )
         self._serve_fns[plan] = serve
         return serve

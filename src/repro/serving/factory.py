@@ -86,7 +86,14 @@ def make_executor(
             from repro.kernels.geo_score.ops import geo_score_toeprints
 
             kw["tp_scorer"] = geo_score_toeprints
-    if fused and algorithm in ("k_sweep", "auto") and kind != "mesh":
+    if (
+        fused
+        and kind != "mesh"
+        and (
+            algorithm in ("k_sweep", "auto")
+            or (algorithm == "text_first" and budgets.prune)
+        )
+    ):
         kw["fused"] = True
 
     if kind == "single":

@@ -116,13 +116,21 @@ def test_ksweep_stats_account_io(engine_and_trace):
 
 
 def test_quantized_impacts_similar_ranking(engine_and_trace):
-    """Lossy-compressed (f16) impacts preserve top-k (paper future work)."""
+    """Lossy-compressed (f16) impacts preserve top-k (paper future work).
+
+    Quantization goes through the one compression entry point
+    (``build_text_index_np(..., impact_dtype=...)``, what ``compress``
+    modes use) instead of the deprecated post-build shim.
+    """
     from repro.core.engine import GeoIndex
-    from repro.core.text_index import quantize_impacts
+    from repro.core.text_index import build_text_index_np
 
     eng, trace = engine_and_trace
+    corpus = make_corpus(n_docs=500, n_terms=120, seed=3)  # fixture's corpus
     q_index = GeoIndex(
-        text=quantize_impacts(eng.index.text, jnp.float16),
+        text=build_text_index_np(
+            corpus.doc_terms, corpus.n_terms, impact_dtype=jnp.float16
+        ),
         spatial=eng.index.spatial,
         pagerank=eng.index.pagerank,
     )

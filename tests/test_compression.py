@@ -130,6 +130,46 @@ def test_quantize_amps_single_element():
     assert q[0] == -127 and np.isclose(q[0] * scale[0], -0.75)
 
 
+@pytest.mark.parametrize("mode", ["none", "f16", "int8"])
+def test_text_block_max_impact_bounds_decoded_values(mode):
+    """``blk_max_impact`` is computed from the *stored* (post-quantization)
+    impact values, so it upper-bounds — exactly equals the max of — every
+    decoded impact in its block across compress modes, including all-zero
+    blocks (idf-zero term), empty terms, and ragged tail blocks."""
+    rng = np.random.default_rng(44)
+    n_terms = 60
+    docs = [
+        rng.integers(0, 50, size=int(rng.integers(1, 40))).astype(np.int32)
+        for _ in range(300)
+    ]
+    docs.append(np.full((200,), 3, np.int32))  # hot ragged multi-block term
+    idf = np.log(1.0 + len(docs) / np.maximum(
+        np.bincount(np.concatenate(docs), minlength=n_terms), 1.0
+    ))
+    idf[7] = 0.0  # term 7's blocks store all-zero impacts
+    idx = build_text_index_np(
+        docs, n_terms, idf=idf,
+        compress=(mode != "none"),
+        impact_dtype=(np.float16 if mode != "none" else None),
+    )
+    blk_pos = np.asarray(idx.blk_pos)
+    blk_len = np.asarray(idx.blk_len)
+    imp = np.asarray(idx.impacts).astype(np.float32)
+    bmi = np.asarray(idx.blk_max_impact)
+    bto = np.asarray(idx.blk_term_off)
+    assert (bto[1:] >= bto[:-1]).all()  # empty terms → zero blocks
+    assert blk_pos.shape[0] > 0
+    saw_ragged = saw_zero = False
+    for b in range(blk_pos.shape[0]):
+        vals = imp[blk_pos[b] : blk_pos[b] + blk_len[b]]
+        want = float(vals.max()) if len(vals) else 0.0
+        assert bmi[b] == np.float32(want), b
+        assert (vals <= bmi[b]).all(), b
+        saw_ragged |= 0 < blk_len[b] < POSTING_BLOCK
+        saw_zero |= len(vals) > 0 and want == 0.0
+    assert saw_ragged and saw_zero
+
+
 def test_spatial_block_metadata_from_decoded_values():
     """int8 build computes block-max bounds from the dequantized amps (not
     the raw f32 inputs), so pruning bounds stay safe under quantization."""

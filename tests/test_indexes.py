@@ -56,11 +56,27 @@ class TestTextIndex:
         assert not bool(valid.any())
 
     def test_impacts_quantize(self):
+        # one compression entry point: quantization happens inside the
+        # builder (pre-metadata, so blk_max_impact bounds the stored values)
+        docs = small_index()[1]
+        q = T.build_text_index_np(
+            docs, n_terms=4, n_bitmap_terms=2, impact_dtype=jnp.float16
+        )
         idx, _ = small_index()
-        q = T.quantize_impacts(idx, jnp.float16)
         assert q.impacts.dtype == jnp.float16
         np.testing.assert_allclose(
             np.asarray(q.impacts, np.float32), np.asarray(idx.impacts), rtol=2e-3
+        )
+        # deprecated shim still works and keeps the pruning bounds fresh:
+        # quantize-after-build lands on the same stored values AND the same
+        # refreshed block-max metadata as the builder's impact_dtype path
+        s = T.quantize_impacts(idx, jnp.float16)
+        assert s.impacts.dtype == jnp.float16
+        np.testing.assert_array_equal(
+            np.asarray(s.impacts), np.asarray(q.impacts)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(s.blk_max_impact), np.asarray(q.blk_max_impact)
         )
 
     def test_bitmaps_match_postings(self):
