@@ -33,6 +33,15 @@ performance regressed beyond noise:
   ``textprune_factor`` (default 2.0) or recall@10 drops below 0.99.
   Absolute on the fresh run: the skip construction is deterministic and
   does not drift with machine noise.
+* **Natural-trace layout** — the ``serve_text_prune_natural`` row carries
+  ``probes_x`` / ``bytes_x`` (unpruned-covering ÷ impact-pruned) and
+  ``layout_bytes_x`` (docID-pruned ÷ impact-pruned streamed posting
+  bytes) on a *plain* zipf trace with no planted bimodality, plus
+  ``recall_vs_docid`` and ``blocks_skipped``; fail when any ratio drops
+  below ``natural_factor`` (default 1.5), when ``recall_vs_docid`` drops
+  below 0.99 (pruned selection is order-invariant, so the layouts must
+  agree bit-for-bit), or when no blocks were skipped.  Absolute on the
+  fresh run, like the other layout gates.
 * **Telemetry overhead** — the ``serve_telemetry_overhead`` row carries
   ``qps_ratio`` (telemetry-on QPS / telemetry-off QPS, best-of-3 each);
   fail when the *current* run's ratio drops below ``overhead_floor``
@@ -81,6 +90,7 @@ def compare(
     fanout_factor: float = 0.5,
     bytes_factor: float = 0.5,
     textprune_factor: float = 2.0,
+    natural_factor: float = 1.5,
 ) -> tuple[list[str], list[str]]:
     """Return ``(failures, warnings)`` — the gate passes iff no failures.
 
@@ -160,6 +170,28 @@ def compare(
                 f"serve_text_prune_io: recall_vs_unpruned {rec:.3f} < 0.99 "
                 f"(pruned text_first diverged from the unpruned top-k)"
             )
+    nat = current.get("serve_text_prune_natural")
+    if nat is not None:
+        for key in ("probes_x", "bytes_x", "layout_bytes_x"):
+            val = nat.get(key)
+            if val is not None and val < natural_factor:
+                failures.append(
+                    f"serve_text_prune_natural: {key} {val:.2f} < "
+                    f"{natural_factor} (the impact-ordered layout stopped "
+                    f"cutting I/O on the natural trace)"
+                )
+        rec = nat.get("recall_vs_docid")
+        if rec is not None and rec < 0.99:
+            failures.append(
+                f"serve_text_prune_natural: recall_vs_docid {rec:.3f} < 0.99 "
+                f"(impact-pruned text_first diverged from the docID-pruned "
+                f"twin — pruned selection must be order-invariant)"
+            )
+        if not nat.get("blocks_skipped"):
+            failures.append(
+                "serve_text_prune_natural: blocks_skipped = 0 (the monotone "
+                "blk_max_impact tail cut never fired on the natural trace)"
+            )
     ratio = current.get("serve_telemetry_overhead", {}).get("qps_ratio")
     if ratio is not None and ratio < overhead_floor:
         failures.append(
@@ -190,6 +222,10 @@ def main() -> None:
     ap.add_argument("--textprune-factor", type=float, default=2.0,
                     help="min unpruned/pruned probes and postings-bytes "
                          "ratios (block-max text-pruning gate)")
+    ap.add_argument("--natural-factor", type=float, default=1.5,
+                    help="min probes/bytes/layout-bytes ratios on the "
+                         "natural (unplanted) zipf trace (impact-ordered "
+                         "posting-layout gate)")
     args = ap.parse_args()
 
     baseline = load_rows(args.baseline)
@@ -200,6 +236,7 @@ def main() -> None:
         slack_ms=args.slack_ms, min_fail_ms=args.min_fail_ms,
         overhead_floor=args.overhead_floor, fanout_factor=args.fanout_factor,
         bytes_factor=args.bytes_factor, textprune_factor=args.textprune_factor,
+        natural_factor=args.natural_factor,
     )
     for name in sorted(set(baseline) & set(current)):
         b, c = baseline[name], current[name]

@@ -24,6 +24,17 @@ Prints ``name,us_per_call,derived`` CSV rows:
                      text blocks skipped (acceptance: ≥ 2× drop in both
                      ``n_probes`` and ``bytes_postings`` at recall@10
                      ≥ 0.99, the ``meets_2x`` column).
+* ``core_layout_{docid,impact,gain}`` — impact-ordered posting layout
+                     (``layout="impact"``: descending quantized-impact
+                     segments, so ``blk_max_impact`` is monotone per term
+                     and one failed θ bound cuts the whole tail) vs the
+                     docID-ordered layout, both under the pruned fused
+                     TEXT-FIRST walk on a *natural* zipf trace with no
+                     planted bimodality; the ``_gain`` row reports
+                     ``layout_bytes_x`` (docID-pruned ÷ impact-pruned
+                     streamed posting bytes), the probes/bytes ratios vs
+                     the unpruned covering run, and the bit-identity flag
+                     (pruned selection is order-invariant).
 * ``core_compress_{f16,int8,gain}`` — compressed posting (delta +
                      bit-packed) and toe-print (f16 / int8 + per-block
                      scale) stores vs the uncompressed layout on the same
@@ -295,6 +306,96 @@ def bench_text_prune(quick: bool) -> None:
         "core_textprune_gain", 0.0,
         f"recall_vs_unpruned={rec_vs_un:.3f};n_probes_x={probes_x:.2f};"
         f"bytes_postings_x={bytes_x:.2f};meets_2x={meets}",
+    )
+
+
+def bench_layout(quick: bool) -> None:
+    """Impact-ordered vs docID-ordered posting layout on a natural trace.
+
+    The ISSUE 10 acceptance rows: on a *plain* zipf trace (no planted
+    impact bimodality) the pruned TEXT-FIRST walk over the
+    ``layout="impact"`` index must stream fewer posting bytes than the
+    same pruned walk over the docID-ordered index — the monotone
+    ``blk_max_impact`` envelope lets one failed bound cut a term's whole
+    tail — while returning **bit-identical** ids and scores (pruned
+    selection is the global top-``max_candidates`` by optimistic score,
+    which is order-invariant).  The unpruned covering run (docID layout,
+    ``max_candidates = n_docs``) anchors the recall and the overall
+    probes/bytes ratios.
+    """
+    from dataclasses import replace
+
+    from repro.core import GeoSearchEngine, QueryBudgets
+    from repro.core.ranking import topk_recall_np
+    from repro.corpus import make_corpus, make_zipf_trace, pad_trace_batch
+
+    n_docs = 1536 if quick else 4096
+    corpus = make_corpus(n_docs, 200 if quick else 400, seed=0)
+    budgets = QueryBudgets(
+        max_candidates=n_docs, max_tiles=256, k_sweeps=8,
+        sweep_budget=max(n_docs // 8, 256), top_k=10,
+    )
+    B = 48 if quick else 96
+    trace = pad_trace_batch(
+        make_zipf_trace(corpus, n_queries=B, pool_size=48, seed=1, d_terms=2)
+    )
+    mc = 512  # pruned θ-buffer budget; the covering twin uses n_docs
+
+    def build(layout):
+        return GeoSearchEngine.build(
+            corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
+            pagerank=corpus.pagerank, grid=32, budgets=budgets, layout=layout,
+        )
+
+    def mean(r, key):
+        return float(np.asarray(r.stats[key], np.float64).mean())
+
+    eng_cov = build("docid")  # unpruned covering anchor
+    eng_d = GeoSearchEngine(
+        index=eng_cov.index,
+        budgets=replace(budgets, max_candidates=mc, prune=True),
+        weights=eng_cov.weights,
+    )
+    eng_i = build("impact")
+    eng_i = GeoSearchEngine(
+        index=eng_i.index,
+        budgets=replace(budgets, max_candidates=mc, prune=True),
+        weights=eng_i.weights,
+    )
+    dt_c, cov = _time(lambda: eng_cov.query(trace, "text_first"))
+    dt_d, prd = _time(lambda: eng_d.query(trace, "text_first", fused=True))
+    dt_i, pri = _time(lambda: eng_i.query(trace, "text_first", fused=True))
+    identical = bool(
+        (np.asarray(prd.ids) == np.asarray(pri.ids)).all()
+        and (np.asarray(prd.scores) == np.asarray(pri.scores)).all()
+    )
+    rec_cov = topk_recall_np(cov.ids, pri.ids)
+    probes_x = mean(cov, "n_probes") / max(mean(pri, "n_probes"), 1)
+    bytes_x = mean(cov, "bytes_postings") / max(mean(pri, "bytes_postings"), 1)
+    layout_x = mean(prd, "bytes_postings") / max(mean(pri, "bytes_postings"), 1)
+    _row(
+        "core_layout_docid", dt_d / B * 1e6,
+        f"n_probes={mean(prd, 'n_probes'):.0f};"
+        f"bytes_postings={mean(prd, 'bytes_postings'):.0f};"
+        f"blocks_skipped={mean(prd, 'text_blocks_skipped'):.1f};"
+        f"blocks_total={mean(prd, 'text_blocks_total'):.1f};"
+        f"n_docs={n_docs}",
+    )
+    _row(
+        "core_layout_impact", dt_i / B * 1e6,
+        f"n_probes={mean(pri, 'n_probes'):.0f};"
+        f"bytes_postings={mean(pri, 'bytes_postings'):.0f};"
+        f"blocks_skipped={mean(pri, 'text_blocks_skipped'):.1f};"
+        f"blocks_total={mean(pri, 'text_blocks_total'):.1f};"
+        f"posting_bytes_per_entry={eng_i.index.text.posting_bytes:.2f};"
+        f"interpret_mode={int(jax.default_backend() != 'tpu')}",
+    )
+    _row(
+        "core_layout_gain", dt_c / B * 1e6,
+        f"identical_to_docid={int(identical)};"
+        f"recall_vs_covering={rec_cov:.3f};"
+        f"n_probes_x={probes_x:.2f};bytes_postings_x={bytes_x:.2f};"
+        f"layout_bytes_x={layout_x:.2f}",
     )
 
 
@@ -787,6 +888,7 @@ def main() -> None:
     bench_table1(args.quick)
     bench_block_prune(args.quick)
     bench_text_prune(args.quick)
+    bench_layout(args.quick)
     bench_compress(args.quick)
     bench_planner(args.quick)
     bench_k_sensitivity(args.quick)

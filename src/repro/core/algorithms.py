@@ -349,6 +349,10 @@ def _text_first_pruned(
             floor,
             max_candidates=budgets.max_candidates,
             max_term_blocks=mtb,
+            # impact layout: blk_max_impact is a per-term suffix-max
+            # envelope (monotone non-increasing), so the traversal may
+            # early-exit the driver at its first failing bound
+            monotone=text.layout == "impact",
         )
         # select: partial top-C cut by optimistic score over the streamed
         # survivors (the pruned twin of the unpruned head-of-list cap)

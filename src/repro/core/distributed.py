@@ -310,11 +310,16 @@ class ShardedGeoIndex:
     blk_first: jax.Array  # i32[S, NBp]
     blk_bits: jax.Array  # i32[S, NBp]
     blk_word_off: jax.Array  # i32[S, NBp]
+    blk_n_exc: jax.Array  # i32[S, NBp] PForDelta exception words per block
     # logical 128-posting block framing (both layouts; see text_index.py)
     blk_len: jax.Array  # i32[S, NBt]
     blk_pos: jax.Array  # i32[S, NBt]
     blk_max_impact: jax.Array  # f32[S, NBt] post-quantization block maxima
     blk_term_off: jax.Array  # i32[S, M+1]
+    # impact-ordered segment CSR (degenerate under layout="docid")
+    seg_term_off: jax.Array  # i32[S, M+1]
+    seg_pos: jax.Array  # i32[S, NSp]
+    seg_len: jax.Array  # i32[S, NSp]
     # spatial index (stored dtypes: f16/int8/i16 under compressed modes)
     tp_rects: jax.Array  # f32[S, T, 4]
     tp_amps: jax.Array  # f32[S, T]
@@ -340,6 +345,10 @@ class ShardedGeoIndex:
     coverage_grid: int = field(default=COVERAGE_GRID, metadata=dict(static=True))
     # max posting blocks of any term on any shard (pruned-text window bound)
     max_term_blocks: int = field(default=1, metadata=dict(static=True))
+    # posting order of every shard's text index ("docid" | "impact")
+    layout: str = field(default="docid", metadata=dict(static=True))
+    # max impact segments of any term on any shard (segmented probe bound)
+    max_term_segments: int = field(default=1, metadata=dict(static=True))
 
     @property
     def n_shards(self) -> int:
@@ -358,12 +367,15 @@ def shard_corpus_np(
     m_intervals: int = 2,
     block_size: int = 128,
     compress: "bool | str" = False,
+    layout: str = "docid",
 ) -> ShardedGeoIndex:
     """Partition a corpus with ``partitioner`` (default hash round-robin)
     and build one index per shard (host side), including each shard's
     coverage SAT for footprint routing.  ``compress`` takes the same
     ``{none, f16, int8}`` modes as the single-index builders: every shard
-    stores bit-packed postings and quantized toe prints."""
+    stores bit-packed postings and quantized toe prints.  ``layout``
+    selects every shard's posting order (``"docid"`` | ``"impact"``; see
+    :mod:`repro.core.text_index`)."""
     from repro.core.spatial_index import SCALE_BLOCK, normalize_compress
 
     mode = normalize_compress(compress)
@@ -388,7 +400,8 @@ def shard_corpus_np(
         # single-index engine would — built in directly (not rescaled after
         # the fact) so impacts are bit-identical across partitionings
         text = build_text_index_np(
-            terms, n_terms, idf=idf_global, compress=(mode != "none")
+            terms, n_terms, idf=idf_global, compress=(mode != "none"),
+            layout=layout,
         )
         spatial = build_spatial_index_np(
             doc_rects[sel], doc_amps[sel], grid, m_intervals,
@@ -411,6 +424,7 @@ def shard_corpus_np(
     W_max = max(s[0].post_packed.shape[0] for s in shards)
     NBp_max = max(s[0].blk_first.shape[0] for s in shards)  # 0 uncompressed
     NBt_max = max(s[0].blk_len.shape[0] for s in shards)  # logical framing
+    NS_max = max(s[0].seg_pos.shape[0] for s in shards)  # impact segments
     T_max = max(s[1].tp_rects.shape[0] for s in shards)
     SB_max = max(s[1].tp_amp_scale.shape[0] for s in shards)
     N_max = max(len(s[3]) for s in shards)
@@ -439,6 +453,9 @@ def shard_corpus_np(
     stacked["blk_word_off"] = np.stack(
         [padded(s[0].blk_word_off, NBp_max, 0) for s in shards]
     )
+    stacked["blk_n_exc"] = np.stack(
+        [padded(s[0].blk_n_exc, NBp_max, 0) for s in shards]
+    )
     # logical framing columns exist in both layouts; padded blocks are
     # empty (len 0) with a zero impact bound, so they can never be probed
     # or beat a pruning threshold
@@ -450,6 +467,13 @@ def shard_corpus_np(
     stacked["blk_term_off"] = np.stack(
         [np.asarray(s[0].blk_term_off) for s in shards]
     )
+    # impact-segment CSR: padded segments are empty (len 0) and every probe
+    # is bounded by its term's seg_term_off slice, so padding is unreachable
+    stacked["seg_term_off"] = np.stack(
+        [np.asarray(s[0].seg_term_off) for s in shards]
+    )
+    stacked["seg_pos"] = np.stack([padded(s[0].seg_pos, NS_max, 0) for s in shards])
+    stacked["seg_len"] = np.stack([padded(s[0].seg_len, NS_max, 0) for s in shards])
     stacked["tp_rects"] = np.stack(
         [
             padded(s[1].tp_rects, T_max, 0.0) for s in shards
@@ -500,10 +524,14 @@ def shard_corpus_np(
         blk_first=jnp.asarray(stacked["blk_first"]),
         blk_bits=jnp.asarray(stacked["blk_bits"]),
         blk_word_off=jnp.asarray(stacked["blk_word_off"]),
+        blk_n_exc=jnp.asarray(stacked["blk_n_exc"]),
         blk_len=jnp.asarray(stacked["blk_len"]),
         blk_pos=jnp.asarray(stacked["blk_pos"]),
         blk_max_impact=jnp.asarray(stacked["blk_max_impact"]),
         blk_term_off=jnp.asarray(stacked["blk_term_off"]),
+        seg_term_off=jnp.asarray(stacked["seg_term_off"]),
+        seg_pos=jnp.asarray(stacked["seg_pos"]),
+        seg_len=jnp.asarray(stacked["seg_len"]),
         tp_rects=jnp.asarray(stacked["tp_rects"]),
         tp_amps=jnp.asarray(stacked["tp_amps"]),
         tp_doc_ids=jnp.asarray(stacked["tp_doc_ids"]),
@@ -525,6 +553,8 @@ def shard_corpus_np(
         block_size=shards[0][1].block_size,
         coverage_grid=COVERAGE_GRID,
         max_term_blocks=max(s[0].max_term_blocks for s in shards),
+        layout=layout,
+        max_term_segments=max(s[0].max_term_segments for s in shards),
     )
 
 
@@ -535,14 +565,16 @@ def sharded_index_specs(
     block_size: int = 128,
     coverage_grid: int = COVERAGE_GRID,
     max_term_blocks: int = 1,
+    layout: str = "docid",
+    max_term_segments: int = 1,
 ) -> ShardedGeoIndex:
     """PartitionSpecs for every field (leading dim over the doc axes)."""
     lead = P(doc_axes)
     return ShardedGeoIndex(
         postings=lead, impacts=lead, offsets=lead,
         post_packed=lead, blk_first=lead, blk_bits=lead, blk_len=lead,
-        blk_word_off=lead, blk_pos=lead, blk_max_impact=lead,
-        blk_term_off=lead,
+        blk_word_off=lead, blk_n_exc=lead, blk_pos=lead, blk_max_impact=lead,
+        blk_term_off=lead, seg_term_off=lead, seg_pos=lead, seg_len=lead,
         tp_rects=lead, tp_amps=lead, tp_doc_ids=lead, tp_amp_scale=lead,
         tile_starts=lead, tile_ends=lead,
         doc_rects=lead, doc_amps=lead, doc_mbr=lead, doc_mass=lead,
@@ -550,6 +582,7 @@ def sharded_index_specs(
         pagerank=lead, doc_offset=lead, coverage_sat=lead,
         grid=grid, n_terms=n_terms, block_size=block_size,
         coverage_grid=coverage_grid, max_term_blocks=max_term_blocks,
+        layout=layout, max_term_segments=max_term_segments,
     )
 
 
@@ -567,6 +600,8 @@ def make_serve_fn(
     with_stats: bool = False,
     with_routing: bool = False,
     max_term_blocks: int = 1,
+    layout: str = "docid",
+    max_term_segments: int = 1,
 ):
     """Build the jit'd distributed serve step for a mesh.
 
@@ -600,7 +635,8 @@ def make_serve_fn(
 
         fn = _partial(fn, fused=True)
     idx_specs = sharded_index_specs(
-        doc_axes, grid, n_terms, block_size, max_term_blocks=max_term_blocks
+        doc_axes, grid, n_terms, block_size, max_term_blocks=max_term_blocks,
+        layout=layout, max_term_segments=max_term_segments,
     )
     q_spec = alg.QueryBatch(
         terms=P(query_axis), rects=P(query_axis), amps=P(query_axis)
@@ -619,11 +655,16 @@ def make_serve_fn(
             bitmap_term_ids=jnp.zeros((0,), jnp.int32),
             post_packed=idx.post_packed[0], blk_first=idx.blk_first[0],
             blk_bits=idx.blk_bits[0], blk_len=idx.blk_len[0],
-            blk_word_off=idx.blk_word_off[0], blk_pos=idx.blk_pos[0],
+            blk_word_off=idx.blk_word_off[0], blk_n_exc=idx.blk_n_exc[0],
+            blk_pos=idx.blk_pos[0],
             blk_max_impact=idx.blk_max_impact[0],
             blk_term_off=idx.blk_term_off[0],
+            seg_term_off=idx.seg_term_off[0], seg_pos=idx.seg_pos[0],
+            seg_len=idx.seg_len[0],
             n_docs=idx.doc_rects.shape[1], n_terms=idx.n_terms,
             max_term_blocks=idx.max_term_blocks,
+            layout=idx.layout,
+            max_term_segments=idx.max_term_segments,
         )
         spatial = SpatialIndex(
             tp_rects=idx.tp_rects[0], tp_amps=idx.tp_amps[0],

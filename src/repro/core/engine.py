@@ -69,9 +69,12 @@ class GeoSearchEngine:
         compress: "bool | str" = False,
         block_size: int = 128,
         idf: np.ndarray | None = None,
+        layout: str = "docid",
     ) -> "GeoSearchEngine":
         # idf: corpus-global IDF override for shard engines (see
         # build_text_index_np — keeps impacts partition-independent)
+        # layout: posting order — "docid" (reference) or "impact"
+        # (descending-impact segments; see text_index module docstring)
         from repro.core.spatial_index import normalize_compress
 
         mode = normalize_compress(compress)
@@ -82,6 +85,7 @@ class GeoSearchEngine:
             doc_terms, n_terms, n_bitmap_terms, idf=idf,
             compress=(mode != "none"),
             impact_dtype=(np.float16 if mode != "none" else None),
+            layout=layout,
         )
         spatial = build_spatial_index_np(
             doc_rects, doc_amps, grid, m_intervals, compress=mode,

@@ -297,10 +297,16 @@ class CostModel:
         P_tot = max(int(df.sum()), 1)
         imp_b = sharded.impacts.dtype.itemsize
         if sharded.blk_first.shape[1] > 0:  # compressed posting store
-            packed = 4 * sharded.post_packed.size + 16 * sharded.blk_first.size
+            # 20 B/block metadata (first, bits, word_off, len, n_exc) +
+            # 8 B/segment prefixes under the impact layout — in lockstep
+            # with TextIndex.posting_bytes
+            packed = 4 * sharded.post_packed.size + 20 * sharded.blk_first.size
+            if sharded.layout == "impact":
+                packed += 8 * sharded.seg_pos.size
             posting_bytes = packed / P_tot + imp_b
         else:
-            posting_bytes = 4.0 + imp_b
+            seg = 8 * sharded.seg_pos.size if sharded.layout == "impact" else 0
+            posting_bytes = 4.0 + seg / P_tot + imp_b
         scale_b = 4.0 / SCALE_BLOCK if sharded.tp_amp_scale.shape[1] else 0.0
         plane_b = (
             4 * sharded.tp_rects.dtype.itemsize

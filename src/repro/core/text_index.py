@@ -25,23 +25,56 @@ column with a delta + bit-packed store cut into 128-posting blocks that
 never straddle a term slice:
 
 * ``post_packed u32[W]`` — little-endian bit-packed doc-id deltas; each
-  block is word-aligned and uses a fixed per-block width
-  ``blk_bits[b] = max(1, bit_length(max delta))`` (128·bits/32 = 4·bits
-  words per block, exactly).
+  block is word-aligned and stores its deltas at a per-block *base* width
+  ``blk_bits[b]`` (PForDelta framing, below), followed by
+  ``blk_n_exc[b]`` exception words.
 * ``blk_first/blk_bits/blk_len/blk_word_off/blk_pos i32[NB]`` — per-block
-  first doc id, bit width, valid count, start word, and absolute CSR
+  first doc id, base bit width, valid count, start word, and absolute CSR
   position of the block's first posting (impacts stay CSR-addressed).
+* ``blk_n_exc i32[NB]`` — PForDelta exception words per block.
 * ``blk_term_off i32[M+1]`` — CSR of blocks per term.
+
+PForDelta exception framing
+---------------------------
+
+Instead of one bit width per block sized by the *largest* delta (one
+outlier gap inflates all 128 slots), each block picks the base width
+minimizing total words: ``ceil(len·bits/32)`` base words (tail-trimmed)
+plus one patch word per delta that does not fit.  A patch word packs
+``slot | high_bits << 8`` — the slot index (< 128, 8 bits) and the bits
+above the base width (≤ 24, enforced by ``bits ≥ bit_length(max) − 24``).
+Decode extracts the base bits as before, then replays the patch list
+(:func:`decode_posting_blocks`).  In practice the chosen base width covers
+~90% of deltas and the outliers ride in the exception list.
+
+Posting layouts (``build_text_index_np(layout=)``)
+--------------------------------------------------
+
+* ``"docid"`` (default) — postings ascend by doc id within each term
+  slice; ``blk_max_impact`` is the exact per-block max.  This is the
+  bit-identical correctness reference.
+* ``"impact"`` — each term's postings are grouped into descending
+  quantized-impact *segments* (:data:`IMPACT_LEVELS` global geometric
+  levels), docID-ascending *within* a segment so delta + bit-packing
+  still applies; blocks never straddle segments.  The segment CSR
+  (``seg_term_off i32[M+1]``, ``seg_pos/seg_len i32[NS]``) drives the
+  segment-aware membership probes.  ``blk_max_impact`` is the per-term
+  *suffix-max envelope* of the exact block maxima — monotone
+  non-increasing along each term's block run, so the pruned traversal
+  (kernels/text_probe, ``monotone=True``) can early-exit a term the
+  first time a block's bound drops below θ.  Scores are unchanged (same
+  stored impacts, different order): top-k ids and scores match the
+  docID layout exactly.
 
 The *logical* 128-posting framing (``blk_term_off``/``blk_pos``/``blk_len``)
 plus the block-max metadata ``blk_max_impact f32[NB]`` are built in BOTH
-layouts: they are the skip unit of the WAND-style pruned traversal
+storage modes: they are the skip unit of the WAND-style pruned traversal
 (kernels/text_probe), which is independent of how doc ids are stored.
 
 Query-time probes binary-search the block heads (``blk_first``) and decode
-exactly one block per key (shift/mask + prefix sum) — the compressed words
-are the only doc-id bytes the query path touches, so the modeled
-``posting_bytes`` (see the property) is what actually streams.
+exactly one block per key (shift/mask + prefix sum + exception patch) —
+the compressed words are the only doc-id bytes the query path touches, so
+the modeled ``posting_bytes`` (see the property) is what actually streams.
 """
 from __future__ import annotations
 
@@ -55,6 +88,18 @@ import numpy as np
 BLOCK = 128  # docs per bitmap block
 WORDS_PER_BLOCK = BLOCK // 32
 POSTING_BLOCK = 128  # postings per delta/bit-pack compression block
+# PForDelta patch word: slot (8 bits, block slots < 128) | high_bits << 8
+PFOR_SLOT_BITS = 8
+PFOR_HIGH_BITS = 32 - PFOR_SLOT_BITS
+# impact-ordered layout: global geometric quantization into this many
+# descending levels; each level spans a RATIO-wide band of stored impacts.
+# The ratio sets the pruning granularity — a θ cut can only drop whole
+# trailing levels of a term, so levels must be fine enough that one term's
+# impact spread (typically ~4×: the tf and length-norm factors) covers
+# several of them.  1.2 gives ~8 levels across a 4× spread; 32 levels
+# (~340× total dynamic range) covers the cross-term idf spread.
+IMPACT_LEVELS = 32
+IMPACT_LEVEL_RATIO = 1.2
 
 
 @jax.tree_util.register_dataclass
@@ -79,13 +124,28 @@ class TextIndex:
     blk_term_off: jax.Array  # i32[M+1] CSR of blocks per term
     # block-max impact metadata (both layouts; see block_max_impacts_np):
     # per-block max of the *stored* impacts, decoded to f32 — computed
-    # post-quantization so WAND-style upper bounds stay safe under f16
+    # post-quantization so WAND-style upper bounds stay safe under f16;
+    # under layout="impact" this is the per-term suffix-max envelope
+    # (monotone non-increasing along each term's block run)
     blk_max_impact: jax.Array  # f32[NB]
+    # PForDelta exception words per block ([0] when uncompressed)
+    blk_n_exc: jax.Array  # i32[NB]
+    # impact-ordered segment CSR (degenerate under layout="docid": the
+    # probes never read it, so it stays one zero entry)
+    seg_term_off: jax.Array  # i32[M+1] CSR of impact segments per term
+    seg_pos: jax.Array  # i32[NS] absolute CSR position of segment start
+    seg_len: jax.Array  # i32[NS] postings per segment
     n_docs: int = field(metadata=dict(static=True))
     n_terms: int = field(metadata=dict(static=True))
     # max blocks owned by any single term (static: sizes the pruned-probe
     # kernel's per-query block lattice)
     max_term_blocks: int = field(default=1, metadata=dict(static=True))
+    # posting order: "docid" (ascending doc ids per term) or "impact"
+    # (descending quantized-impact segments per term)
+    layout: str = field(default="docid", metadata=dict(static=True))
+    # max segments owned by any single term (static: bounds the
+    # segment-aware probe loop; 1 under layout="docid")
+    max_term_segments: int = field(default=1, metadata=dict(static=True))
 
     @property
     def n_postings(self) -> int:
@@ -101,18 +161,21 @@ class TextIndex:
         """Modeled bytes per posting: doc id (+ block metadata) + impact.
 
         Uncompressed this is the classic ``4 + impact_itemsize`` (= 8 at
-        f32); compressed it is the bit-packed words plus the 16 B/block of
-        metadata plus the (possibly quantized) impact, amortized per
-        posting.  The planner and the per-query ``bytes_postings`` counters
-        both read this property, so compressed bytes are what the cost
-        model optimizes end to end.
+        f32); compressed it is the bit-packed words (base + PForDelta
+        exception words) plus the 20 B/block of metadata (incl.
+        ``blk_n_exc``) plus the (possibly quantized) impact, amortized per
+        posting.  The impact layout additionally pays 8 B per segment for
+        the ``seg_pos``/``seg_len`` prefixes.  The planner and the
+        per-query ``bytes_postings`` counters both read this property, so
+        compressed bytes are what the cost model optimizes end to end.
         """
         P = max(self.n_postings, 1)
         imp = self.impacts.dtype.itemsize
+        seg = 8 * self.seg_pos.shape[0] if self.layout == "impact" else 0
         if self.is_compressed:
-            packed = 4 * self.post_packed.shape[0] + 16 * self.blk_first.shape[0]
-            return packed / P + imp
-        return 4.0 + imp
+            packed = 4 * self.post_packed.shape[0] + 20 * self.blk_first.shape[0]
+            return (packed + seg) / P + imp
+        return (4.0 * P + seg) / P + imp
 
 
 def logical_posting_blocks_np(
@@ -170,8 +233,28 @@ def _empty_pack(offsets: np.ndarray) -> dict[str, np.ndarray]:
     return dict(
         post_packed=np.zeros((0,), np.uint32), blk_first=z, blk_bits=z,
         blk_len=blk_len, blk_word_off=z, blk_pos=blk_pos,
-        blk_term_off=blk_term_off,
+        blk_term_off=blk_term_off, blk_n_exc=z,
     )
+
+
+def _pfor_width_np(real_deltas: np.ndarray) -> tuple[int, int]:
+    """Pick a block's PForDelta base width — ``(bits, n_exc)``.
+
+    Minimizes total stored words: ``ceil(len·bits/32)`` tail-trimmed base
+    words plus one exception word per delta exceeding the base width.
+    The floor ``bits ≥ bit_length(max) − PFOR_HIGH_BITS`` keeps every
+    exception's high bits inside one 24-bit patch field; ties break
+    toward the wider base (fewer exceptions → cheaper decode).
+    """
+    n = len(real_deltas)
+    maxbits = max(int(real_deltas.max(initial=0)).bit_length(), 1)
+    best_bits, best_exc, best_words = maxbits, 0, max(-(-n * maxbits // 32), 1)
+    for width in range(max(1, maxbits - PFOR_HIGH_BITS), maxbits):
+        n_exc = int(np.count_nonzero(real_deltas >> width))
+        words = max(-(-n * width // 32), 1) + n_exc
+        if words < best_words:
+            best_bits, best_exc, best_words = width, n_exc, words
+    return best_bits, best_exc
 
 
 def pack_postings_np(
@@ -183,13 +266,17 @@ def pack_postings_np(
 
     Blocks never straddle terms; within a block the first element stores
     delta 0 (its doc id lives in ``blk_first``) and subsequent deltas are
-    strictly ≥ 1 (postings are sorted unique doc ids within a term).  A
-    block stores only ``ceil(len·bits/32)`` words — the tail padding a
-    ragged last block would need is not materialized (``blk_word_off`` is
+    strictly ≥ 1 (postings are sorted unique doc ids within a term).
+    Framing is PForDelta: each block picks the total-word-minimizing base
+    width (:func:`_pfor_width_np`) and stores ``ceil(len·bits/32)``
+    tail-trimmed base words holding every delta's low ``bits`` bits,
+    followed by one patch word per delta that overflows the base width —
+    ``slot | high_bits << PFOR_SLOT_BITS``.  The tail padding a ragged
+    last block would need is not materialized (``blk_word_off`` is
     explicit, so blocks are variable-width), which is what makes short
     posting lists actually compress.  Decoded slots past ``blk_len`` are
-    therefore garbage (they read into the next block's words) and every
-    consumer masks them before trusting membership.
+    therefore garbage (they read into the exception words or the next
+    block) and every consumer masks them before trusting membership.
 
     When ``impacts`` is given (the *stored*, possibly quantized, values)
     the dict additionally carries ``blk_max_impact`` — the per-block score
@@ -204,6 +291,7 @@ def pack_postings_np(
     lens: list[int] = []
     poss: list[int] = []
     word_off: list[int] = []
+    n_exc_l: list[int] = []
     chunks: list[np.ndarray] = []
     w = 0
     j64 = np.arange(POSTING_BLOCK, dtype=np.int64)
@@ -218,13 +306,15 @@ def pack_postings_np(
             deltas = np.ones((POSTING_BLOCK,), np.int64)
             deltas[0] = 0
             deltas[1:e - s] = np.diff(ids)
-            bits = max(int(deltas.max()).bit_length(), 1)
+            real = deltas[: e - s]
+            bits, n_exc = _pfor_width_np(real)
+            low = deltas & ((np.int64(1) << bits) - 1)
             nw = (POSTING_BLOCK * bits) // 32  # 128·bits/32 = 4·bits exactly
             buf = np.zeros((nw,), np.uint64)
             bitpos = j64 * bits
             wi = bitpos >> 5
             off = (bitpos & 31).astype(np.uint64)
-            lo64 = deltas.astype(np.uint64) << off
+            lo64 = low.astype(np.uint64) << off
             np.bitwise_or.at(buf, wi, lo64 & np.uint64(0xFFFFFFFF))
             spill = lo64 >> np.uint64(32)
             # a nonzero spill always lands inside the block (the last delta
@@ -234,16 +324,25 @@ def pack_postings_np(
             # store only the words real postings reach: a ragged last block
             # keeps ceil(len·bits/32) words instead of the full 4·bits
             nw_t = max(-(-(e - s) * bits // 32), 1)
-            chunks.append(buf[:nw_t].astype(np.uint32))
+            words = buf[:nw_t].astype(np.uint32)
+            if n_exc:
+                slots = np.flatnonzero(real >> bits).astype(np.uint32)
+                high = (real[slots] >> bits).astype(np.uint32)
+                words = np.concatenate(
+                    [words, slots | (high << np.uint32(PFOR_SLOT_BITS))]
+                )
+            chunks.append(words)
             firsts.append(int(ids[0]))
             bits_l.append(bits)
             lens.append(e - s)
             poss.append(s)
             word_off.append(w)
-            w += nw_t
+            n_exc_l.append(n_exc)
+            w += nw_t + n_exc
     if not firsts:  # empty posting store: one degenerate empty block
         chunks.append(np.zeros((4,), np.uint32))
         firsts, bits_l, lens, poss, word_off = [0], [1], [0], [0], [0]
+        n_exc_l = [0]
     out = dict(
         post_packed=np.concatenate(chunks),
         blk_first=np.asarray(firsts, np.int32),
@@ -252,12 +351,98 @@ def pack_postings_np(
         blk_word_off=np.asarray(word_off, np.int32),
         blk_pos=np.asarray(poss, np.int32),
         blk_term_off=blk_term_off,
+        blk_n_exc=np.asarray(n_exc_l, np.int32),
     )
     if impacts is not None:
         out["blk_max_impact"] = block_max_impacts_np(
             impacts, out["blk_pos"], out["blk_len"]
         )
     return out
+
+
+def impact_levels_np(impacts: np.ndarray) -> np.ndarray:
+    """Global geometric impact level per posting — i32, 0 = highest.
+
+    Level ``l`` covers stored impacts in ``(vmax/r^(l+1), vmax/r^l]`` with
+    ``r = IMPACT_LEVEL_RATIO``; everything below the last boundary folds
+    into level ``IMPACT_LEVELS - 1``.  Computed from the *stored* (possibly
+    quantized) values so segment order matches what queries actually score.
+    """
+    v = np.asarray(impacts, np.float32).astype(np.float64)
+    vmax = float(v.max(initial=0.0))
+    if vmax <= 0.0:
+        return np.zeros(v.shape, np.int32)
+    lvl = np.floor(
+        np.log(vmax / np.maximum(v, vmax * 1e-12))
+        / np.log(IMPACT_LEVEL_RATIO)
+    )
+    return np.clip(lvl, 0, IMPACT_LEVELS - 1).astype(np.int32)
+
+
+def _impact_order_np(
+    postings: np.ndarray, impacts: np.ndarray, offsets: np.ndarray
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Reorder each term's slice into descending-impact-level segments.
+
+    Returns ``(postings, impacts, seg_term_off, seg_pos, seg_len)`` — the
+    reordered columns plus the segment CSR.  Within each segment doc ids
+    ascend (sort key ``(level, docid)``), so delta coding still applies;
+    segments tile each term's CSR slice contiguously.
+    """
+    lvl = impact_levels_np(impacts)
+    M = len(offsets) - 1
+    post2 = postings.copy()
+    imp2 = impacts.copy()
+    seg_term_off = np.zeros((M + 1,), np.int32)
+    seg_pos_l: list[int] = []
+    seg_len_l: list[int] = []
+    for t in range(M):
+        lo, hi = int(offsets[t]), int(offsets[t + 1])
+        ns = 0
+        if hi > lo:
+            order = np.lexsort((postings[lo:hi], lvl[lo:hi]))
+            post2[lo:hi] = postings[lo:hi][order]
+            imp2[lo:hi] = impacts[lo:hi][order]
+            lv = lvl[lo:hi][order]
+            starts = np.flatnonzero(np.r_[True, lv[1:] != lv[:-1]])
+            ends = np.r_[starts[1:], hi - lo]
+            for a, b in zip(starts, ends):
+                seg_pos_l.append(lo + int(a))
+                seg_len_l.append(int(b - a))
+            ns = len(starts)
+        seg_term_off[t + 1] = seg_term_off[t] + ns
+    if not seg_pos_l:  # empty store: one degenerate empty segment
+        seg_pos_l, seg_len_l = [0], [0]
+    return (
+        post2, imp2, seg_term_off,
+        np.asarray(seg_pos_l, np.int32), np.asarray(seg_len_l, np.int32),
+    )
+
+
+def _suffix_max_per_term_np(
+    blk_max: np.ndarray, blk_term_off: np.ndarray
+) -> np.ndarray:
+    """Per-term suffix-max envelope of block maxima — f32[NB].
+
+    ``out[b] = max(blk_max[b : term_end])`` within each term's block run:
+    a safe upper bound for block ``b`` that is monotone non-increasing
+    along the run, which is what lets the pruned kernel early-exit.
+    """
+    out = np.asarray(blk_max, np.float32).copy()
+    for t in range(len(blk_term_off) - 1):
+        b0, b1 = int(blk_term_off[t]), int(blk_term_off[t + 1])
+        if b1 > b0:
+            out[b0:b1] = np.maximum.accumulate(out[b0:b1][::-1])[::-1]
+    return out
+
+
+def _trivial_segments_np(M: int) -> dict[str, np.ndarray]:
+    """Degenerate segment columns for layout="docid" (never probed)."""
+    return dict(
+        seg_term_off=np.zeros((M + 1,), np.int32),
+        seg_pos=np.zeros((1,), np.int32),
+        seg_len=np.zeros((1,), np.int32),
+    )
 
 
 def build_text_index_np(
@@ -267,6 +452,7 @@ def build_text_index_np(
     idf: np.ndarray | None = None,
     compress: bool = False,
     impact_dtype: np.dtype | str | None = None,
+    layout: str = "docid",
 ) -> TextIndex:
     """Build from per-doc term-id arrays (with repetitions = frequencies).
 
@@ -281,7 +467,15 @@ def build_text_index_np(
     one compression entry point — ``normalize_compress`` modes pass f16
     here), so ``blk_max_impact`` is computed from the values that are
     actually stored and the pruning bound survives quantization.
+
+    ``layout`` selects the posting order: ``"docid"`` (ascending doc ids,
+    the bit-identical reference) or ``"impact"`` (descending
+    quantized-impact segments per term — see the module docstring).
+    Impact ordering happens *after* quantization so segments group the
+    stored values, and block framing restarts at segment boundaries.
     """
+    if layout not in ("docid", "impact"):
+        raise ValueError(f"unknown posting layout: {layout!r}")
     n_docs = len(doc_terms)
     # term frequencies per doc, collection document frequencies
     doc_ids_per_term: list[list[int]] = [[] for _ in range(n_terms)]
@@ -332,15 +526,38 @@ def build_text_index_np(
 
     if impact_dtype is not None:
         impacts = impacts.astype(impact_dtype)
+    if layout == "impact":
+        postings, impacts, seg_term_off, seg_pos, seg_len = _impact_order_np(
+            postings, impacts, offsets
+        )
+        seg = dict(seg_term_off=seg_term_off, seg_pos=seg_pos, seg_len=seg_len)
+        # frame blocks over *segments* (blocks never straddle a segment):
+        # segments tile each term's CSR slice contiguously and in order,
+        # so segment ends are a valid CSR over the whole posting store
+        NS = int(seg_term_off[-1])
+        frame_off = np.zeros((NS + 1,), np.int64)
+        frame_off[1:] = (seg_pos[:NS] + seg_len[:NS]).astype(np.int64)
+    else:
+        seg = _trivial_segments_np(n_terms)
+        frame_off = offsets
     if compress:
-        pack = pack_postings_np(postings, offsets, impacts=impacts)
+        pack = pack_postings_np(postings, frame_off, impacts=impacts)
         postings = np.zeros((0,), np.int32)  # packed words are the store
     else:
-        pack = _empty_pack(offsets)
+        pack = _empty_pack(frame_off)
         pack["blk_max_impact"] = block_max_impacts_np(
             impacts, pack["blk_pos"], pack["blk_len"]
         )
+    if layout == "impact":
+        # collapse the per-segment block CSR back to per-term, and widen
+        # the exact block maxima into the per-term suffix-max envelope —
+        # the monotone bound the early-exiting pruned traversal needs
+        pack["blk_term_off"] = pack["blk_term_off"][seg["seg_term_off"]]
+        pack["blk_max_impact"] = _suffix_max_per_term_np(
+            pack["blk_max_impact"], pack["blk_term_off"]
+        )
     term_blocks = np.diff(pack["blk_term_off"])
+    term_segments = np.diff(seg["seg_term_off"])
     return TextIndex(
         postings=jnp.asarray(postings),
         impacts=jnp.asarray(impacts),
@@ -348,17 +565,27 @@ def build_text_index_np(
         bitmaps=jnp.asarray(bitmaps),
         bitmap_term_ids=jnp.asarray(top_terms),
         **{k: jnp.asarray(v) for k, v in pack.items()},
+        **{k: jnp.asarray(v) for k, v in seg.items()},
         n_docs=n_docs,
         n_terms=n_terms,
         max_term_blocks=int(max(term_blocks.max(initial=0), 1)),
+        layout=layout,
+        max_term_segments=int(max(term_segments.max(initial=0), 1)),
     )
 
 
 def _with_impacts(index: TextIndex, impacts: jax.Array) -> TextIndex:
-    """Replace the impact column and refresh ``blk_max_impact`` to match."""
+    """Replace the impact column and refresh ``blk_max_impact`` to match.
+
+    Under layout="impact" the refreshed maxima are re-enveloped per term —
+    per-term rescaling preserves within-term order, so the suffix-max
+    stays both a safe bound and monotone along each block run.
+    """
     bm = block_max_impacts_np(
         np.asarray(impacts), np.asarray(index.blk_pos), np.asarray(index.blk_len)
     )
+    if index.layout == "impact":
+        bm = _suffix_max_per_term_np(bm, np.asarray(index.blk_term_off))
     return dataclasses.replace(
         index, impacts=impacts, blk_max_impact=jnp.asarray(bm)
     )
@@ -414,11 +641,12 @@ def term_slice(index: TextIndex, term: jax.Array) -> tuple[jax.Array, jax.Array]
 def decode_posting_blocks(index: TextIndex, blocks: jax.Array) -> jax.Array:
     """Decode compressed blocks to doc ids — i32[..., POSTING_BLOCK].
 
-    Pure shift/mask extraction of each block's 128 fixed-width deltas from
-    the packed words, then a prefix sum from ``blk_first``.  Slots past
-    ``blk_len`` are garbage — blocks are stored tail-trimmed, so those
-    reads fall into the next block's words; mask with ``blk_len`` before
-    trusting membership.
+    Pure shift/mask extraction of each block's 128 base-width deltas from
+    the packed words, then a replay of the block's PForDelta patch list
+    (each patch word restores one delta's high bits), then a prefix sum
+    from ``blk_first``.  Slots past ``blk_len`` are garbage — blocks are
+    stored tail-trimmed, so those reads fall into the exception words or
+    the next block; mask with ``blk_len`` before trusting membership.
     """
     bits = index.blk_bits[blocks]  # [...]
     w0 = index.blk_word_off[blocks]
@@ -437,6 +665,24 @@ def decode_posting_blocks(index: TextIndex, blocks: jax.Array) -> jax.Array:
     mask = (jnp.uint32(1) << bits[..., None].astype(jnp.uint32)) - 1  # bits ≤ 31
     delta = (((lo_w >> off) | hi_part) & mask).astype(jnp.int32)
     delta = jnp.where(j == 0, 0, delta)
+    # PForDelta patch replay: exception words live right after the block's
+    # tail-trimmed base words; each restores one slot's high bits.  The
+    # loop bound is the batch-wide max patch count (traced — fori_loop
+    # lowers to a while_loop), so exception-free batches decode as before.
+    n_exc = index.blk_n_exc[blocks]  # [...]
+    base_words = jnp.maximum(
+        (index.blk_len[blocks] * bits + 31) >> 5, 1
+    )
+    ew0 = w0 + base_words
+
+    def _patch(e, d):
+        pw = index.post_packed[jnp.clip(ew0 + e, 0, W - 1)]  # [...]
+        slot = (pw & jnp.uint32((1 << PFOR_SLOT_BITS) - 1)).astype(jnp.int32)
+        high = (pw >> jnp.uint32(PFOR_SLOT_BITS)).astype(jnp.int32)
+        add = jnp.where(e < n_exc, high << bits, 0)  # [...]
+        return d + jnp.where(j == slot[..., None], add[..., None], 0)
+
+    delta = jax.lax.fori_loop(0, jnp.max(n_exc), _patch, delta)
     return index.blk_first[blocks][..., None] + jnp.cumsum(delta, axis=-1)
 
 
@@ -465,14 +711,93 @@ def _probe_term_packed(
     return member, impact
 
 
+def _probe_term_segmented(
+    index: TextIndex, term: jax.Array, doc_ids: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Impact-layout probe: binary search within each of the term's segments.
+
+    Impact ordering breaks the global docID-ascending invariant the plain
+    probes rely on, but doc ids still ascend *within* each segment — so
+    membership is an OR over ``max_term_segments`` per-segment searches
+    (a doc occurs at most once per term, so segment hits are disjoint and
+    the impact sum picks up exactly the one stored value).
+    """
+    s0 = index.seg_term_off[term]
+    ns = index.seg_term_off[term + 1] - s0
+    NS = index.seg_pos.shape[0]
+    P = index.n_postings
+    member0 = jnp.zeros(doc_ids.shape, bool)
+    impact0 = jnp.zeros(doc_ids.shape, jnp.float32)
+    if index.is_compressed:
+        NB = index.blk_first.shape[0]
+        j = jnp.arange(POSTING_BLOCK, dtype=jnp.int32)
+
+        def seg_one(i, carry):
+            member, impact, b_off = carry
+            s = jnp.clip(s0 + i, 0, NS - 1)
+            live = i < ns
+            # segments tile the term's block run contiguously, so the
+            # running block offset carried across iterations addresses
+            # this segment's ceil(len/128) blocks directly
+            nb_s = jnp.where(
+                live, -(-index.seg_len[s] // POSTING_BLOCK), 0
+            )
+            pos = _searchsorted_slice(index.blk_first, b_off, nb_s, doc_ids)
+            exact = (pos < b_off + nb_s) & (
+                index.blk_first[jnp.clip(pos, 0, NB - 1)] == doc_ids
+            )
+            blk = jnp.where(exact, pos, pos - 1)
+            in_range = (blk >= b_off) & (blk < b_off + nb_s)
+            blk_s = jnp.clip(blk, 0, NB - 1)
+            decoded = decode_posting_blocks(index, blk_s)
+            hit = (decoded == doc_ids[..., None]) & (
+                j < index.blk_len[blk_s][..., None]
+            )
+            m = in_range & hit.any(axis=-1)
+            jpos = jnp.argmax(hit, axis=-1).astype(jnp.int32)
+            apos = jnp.clip(index.blk_pos[blk_s] + jpos, 0, P - 1)
+            imp = jnp.where(m, index.impacts[apos].astype(jnp.float32), 0.0)
+            return member | m, impact + imp, b_off + nb_s
+
+        member, impact, _ = jax.lax.fori_loop(
+            0, index.max_term_segments, seg_one,
+            (member0, impact0, index.blk_term_off[term]),
+        )
+        return member, impact
+
+    def seg_one(i, carry):
+        member, impact = carry
+        s = jnp.clip(s0 + i, 0, NS - 1)
+        live = i < ns
+        lo = index.seg_pos[s]
+        n = jnp.where(live, index.seg_len[s], 0)
+        pos = _searchsorted_slice(index.postings, lo, n, doc_ids)
+        found = index.postings[jnp.clip(pos, 0, P - 1)]
+        m = (pos < lo + n) & (found == doc_ids) & (n > 0)
+        imp = jnp.where(
+            m, index.impacts[jnp.clip(pos, 0, P - 1)].astype(jnp.float32), 0.0
+        )
+        return member | m, impact + imp
+
+    member, impact = jax.lax.fori_loop(
+        0, index.max_term_segments, seg_one, (member0, impact0)
+    )
+    return member, impact
+
+
 def probe_term(
     index: TextIndex, term: jax.Array, doc_ids: jax.Array
 ) -> tuple[jax.Array, jax.Array]:
     """Membership + impact of ``doc_ids`` in one term's posting list.
 
     Vectorized binary search over the whole posting array restricted to the
-    term slice.  Returns (member bool[...], impact f32[...]).
+    term slice.  Returns (member bool[...], impact f32[...]).  The impact
+    layout dispatches to the segment-aware probe (doc ids only ascend
+    within a segment there); the docid layout keeps the single-slice fast
+    path, bit-identical to what it always did.
     """
+    if index.layout == "impact":
+        return _probe_term_segmented(index, term, doc_ids)
     if index.is_compressed:
         return _probe_term_packed(index, term, doc_ids)
     lo, n = term_slice(index, term)
@@ -529,7 +854,9 @@ def conjunction_candidates(
     ``max_candidates`` postings, an early-termination budget) and probes the
     remaining terms by binary search.  Returns
 
-      cand_ids  i32[max_candidates]   (docIDs, ascending among valid)
+      cand_ids  i32[max_candidates]   (docIDs; ascending among valid under
+                                       layout="docid", impact-segment
+                                       order under layout="impact")
       valid     bool[max_candidates]
       text_score f32[max_candidates]  (sum of impacts over query terms)
     """
@@ -554,13 +881,29 @@ def conjunction_candidates(
         blocks = jnp.clip(
             index.blk_term_off[t0] + jnp.arange(nbd, dtype=jnp.int32), 0, NB - 1
         )
-        cand = decode_posting_blocks(index, blocks).reshape(-1)[:max_candidates]
-        apos = jnp.clip(
-            index.blk_pos[blocks][:, None]
-            + jnp.arange(POSTING_BLOCK, dtype=jnp.int32)[None, :],
-            0,
-            index.n_postings - 1,
-        ).reshape(-1)[:max_candidates]
+        decoded = decode_posting_blocks(index, blocks)
+        if index.layout == "impact":
+            # segment-restarted framing leaves ragged blocks *mid-run*
+            # (each segment's tail), so a plain flatten would interleave
+            # garbage slots: map each CSR offset through the blocks' valid
+            # lengths instead.  The docid layout keeps the plain flatten
+            # (only its last block is ragged — past n is masked anyway).
+            cl = jnp.cumsum(index.blk_len[blocks])
+            bi = jnp.searchsorted(cl, idx, side="right")
+            bi_s = jnp.clip(bi, 0, nbd - 1)
+            lane = idx - jnp.where(bi > 0, cl[jnp.maximum(bi - 1, 0)], 0)
+            cand = decoded[bi_s, jnp.clip(lane, 0, POSTING_BLOCK - 1)]
+            # blocks tile the CSR contiguously, so the driver's i-th
+            # posting lives at CSR position lo + i in both layouts
+            apos = jnp.clip(lo + idx, 0, index.n_postings - 1)
+        else:
+            cand = decoded.reshape(-1)[:max_candidates]
+            apos = jnp.clip(
+                index.blk_pos[blocks][:, None]
+                + jnp.arange(POSTING_BLOCK, dtype=jnp.int32)[None, :],
+                0,
+                index.n_postings - 1,
+            ).reshape(-1)[:max_candidates]
         imp = index.impacts[apos].astype(jnp.float32)
     else:
         pos = lo + idx

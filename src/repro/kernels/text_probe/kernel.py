@@ -19,16 +19,23 @@ spatial pruned sweep.
 θ approximates the partial top-``max_candidates`` optimistic score: a
 persistent VMEM scratch buffer of ``cb·TILE ≥ max_candidates`` slots, each
 holding the max over a disjoint cyclically-assigned subset of the streamed
-candidates (seeded with the select floor), with θ = min(buffer).  min over
-disjoint-subset maxima never exceeds the true C-th largest optimistic
-score, so a skipped block cannot contain a candidate the top-C select
-stage would keep (above the floor).
+candidates (seeded with the select floor).  The θ read (``slot_theta``)
+takes the C-th largest slot value — attained by C distinct candidates,
+so provably ≤ the true C-th largest streamed optimistic score: a skipped
+block can never contain a candidate the top-C select stage would keep.
 
 One planar row = one posting block (LANES = 128 postings), so the DMA
 unit is a single ``[1, 128]`` row and no tile alignment of the driver's
 first block is needed.  Grid = (n_win // BLOCK_ROWS,) walked sequentially;
 under ``vmap`` the batch axis becomes the outer grid dimension and the
 ``j == 0`` re-init gives every query a fresh θ.
+
+``monotone=True`` (the impact-ordered layout, whose ``blk_max_impact`` is
+a per-term suffix-max envelope — non-increasing along the block run)
+additionally keeps an early-exit *cut flag* in SMEM across grid steps:
+the first block whose bound fails θ proves every later block fails too
+(θ only ever rises), so the rest of the term is cut without testing —
+and, as always, a skipped block issues no DMA.
 """
 from __future__ import annotations
 
@@ -44,6 +51,29 @@ BLOCK_ROWS = 8  # blocks fetched per grid step
 TILE = BLOCK_ROWS * LANES
 
 
+def slot_theta(bv, floor, c_sel: int):
+    """θ = the C-th largest slot value of the partial top-C buffer.
+
+    Each slot holds the max over a disjoint subset of the streamed
+    candidates (or its floor seed, if no candidate ever folded there).
+    The top-C slot values are attained by C *distinct* candidates (one
+    per slot; a floor seed among them collapses θ to the floor, which is
+    always sound), so the C-th largest slot value can never exceed the
+    C-th largest streamed optimistic score: a block skipped against it
+    cannot contain a candidate the top-C select stage would keep.
+
+    This is the tightest sound threshold the slot lattice offers.  A
+    plain ``min(buffer)`` (the previous rule) is badly loose at both
+    ends: slots no candidate ever reaches (lanes past a ragged block's
+    length, rows past a short driver's block count) pin the min at the
+    floor forever, while for C ≪ 1024 streamed-heavy buffers approximate
+    the stream *minimum* rather than the C-th best.  Shared by the
+    kernel and ``ref.py`` so skip decisions stay bit-identical.
+    """
+    vals = jax.lax.top_k(bv.reshape(-1), c_sel)[0]
+    return jnp.maximum(vals[c_sel - 1], floor)
+
+
 def _pruned_kernel(
     start_ref,  # scalar prefetch: i32[1] driver's first block (plane row)
     ub_ref,  # SMEM f32[n_win] per-window-block optimistic upper bounds
@@ -56,8 +86,11 @@ def _pruned_kernel(
     buf_ref,  # VMEM scratch f32[cb*BLOCK_ROWS, LANES]: partial top-C heap
     imp_s,  # VMEM scratch [BLOCK_ROWS, LANES] stored dtype: fetched rows
     copy_sem,  # DMA semaphore for the per-block copies
+    cut_ref,  # SMEM scratch i32[1]: early-exit cut flag (monotone only)
     *,
     cb: int,
+    c_sel: int,
+    monotone: bool,
 ):
     j = pl.program_id(0)
 
@@ -67,15 +100,25 @@ def _pruned_kernel(
         # so blocks whose bound cannot clear the floor are skipped — their
         # candidates would be dropped by the select stage regardless
         buf_ref[...] = jnp.full_like(buf_ref, floor_ref[0])
+        cut_ref[0] = jnp.int32(0)
 
-    theta = jnp.min(buf_ref[...])
+    theta = slot_theta(buf_ref[...], floor_ref[0], c_sel)
+    # under a monotone (non-increasing) bound run the first failing block
+    # proves every later block fails too (θ only ever rises): once the cut
+    # flag is set, the whole remainder of the term is skipped without even
+    # testing its bounds — zero DMA after the cut
+    cut = cut_ref[0] > 0 if monotone else False
     rows = jax.lax.broadcasted_iota(jnp.int32, (BLOCK_ROWS, LANES), 0)
     cols = jax.lax.broadcasted_iota(jnp.int32, (BLOCK_ROWS, LANES), 1)
     mask = jnp.zeros((BLOCK_ROWS, LANES), dtype=bool)
     any_scored = False
+    any_fail = False
     for b in range(BLOCK_ROWS):  # static unroll over the tile's blocks
         w = j * BLOCK_ROWS + b
         sb = ub_ref[w] > theta  # -inf beyond the driver's blocks
+        any_fail = jnp.logical_not(sb) | any_fail
+        if monotone:
+            sb = sb & jnp.logical_not(cut)
         scored_ref[0, b] = sb.astype(jnp.int32)
         mask = mask | (sb & (rows == b) & (cols < len_ref[w]))
         any_scored = sb | any_scored
@@ -109,9 +152,12 @@ def _pruned_kernel(
     def _skip():
         out_ref[...] = jnp.zeros_like(out_ref)
 
+    if monotone:
+        cut_ref[0] = jnp.where(any_fail | cut, 1, 0).astype(jnp.int32)
+
 
 @functools.partial(
-    jax.jit, static_argnames=("n_win", "max_candidates", "interpret")
+    jax.jit, static_argnames=("n_win", "max_candidates", "interpret", "monotone")
 )
 def text_probe_pruned_planar(
     start: jax.Array,  # i32[1] driver's first block (plane row)
@@ -123,13 +169,19 @@ def text_probe_pruned_planar(
     n_win: int,  # window blocks; multiple of BLOCK_ROWS
     max_candidates: int,  # C of the partial top-C threshold buffer
     interpret: bool = True,
+    monotone: bool = False,  # bounds non-increasing → early-exit cut flag
 ) -> tuple[jax.Array, jax.Array]:
     """Pruned driver-block walk: (opt f32[n_tiles, BLOCK_ROWS, LANES],
     scored i32[n_tiles, BLOCK_ROWS] per-block flags)."""
     assert n_win % BLOCK_ROWS == 0
     n_tiles = n_win // BLOCK_ROWS
-    # C rounded up to whole tiles: a larger buffer only lowers θ (safer)
+    # C rounded up to whole tiles: θ is the c_sel-th largest slot value
+    # of the buffer, and each slot max is attained by a distinct
+    # candidate, so any buffer ≥ C slots yields a sound (under-) estimate
     cb = max(1, -(-max_candidates // TILE))
+    # the select stage can keep at most the whole window; the θ read
+    # must use the same effective C
+    c_sel = max(1, min(max_candidates, n_win * LANES))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -151,12 +203,15 @@ def text_probe_pruned_planar(
             pltpu.VMEM((cb * BLOCK_ROWS, LANES), jnp.float32),
             pltpu.VMEM((BLOCK_ROWS, LANES), imp_plane.dtype),
             pltpu.SemaphoreType.DMA,
+            pltpu.SMEM((1,), jnp.int32),
         ],
     )
-    kernel = functools.partial(_pruned_kernel, cb=cb)
+    kernel = functools.partial(
+        _pruned_kernel, cb=cb, c_sel=c_sel, monotone=monotone
+    )
     opt, scored = pl.pallas_call(
-        lambda s_ref, ub_r, ln_r, wb_r, fl_r, plane, o, f, buf, sc_, sem: kernel(
-            s_ref, ub_r, ln_r, wb_r, fl_r, plane, o.at[0], f, buf, sc_, sem
+        lambda s_ref, ub_r, ln_r, wb_r, fl_r, plane, o, f, buf, sc_, sem, cut: kernel(
+            s_ref, ub_r, ln_r, wb_r, fl_r, plane, o.at[0], f, buf, sc_, sem, cut
         ),
         grid_spec=grid_spec,
         out_shape=[

@@ -88,7 +88,8 @@ def window_term_bounds(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("max_candidates", "max_term_blocks", "interpret")
+    jax.jit,
+    static_argnames=("max_candidates", "max_term_blocks", "interpret", "monotone"),
 )
 def text_probe_pruned(
     imp_plane: jax.Array,  # [NB, LANES] stored-dtype plane (impact_planes)
@@ -102,6 +103,7 @@ def text_probe_pruned(
     max_candidates: int = 1024,  # C of the partial top-C threshold buffer
     max_term_blocks: int = 1,  # static window bound (TextIndex field)
     interpret: bool | None = None,
+    monotone: bool = False,  # non-increasing bounds → early-exit cut
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """Fused probe+score+select over the driver term's posting blocks.
 
@@ -112,6 +114,10 @@ def text_probe_pruned(
     block was actually fetched (candidates are ``valid & streamed`` — on
     hardware the per-block DMA is simply not issued for skipped blocks),
     and the block counters feed ``text_blocks_skipped`` stats.
+
+    ``monotone=True`` asserts the driver's bounds are non-increasing along
+    its block run (layout="impact"'s suffix-max envelope): the kernel then
+    early-exits the term at the first failing bound (see kernel docstring).
     """
     if interpret is None:
         interpret = _default_interpret()
@@ -136,6 +142,7 @@ def text_probe_pruned(
         n_win=n_win,
         max_candidates=max_candidates,
         interpret=interpret,
+        monotone=monotone,
     )
     scored_blk = scored.reshape(n_win) > 0
     lane_ok = (

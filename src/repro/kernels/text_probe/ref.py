@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 
 @functools.partial(
-    jax.jit, static_argnames=("max_candidates", "max_term_blocks")
+    jax.jit, static_argnames=("max_candidates", "max_term_blocks", "monotone")
 )
 def text_probe_pruned_ref(
     imp_plane: jax.Array,  # [NB, LANES] stored-dtype plane (impact_planes)
@@ -29,16 +29,27 @@ def text_probe_pruned_ref(
     floor: jax.Array | float = 0.0,
     max_candidates: int = 1024,
     max_term_blocks: int = 1,
+    monotone: bool = False,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """Block-max pruned text-probe oracle; same contract as
     ``ops.text_probe_pruned`` (opt, valid, streamed, blocks_scored,
-    blocks_active)."""
-    from repro.kernels.text_probe.kernel import BLOCK_ROWS, LANES, TILE
+    blocks_active).  ``monotone=True`` carries the kernel's early-exit cut
+    flag through the scan — same per-tile cut semantics (the flag set by
+    tile t masks tiles > t; within a tile a failing bound implies every
+    later bound fails too, since bounds are non-increasing), so skip
+    decisions stay bit-identical to the kernel."""
+    from repro.kernels.text_probe.kernel import (
+        BLOCK_ROWS,
+        LANES,
+        TILE,
+        slot_theta,
+    )
     from repro.kernels.text_probe.ops import window_size, window_term_bounds
 
     n_win = window_size(max_term_blocks)
     n_tiles = n_win // BLOCK_ROWS
     cb = max(1, -(-max_candidates // TILE))
+    c_sel = max(1, min(max_candidates, n_win * LANES))
 
     ub, lens, active = window_term_bounds(
         blk_max_impact, blk_len, b0, nb, w_text, rest_ub, n_win
@@ -64,17 +75,25 @@ def text_probe_pruned_ref(
     flat_ok = lane_ok.reshape(n_tiles, BLOCK_ROWS, LANES)
     slots = jnp.arange(n_tiles, dtype=jnp.int32) % cb
 
-    def step(buf, xs):
+    def step(carry, xs):
+        buf, cut = carry
         ub_t, opt_t, ok_t, slot = xs
-        theta = jnp.min(buf)
-        scored = ub_t > theta  # [BLOCK_ROWS]
+        # same C-th-largest-slot θ read as the kernel (slot_theta)
+        theta = slot_theta(buf, floor_c, c_sel)
+        raw = ub_t > theta  # [BLOCK_ROWS]
+        scored = raw & jnp.logical_not(cut) if monotone else raw
         sc = jnp.where(scored[:, None] & ok_t, opt_t, 0.0)
         buf = buf.at[slot].set(jnp.maximum(buf[slot], sc))
-        return buf, (scored, sc)
+        if monotone:
+            cut = cut | jnp.any(jnp.logical_not(raw))
+        return (buf, cut), (scored, sc)
 
     _, (scored, sc) = jax.lax.scan(
         step,
-        jnp.full((cb, BLOCK_ROWS, LANES), floor_c, jnp.float32),
+        (
+            jnp.full((cb, BLOCK_ROWS, LANES), floor_c, jnp.float32),
+            jnp.zeros((), bool),
+        ),
         (flat_ub, flat_opt, flat_ok, slots),
     )
     scored_blk = scored.reshape(n_win)

@@ -500,10 +500,16 @@ def build_geoweb_cell(spec: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
         blk_first=sh((S, NBp), jnp.int32, lead + (None,)),
         blk_bits=sh((S, NBp), jnp.int32, lead + (None,)),
         blk_word_off=sh((S, NBp), jnp.int32, lead + (None,)),
+        blk_n_exc=sh((S, NBp), jnp.int32, lead + (None,)),
         blk_len=sh((S, NBt), jnp.int32, lead + (None,)),
         blk_pos=sh((S, NBt), jnp.int32, lead + (None,)),
         blk_max_impact=sh((S, NBt), jnp.float32, lead + (None,)),
         blk_term_off=sh((S, M + 1), jnp.int32, lead + (None,)),
+        # docID layout: the impact-segment CSR is degenerate (see
+        # core/text_index.py build_text_index_np)
+        seg_term_off=sh((S, M + 1), jnp.int32, lead + (None,)),
+        seg_pos=sh((S, 1), jnp.int32, lead + (None,)),
+        seg_len=sh((S, 1), jnp.int32, lead + (None,)),
         tp_rects=sh((S, Tt, 4), ft, lead + (None, None)),
         tp_amps=sh((S, Tt), at, lead + (None,)),
         tp_doc_ids=sh((S, Tt), it, lead + (None,)),

@@ -21,6 +21,12 @@ under a stable dotted naming scheme:
     pending.expired_total           counter   coalesce windows closed
     executor.batches_total{plan=}   counter
     executor.<stat>_total{plan=}    counter   bytes_*, n_probes, seeks, ...
+    executor.text_blocks_skipped_total{plan=}
+                                    counter   driver posting blocks whose
+                                              bytes never streamed (pruned
+                                              TEXT-FIRST θ-skips; pair
+                                              with text_blocks_total for
+                                              the skip rate)
     executor.shards_touched{plan=}  histogram shard fan-out per routed query
                                               (footprint routing only;
                                               broadcast never emits it)

@@ -219,6 +219,7 @@ class ShardedExecutor:
         algorithm: str = "k_sweep",
         routing: str = "broadcast",
         compress: "bool | str" = False,
+        layout: str = "docid",
         overlap: bool = True,
         **kw,
     ) -> "ShardedExecutor":
@@ -245,6 +246,7 @@ class ShardedExecutor:
                 weights=weights,
                 idf=idf_global,
                 compress=compress,
+                layout=layout,
             )
             engines.append(eng)
             gids.append(sel.astype(np.int32))
@@ -440,6 +442,7 @@ class MeshExecutor:
         fused: bool = False,
         routing: str = "broadcast",
         compress: "bool | str" = False,
+        layout: str = "docid",
         **kw,
     ) -> "MeshExecutor":
         from repro.core.distributed import make_serve_fn, shard_corpus_np
@@ -458,6 +461,7 @@ class MeshExecutor:
         sharded = shard_corpus_np(
             doc_terms, doc_rects, doc_amps, pagerank, n_terms,
             n_shards, partitioner, grid=grid, compress=compress,
+            layout=layout,
         )
         # sweeps cannot exceed a shard's toe-print store (same clamp as
         # GeoSearchEngine.build applies for the single-index case)
@@ -474,6 +478,8 @@ class MeshExecutor:
             fused=fused, block_size=sharded.block_size,
             with_stats=True, with_routing=routing == "footprint",
             max_term_blocks=sharded.max_term_blocks,
+            layout=sharded.layout,
+            max_term_segments=sharded.max_term_segments,
         )
         return MeshExecutor(
             mesh, serve, sharded, budgets.top_k,
@@ -521,6 +527,8 @@ class MeshExecutor:
             block_size=self._index.block_size, with_stats=True,
             with_routing=self.routing == "footprint",
             max_term_blocks=self._index.max_term_blocks,
+            layout=self._index.layout,
+            max_term_segments=self._index.max_term_segments,
         )
         self._serve_fns[plan] = serve
         return serve

@@ -49,6 +49,7 @@ def make_executor(
     fused: bool = False,
     use_pallas: bool = False,
     compress: "bool | str" = False,
+    layout: str = "docid",
     telemetry=None,
 ):
     """Build an executor of ``kind`` over ``corpus``; see module docstring.
@@ -63,7 +64,9 @@ def make_executor(
     ``routing="footprint"`` (sharded/mesh) skips/masks shards no query
     footprint touches; ``compress`` selects the index storage mode
     (``"none"``/``"f16"``/``"int8"``, bool accepted for compatibility);
-    ``telemetry`` is attached before returning.
+    ``layout`` selects the posting order (``"docid"``/``"impact"``, see
+    :mod:`repro.core.text_index`); ``telemetry`` is attached before
+    returning.
     """
     if kind not in EXECUTOR_KINDS:
         raise ValueError(f"kind must be one of {EXECUTOR_KINDS}, got {kind!r}")
@@ -106,6 +109,7 @@ def make_executor(
             corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
             pagerank=corpus.pagerank, grid=grid, m_intervals=m_intervals,
             budgets=budgets, weights=weights, compress=compress,
+            layout=layout,
         )
         executor = SingleDeviceExecutor(eng, algorithm, **kw)
     elif kind == "sharded":
@@ -114,7 +118,7 @@ def make_executor(
             pagerank=corpus.pagerank, n_shards=n_shards,
             partitioner=partitioner, grid=grid, budgets=budgets,
             weights=weights, algorithm=algorithm, routing=routing,
-            compress=compress, **kw,
+            compress=compress, layout=layout, **kw,
         )
     else:  # mesh
         if mesh is None:
@@ -123,7 +127,7 @@ def make_executor(
             corpus.doc_terms, corpus.doc_rects, corpus.doc_amps, corpus.n_terms,
             pagerank=corpus.pagerank, mesh=mesh, partitioner=partitioner,
             grid=grid, budgets=budgets, weights=weights, algorithm=algorithm,
-            fused=fused, routing=routing, compress=compress,
+            fused=fused, routing=routing, compress=compress, layout=layout,
         )
     if telemetry is not None:
         executor.attach_telemetry(telemetry)

@@ -240,6 +240,15 @@ class ServeReport:
                 f"arrival={self.arrival}  workers={self.n_workers}  "
                 f"coalesced={self.coalesced}  {decomp}{slo}"
             )
+        if self.stats.get("text_blocks_total"):
+            # pruned TEXT-FIRST only: share of driver posting blocks whose
+            # bytes never streamed (θ-skipped, incl. monotone tail cuts)
+            skipped = self.stats.get("text_blocks_skipped", 0.0)
+            total = self.stats["text_blocks_total"]
+            lines.append(
+                f"text block skip rate={skipped / total:.3f} "
+                f"({skipped:,.0f}/{total:,.0f} blocks)"
+            )
         lines.append("  ".join(f"{k}/q={v:,.0f}" for k, v in per_q.items()))
         return "\n".join(lines)
 
